@@ -1,0 +1,76 @@
+//! Capacity planner: the paper's performance models as a deployment
+//! sizing tool. Given a model and workload shape, how much CPU memory
+//! does each GPU need before the GPU — not memory — becomes the
+//! bottleneck? And what throughput should you expect along the way?
+//!
+//!     cargo run --release --example capacity_planner
+//!
+//! This is the Stage-1/Stage-2 machinery (Eqs. 1–14) driving the kind of
+//! question §5 poses: "how much CPU memory is necessary to fully utilize
+//! the GPU?" — for all three paper models and three GPUs.
+
+use moe_lens::config::{GpuSpec, MachineSpec, ModelSpec};
+use moe_lens::perfmodel::{stage2::Regime, Stage1Model, Stage2Model};
+use moe_lens::util::bench::Table;
+
+fn main() {
+    let (p, g) = (98usize, 64usize); // MTBench-like shape
+    println!("capacity plan for p={p}, g={g} (MTBench-like), measured-PCIe testbed\n");
+
+    // --- Table: KV cache needed to saturate each GPU (Table 2's logic,
+    // extended with the Eq. 7 overlap amplification).
+    let mut t = Table::new(&[
+        "model", "gpu", "tok_to_sat", "kv_to_sat_GB", "kv_eff_overlap_GB",
+    ]);
+    for model in [ModelSpec::mixtral_8x7b(), ModelSpec::mixtral_8x22b(), ModelSpec::dbrx()] {
+        for gpu in [GpuSpec::a40(), GpuSpec::l40(), GpuSpec::a100()] {
+            let machine = MachineSpec { gpu: gpu.clone(), ..MachineSpec::paper_testbed() };
+            let s1 = Stage1Model::new(machine, model.clone());
+            let kv_needed = s1.kv_bytes_to_saturate(p + g);
+            // Eq. 7: overlap shrinks the *provisioned* bytes needed.
+            let provision = kv_needed * (p as f64 + g as f64 / 2.0) / (p + g) as f64;
+            t.row(&[
+                model.name.to_string(),
+                gpu.name.to_string(),
+                format!("{:.0}", s1.tokens_to_saturate()),
+                format!("{:.0}", kv_needed / 1e9),
+                format!("{:.0}", provision / 1e9),
+            ]);
+        }
+    }
+    t.print();
+
+    // --- Throughput vs provisioned CPU memory for Mixtral-8x7B on A40.
+    println!("\nMixtral-8x7B on A40: predicted throughput vs KV budget (K = 5gq)");
+    let model = ModelSpec::mixtral_8x7b();
+    let s2 = Stage2Model::new(MachineSpec::paper_testbed(), model, 16);
+    let mut t = Table::new(&["kv_GB", "gen_tok_s", "gpu_util_%", "regime"]);
+    for kv_gb in [35u64, 70, 140, 210, 420, 840, 1680] {
+        let kv = kv_gb << 30;
+        let k = s2.default_batch(p, g, kv);
+        let pred = s2.predict(p, g, kv, k);
+        t.row(&[
+            kv_gb.to_string(),
+            format!("{:.0}", pred.throughput),
+            format!("{:.1}", pred.gpu_utilization * 100.0),
+            format!("{:?}", pred.regime),
+        ]);
+    }
+    t.print();
+
+    // --- The §5.3 back-of-envelope: CPU-side requirements at 2x-model KV.
+    let s1 = Stage1Model::new(MachineSpec::paper_testbed(), ModelSpec::mixtral_8x7b());
+    let kv = 2 * s1.model.model_bytes();
+    println!("\nCPU-side requirements at KV = 2x model size (§5.3):");
+    println!(
+        "  memory bandwidth: {:.0} GB/s (socket provides {:.0} GB/s)",
+        s1.cpu_mem_bw_required(kv) / 1e9,
+        s1.machine.host.mem_bw / 1e9
+    );
+    println!(
+        "  attention compute: {:.0} GFLOP/s (socket peak {:.0} GFLOP/s)",
+        s1.cpu_flops_required(kv) / 1e9,
+        s1.machine.host.core_flops * s1.machine.host.n_cores as f64 / 1e9
+    );
+    let _ = Regime::GpuCompute; // referenced for doc purposes
+}

@@ -1,0 +1,237 @@
+"""AOT compile path: lower the Layer-2 functions to HLO *text* artifacts,
+export the model weights as raw f32 bytes, and emit golden test vectors +
+a JSON manifest for the Rust coordinator.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly
+(/opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Python never runs on the request path: the Rust
+binary is self-contained once this has run.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import CONFIGS, ModelConfig
+from .kernels import ref
+
+GOLDEN_SEED = 20250710
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def executable_specs(cfg: ModelConfig) -> dict:
+    """Argument specs for each of the five AOT executables, in call order.
+    The manifest records these so the Rust runtime can validate its inputs."""
+    n, h = cfg.n_tok, cfg.d_model
+    nh, nkv, hd, e, ff = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.n_experts, cfg.d_ff
+    return {
+        "embed": {
+            "fn": model.embed(cfg),
+            "args": [("ids", i32(n)), ("embedding", f32(cfg.vocab, h))],
+            "outputs": [("x", [n, h])],
+        },
+        "task_a": {
+            "fn": model.gpu_task_a(cfg),
+            "args": [
+                ("x", f32(n, h)), ("positions", i32(n)), ("ln1", f32(h)),
+                ("wq", f32(h, nh * hd)), ("wk", f32(h, nkv * hd)), ("wv", f32(h, nkv * hd)),
+            ],
+            "outputs": [("q", [n, nh, hd]), ("k", [n, nkv, hd]), ("v", [n, nkv, hd])],
+        },
+        "prefill_attn": {
+            "fn": model.prefill_attn(cfg),
+            "args": [
+                ("q", f32(n, nh, hd)), ("k", f32(n, nkv, hd)), ("v", f32(n, nkv, hd)),
+                ("seg_ids", i32(n)),
+            ],
+            "outputs": [("attn", [n, nh * hd])],
+        },
+        "task_b": {
+            "fn": model.gpu_task_b(cfg),
+            "args": [
+                ("attn_out", f32(n, nh * hd)), ("resid", f32(n, h)),
+                ("wo", f32(nh * hd, h)), ("ln2", f32(h)), ("router", f32(h, e)),
+                ("w1", f32(e, h, ff)), ("w3", f32(e, h, ff)), ("w2", f32(e, ff, h)),
+            ],
+            "outputs": [("resid", [n, h])],
+        },
+        "head": {
+            "fn": model.head(cfg),
+            "args": [
+                ("x", f32(n, h)), ("final_norm", f32(h)), ("lm_head", f32(h, cfg.vocab)),
+            ],
+            "outputs": [("ids", [n]), ("logits", [n, cfg.vocab])],
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Weight export
+# ---------------------------------------------------------------------------
+
+def export_weights(cfg: ModelConfig, w: model.ModelWeights, path: str):
+    """Concatenate all tensors as little-endian f32 and record a table of
+    (name, shape, byte offset). The order is the streaming order the Rust
+    weight manager uses: embedding, per-layer groups, final norm, head."""
+    tensors = [("embedding", w.embedding)]
+    for li, lw in enumerate(w.layers):
+        for name in model.layer_weight_names():
+            tensors.append((f"layers.{li}.{name}", getattr(lw, name)))
+    tensors.append(("final_norm", w.final_norm))
+    tensors.append(("lm_head", w.lm_head))
+
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, t in tensors:
+            arr = np.asarray(t, dtype="<f4")
+            f.write(arr.tobytes())
+            table.append({"name": name, "shape": list(arr.shape), "offset": offset})
+            offset += arr.nbytes
+    return table, offset
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors (cross-layer validation)
+# ---------------------------------------------------------------------------
+
+def _tolist(a):
+    return np.asarray(a, dtype=np.float64).ravel().tolist()
+
+
+def make_golden(cfg: ModelConfig, w: model.ModelWeights) -> dict:
+    key = jax.random.PRNGKey(GOLDEN_SEED)
+    ks = jax.random.split(key, 8)
+    n, nh, nkv, hd = cfg.n_tok, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    # 1. Decode attention vectors (oracle for rust/src/cpuattn)
+    nd, L = 4, 32
+    q = jax.random.normal(ks[0], (nd, nh, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (nd, L, nkv, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (nd, L, nkv, hd), jnp.float32)
+    lens = jnp.array([1, 9, 17, 32], jnp.int32)[:nd]
+    att = ref.ref_decode_attention(q, kc, vc, lens)
+    decode_attn = {
+        "nd": nd, "l_max": L,
+        "n_heads": nh, "n_kv_heads": nkv, "head_dim": hd,
+        "q": _tolist(q),
+        "k_bf16": _tolist(kc.astype(jnp.bfloat16).astype(jnp.float32)),
+        "v_bf16": _tolist(vc.astype(jnp.bfloat16).astype(jnp.float32)),
+        "ctx_lens": [int(x) for x in lens],
+        "out": _tolist(att),
+    }
+
+    # 2. One packed forward pass through the whole model (engine oracle):
+    # two sequences packed into the n_tok bucket + padding.
+    p0, p1 = max(2, n // 4), max(2, n // 3)
+    ids = list(range(1, p0 + 1)) + list(range(7, 7 + p1))
+    pad = n - len(ids)
+    ids_arr = jnp.array(ids + [0] * pad, jnp.int32)
+    pos = jnp.array(list(range(p0)) + list(range(p1)) + [0] * pad, jnp.int32)
+    seg = jnp.array([0] * p0 + [1] * p1 + [-1] * pad, jnp.int32)
+    next_ids, logits, _ = model.forward_packed(cfg, w, ids_arr, pos, seg)
+    forward = {
+        "ids": [int(x) for x in ids_arr],
+        "positions": [int(x) for x in pos],
+        "seg_ids": [int(x) for x in seg],
+        "p0": p0, "p1": p1,
+        "next_ids": [int(next_ids[p0 - 1]), int(next_ids[p0 + p1 - 1])],
+        "logits_seq0_last": _tolist(logits[p0 - 1]),
+    }
+
+    # 3. Greedy generation (end-to-end oracle)
+    prompts = [[1, 2, 3, 4, 5], [9, 8, 7], [42] * 6]
+    steps = 8
+    gen = model.generate_greedy(cfg, w, prompts, steps)
+    generation = {"prompts": prompts, "steps": steps, "tokens": gen}
+
+    return {"decode_attn": decode_attn, "forward": forward, "generation": generation}
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def compile_config(cfg: ModelConfig, out_dir: str, golden: bool) -> dict:
+    specs = executable_specs(cfg)
+    artifacts = {}
+    for name, spec in specs.items():
+        lowered = jax.jit(spec["fn"]).lower(*[s for _, s in spec["args"]])
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{cfg.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": fname,
+            "args": [[n, list(s.shape), str(s.dtype)] for n, s in spec["args"]],
+            "outputs": [[n, shape] for n, shape in spec["outputs"]],
+        }
+        print(f"  {fname}: {len(text)} chars")
+
+    w = model.init_weights(cfg, seed=0)
+    wfile = f"weights_{cfg.name}.bin"
+    table, nbytes = export_weights(cfg, w, os.path.join(out_dir, wfile))
+    print(f"  {wfile}: {nbytes / 1e6:.1f} MB, {len(table)} tensors")
+
+    entry = {
+        "config": cfg.to_dict(),
+        "artifacts": artifacts,
+        "weights": {"file": wfile, "bytes": nbytes, "tensors": table},
+    }
+    if golden:
+        g = make_golden(cfg, w)
+        gfile = f"golden_{cfg.name}.json"
+        with open(os.path.join(out_dir, gfile), "w") as f:
+            json.dump(g, f)
+        entry["golden"] = gfile
+        print(f"  {gfile}")
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format_version": 1, "configs": {}}
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        print(f"[aot] compiling config '{name}'")
+        manifest["configs"][name] = compile_config(
+            cfg, args.out_dir, golden=(name == "tiny"))
+
+    # manifest.json last: it is the Makefile's freshness sentinel.
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

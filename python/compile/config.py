@@ -1,0 +1,83 @@
+"""Model configurations shared by the JAX (L2) model, the Pallas (L1)
+kernels, and — via ``artifacts/manifest.json`` — the Rust (L3) coordinator.
+
+Two executable configs are AOT-compiled:
+
+* ``tiny``  — used by pytest and ``cargo test`` golden checks.
+* ``small`` — the end-to-end serving demo model (``examples/serve_mtbench``).
+
+The paper-scale models (Mixtral-8x7B/8x22B, DBRX) exist on the Rust side as
+analytic ``ModelSpec`` entries only (DESIGN.md §1): their dimensions drive
+the performance model and the hardware simulator, not real execution.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of a Mixtral-style MoE transformer."""
+
+    name: str
+    vocab: int
+    d_model: int          # h
+    n_layers: int
+    n_heads: int          # query heads
+    n_kv_heads: int       # KV heads (GQA group size s = n_heads / n_kv_heads)
+    head_dim: int
+    n_experts: int        # N_e
+    top_k: int            # N_k
+    d_ff: int             # h_i (expert intermediate dim)
+    rope_theta: float
+    n_tok: int            # compiled token-bucket size (static PJRT shape)
+    max_ctx: int          # max sequence length the decode path supports
+
+    @property
+    def gqa_group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+TINY = ModelConfig(
+    name="tiny",
+    vocab=512,
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    n_experts=4,
+    top_k=2,
+    d_ff=128,
+    rope_theta=10_000.0,
+    n_tok=16,
+    max_ctx=128,
+)
+
+SMALL = ModelConfig(
+    name="small",
+    vocab=2048,
+    d_model=256,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=32,
+    n_experts=8,
+    top_k=2,
+    d_ff=512,
+    rope_theta=10_000.0,
+    n_tok=64,
+    max_ctx=512,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL)}

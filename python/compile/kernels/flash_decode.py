@@ -1,0 +1,93 @@
+"""Pallas flash-decode kernel: single-query attention over each sequence's
+KV history (the paper's CPU Task "Decode Attention", Fig. 8).
+
+In MoE-Lens this computation runs on the *host* (§6.6); the Rust
+implementation lives in ``rust/src/cpuattn``. This kernel is its Pallas
+twin, checked against ``ref.ref_decode_attention`` by pytest — the same
+oracle that generates the Rust golden vectors, so all three agree.
+
+Structure matches the paper's kernel: per decode token, walk the KV prefix
+in chunks; per chunk compute dot products (BF16 KV up-converted to F32,
+§5.3), maintain the online softmax, and accumulate with a saxpby-style
+update. Runs under ``interpret=True`` (see flash_prefill.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, chunk, group):
+    qb = q_ref[0].astype(jnp.float32)                     # [nh, hd]
+    nh, hd = qb.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qb = qb * scale
+    ctx = len_ref[0]
+
+    l_max = k_ref.shape[1]
+    n_chunks = l_max // chunk
+
+    def body(j, carry):
+        m, l, acc = carry
+        start = j * chunk
+        kb = pl.load(k_ref, (0, pl.dslice(start, chunk), slice(None), slice(None)))
+        vb = pl.load(v_ref, (0, pl.dslice(start, chunk), slice(None), slice(None)))
+        # BF16 storage -> F32 compute (paper §5.3)
+        kb = kb.astype(jnp.bfloat16).astype(jnp.float32)
+        vb = vb.astype(jnp.bfloat16).astype(jnp.float32)
+        kb = jnp.repeat(kb, group, axis=1)                # [chunk, nh, hd]
+        vb = jnp.repeat(vb, group, axis=1)
+
+        s = jnp.einsum("hd,lhd->hl", qb, kb)              # [nh, chunk]
+        pos = start + jax.lax.iota(jnp.int32, chunk)
+        s = jnp.where((pos < ctx)[None, :], s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))       # [nh]
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.einsum("hl,lhd->hd", p, vb)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((nh,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nh,), jnp.float32)
+    acc0 = jnp.zeros((nh, hd), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def flash_decode_attention(
+    q: jax.Array,         # [nd, n_heads, head_dim]
+    k_cache: jax.Array,   # [nd, L, n_kv_heads, head_dim]
+    v_cache: jax.Array,   # [nd, L, n_kv_heads, head_dim]
+    ctx_lens: jax.Array,  # [nd] int32
+    *,
+    chunk: int = 0,
+) -> jax.Array:
+    """Flash decode attention. Returns [nd, n_heads*head_dim] float32."""
+    nd, n_heads, head_dim = q.shape
+    l_max = k_cache.shape[1]
+    n_kv = k_cache.shape[2]
+    group = n_heads // n_kv
+    ck = chunk or min(l_max, 128)
+    assert l_max % ck == 0, "KV length must be divisible by chunk"
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=ck, group=group),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((1, n_heads, head_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l_max, n_kv, head_dim), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, l_max, n_kv, head_dim), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_heads, head_dim), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nd, n_heads, head_dim), jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, ctx_lens)
+    return out.reshape(nd, n_heads * head_dim)

@@ -1,0 +1,105 @@
+"""Pallas flash-attention kernel for the prefill path (GPU Task A's
+"GPU Flash Attention" box in the paper's Fig. 8).
+
+Hardware adaptation (DESIGN.md §2): instead of a CUDA threadblock per
+(batch, head) with shared-memory staging, the kernel tiles over query
+blocks with ``BlockSpec`` and streams KV chunks through VMEM inside a
+``fori_loop``, carrying the running max / running sum of the online
+softmax — the TPU formulation of FlashAttention.
+
+VMEM footprint per grid step (f32):
+    q block      Bq * nh * hd * 4
+  + kv chunk     2 * Bk * nkv * hd * 4   (+ repeated view Bk * nh * hd * 4 * 2)
+  + scores       Bq * nh * Bk * 4
+  + accumulator  Bq * nh * hd * 4
+For the paper-scale Mixtral-8x7B head layout (nh=32, hd=128, Bq=Bk=128)
+this is ~11.5 MB < 16 MB VMEM — the shapes are MXU-aligned (multiples of
+128 on the contracted dims).
+
+Runs under ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, seg_ref, o_ref, *, block_q, block_k, group):
+    i = pl.program_id(0)
+    q_start = i * block_q
+    qb = q_ref[...].astype(jnp.float32)                   # [Bq, nh, hd]
+    bq, nh, hd = qb.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qb = qb * scale
+
+    q_rows = q_start + jax.lax.iota(jnp.int32, bq)        # global row ids
+    q_seg = pl.load(seg_ref, (pl.dslice(q_start, bq),))   # [Bq]
+
+    n_total = k_ref.shape[0]
+    n_chunks = n_total // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_start = j * block_k
+        kb = pl.load(k_ref, (pl.dslice(k_start, block_k), slice(None), slice(None)))
+        vb = pl.load(v_ref, (pl.dslice(k_start, block_k), slice(None), slice(None)))
+        kb = jnp.repeat(kb.astype(jnp.float32), group, axis=1)  # GQA expand in VMEM
+        vb = jnp.repeat(vb.astype(jnp.float32), group, axis=1)
+        k_rows = k_start + jax.lax.iota(jnp.int32, block_k)
+        k_seg = pl.load(seg_ref, (pl.dslice(k_start, block_k),))
+
+        s = jnp.einsum("qhd,khd->qhk", qb, kb)            # [Bq, nh, Bk]
+        mask = (q_seg[:, None] == k_seg[None, :]) & (k_rows[None, :] <= q_rows[:, None])
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))       # [Bq, nh]
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, :, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, :, None] + jnp.einsum("qhk,khd->qhd", p, vb)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq, nh), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, nh), jnp.float32)
+    acc0 = jnp.zeros((bq, nh, hd), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, :, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_prefill_attention(
+    q: jax.Array,        # [n, n_heads, head_dim]
+    k: jax.Array,        # [n, n_kv_heads, head_dim]
+    v: jax.Array,        # [n, n_kv_heads, head_dim]
+    seg_ids: jax.Array,  # [n] int32
+    *,
+    block_q: int = 0,
+    block_k: int = 0,
+) -> jax.Array:
+    """Segment-masked causal flash attention. Returns [n, n_heads*head_dim]."""
+    n, n_heads, head_dim = q.shape
+    n_kv = k.shape[1]
+    group = n_heads // n_kv
+    bq = block_q or min(n, 128)
+    bk = block_k or min(n, 128)
+    assert n % bq == 0 and n % bk == 0, "token bucket must be divisible by blocks"
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_k=bk, group=group),
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, n_heads, head_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n, n_kv, head_dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n, n_kv, head_dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bq, n_heads, head_dim), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_heads, head_dim), q.dtype),
+        interpret=True,
+    )(q, k, v, seg_ids)
+    return out.reshape(n, n_heads * head_dim)

@@ -1,0 +1,161 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Layer-1 kernel is checked against these references by pytest, and the
+same references generate the golden vectors that ``cargo test`` replays
+against the Rust engine (cross-layer validation, DESIGN.md §5).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Elementwise building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embedding, shape [head_dim // 2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate-half rotary embedding.
+
+    x: [n, heads, head_dim]; positions: [n] int32.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                     # [hd/2]
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [n, hd/2]
+    cos = jnp.cos(angles)[:, None, :]                                 # [n, 1, hd/2]
+    sin = jnp.sin(angles)[:, None, :]
+    x1 = x[..., : hd // 2]
+    x2 = x[..., hd // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention references
+# ---------------------------------------------------------------------------
+
+def ref_prefill_attention(
+    q: jax.Array,        # [n, n_heads, head_dim]
+    k: jax.Array,        # [n, n_kv_heads, head_dim]
+    v: jax.Array,        # [n, n_kv_heads, head_dim]
+    seg_ids: jax.Array,  # [n] int32; tokens attend only within their segment
+) -> jax.Array:
+    """Segment-masked causal attention over a packed token batch.
+
+    Tokens of each sequence are contiguous and in order, so causality within
+    a segment is equivalent to "key row index <= query row index".
+    Returns [n, n_heads * head_dim].
+    """
+    n, n_heads, head_dim = q.shape
+    group = n_heads // k.shape[1]
+    k_full = jnp.repeat(k, group, axis=1)  # [n, n_heads, head_dim]
+    v_full = jnp.repeat(v, group, axis=1)
+
+    scale = 1.0 / jnp.sqrt(jnp.array(head_dim, jnp.float32))
+    scores = jnp.einsum("ihd,jhd->hij", q, k_full).astype(jnp.float32) * scale
+    rows = jnp.arange(n)
+    mask = (seg_ids[:, None] == seg_ids[None, :]) & (rows[None, :] <= rows[:, None])
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hij,jhd->ihd", probs.astype(q.dtype), v_full)
+    return out.reshape(n, n_heads * head_dim)
+
+
+def ref_decode_attention(
+    q: jax.Array,         # [nd, n_heads, head_dim] (one new token per sequence)
+    k_cache: jax.Array,   # [nd, L, n_kv_heads, head_dim]
+    v_cache: jax.Array,   # [nd, L, n_kv_heads, head_dim]
+    ctx_lens: jax.Array,  # [nd] int32, valid prefix length per sequence
+) -> jax.Array:
+    """Decode (single-query) attention over each sequence's KV history.
+
+    Matches the paper's CPU kernel convention: KV is stored in BF16 and
+    up-converted to FP32 for computation (§5.3). Returns
+    [nd, n_heads * head_dim] in float32.
+    """
+    nd, n_heads, head_dim = q.shape
+    L = k_cache.shape[1]
+    group = n_heads // k_cache.shape[2]
+    k32 = k_cache.astype(jnp.bfloat16).astype(jnp.float32)
+    v32 = v_cache.astype(jnp.bfloat16).astype(jnp.float32)
+    k_full = jnp.repeat(k32, group, axis=2)  # [nd, L, n_heads, head_dim]
+    v_full = jnp.repeat(v32, group, axis=2)
+
+    scale = 1.0 / jnp.sqrt(jnp.array(head_dim, jnp.float32))
+    scores = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32), k_full) * scale
+    mask = jnp.arange(L)[None, :] < ctx_lens[:, None]      # [nd, L]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhl,blhd->bhd", probs, v_full)
+    return out.reshape(nd, n_heads * head_dim)
+
+
+# ---------------------------------------------------------------------------
+# MoE reference
+# ---------------------------------------------------------------------------
+
+def iterative_top_k(logits: jax.Array, k: int):
+    """Top-k as k rounds of argmax+mask.
+
+    Semantically identical to ``jax.lax.top_k`` for distinct values (ties
+    break toward the lower index, same as lax.top_k), but lowers to plain
+    reduce/select HLO: the image's xla_extension 0.5.1 HLO-text parser
+    rejects the dedicated ``topk(..., largest=true)`` op jax emits for
+    ``lax.top_k`` (see DESIGN.md §AOT-gotchas).
+    """
+    vals, idxs = [], []
+    masked = logits
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)
+        val = jnp.take_along_axis(masked, idx[..., None], axis=-1)[..., 0]
+        vals.append(val)
+        idxs.append(idx)
+        masked = jnp.where(
+            jax.nn.one_hot(idx, logits.shape[-1], dtype=bool), -jnp.inf, masked
+        )
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1).astype(jnp.int32)
+
+
+def ref_router(x: jax.Array, router_w: jax.Array, top_k: int):
+    """Top-k softmax router (normalized over the selected experts, as in
+    Mixtral). Returns (weights [n, top_k], indices [n, top_k])."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    top_logits, top_idx = iterative_top_k(logits, top_k)
+    weights = jax.nn.softmax(top_logits, axis=-1)
+    return weights, top_idx
+
+
+def ref_moe(
+    x: jax.Array,          # [n, h]
+    router_w: jax.Array,   # [h, n_experts]
+    w1: jax.Array,         # [n_experts, h, d_ff]   (gate proj)
+    w3: jax.Array,         # [n_experts, h, d_ff]   (up proj)
+    w2: jax.Array,         # [n_experts, d_ff, h]   (down proj)
+    top_k: int,
+) -> jax.Array:
+    """SwiGLU mixture-of-experts layer, computed densely per expert and
+    combined with the top-k routing weights (the TPU-idiomatic masked
+    formulation — DESIGN.md §2)."""
+    n, _h = x.shape
+    n_experts = router_w.shape[1]
+    weights, top_idx = ref_router(x, router_w, top_k)
+    # combine[n, e] = routing weight of expert e for token n (0 if unrouted)
+    combine = jnp.zeros((n, n_experts), jnp.float32)
+    combine = combine.at[jnp.arange(n)[:, None], top_idx].set(weights)
+
+    def expert(e):
+        a = x @ w1[e]
+        b = x @ w3[e]
+        return (jax.nn.silu(a) * b) @ w2[e]       # [n, h]
+
+    outs = jnp.stack([expert(e) for e in range(n_experts)], axis=1)  # [n, E, h]
+    return jnp.einsum("neh,ne->nh", outs.astype(jnp.float32), combine).astype(x.dtype)

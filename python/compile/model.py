@@ -1,0 +1,220 @@
+"""Layer 2: the MoE transformer compute graph in JAX, split along the
+paper's VSLPipe compute-graph division (Fig. 8) into the five functions
+that ``aot.py`` lowers to standalone PJRT executables:
+
+* ``embed``        — token-id gather into the hidden state.
+* ``gpu_task_a``   — pre-attention norm + QKV projection + RoPE (GA).
+* ``prefill_attn`` — GPU flash attention for prefill tokens (Pallas L1).
+* ``gpu_task_b``   — O-projection + residual + MoE layer (GB, Pallas L1).
+* ``head``         — final norm + LM head + greedy argmax (H).
+
+Decode attention is deliberately *absent*: it is the CPU Task (C) and runs
+natively in Rust (``rust/src/cpuattn``), validated against
+``kernels.flash_decode`` / ``kernels.ref`` golden vectors.
+
+Weights are *arguments* of each function so the Rust weight manager can
+stream them layer-by-layer through the weight buffer (DESIGN.md §6).
+"""
+
+from dataclasses import dataclass, fields
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.flash_prefill import flash_prefill_attention
+from .kernels.moe import moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Weight container + deterministic init
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LayerWeights:
+    ln1: jax.Array       # [h]
+    wq: jax.Array        # [h, nh*hd]
+    wk: jax.Array        # [h, nkv*hd]
+    wv: jax.Array        # [h, nkv*hd]
+    wo: jax.Array        # [nh*hd, h]
+    ln2: jax.Array       # [h]
+    router: jax.Array    # [h, E]
+    w1: jax.Array        # [E, h, ff]
+    w3: jax.Array        # [E, h, ff]
+    w2: jax.Array        # [E, ff, h]
+
+
+@dataclass
+class ModelWeights:
+    embedding: jax.Array     # [vocab, h]
+    layers: list             # [LayerWeights]
+    final_norm: jax.Array    # [h]
+    lm_head: jax.Array       # [h, vocab]
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> ModelWeights:
+    """Seeded random init (scaled normal). The exact bytes are exported to
+    ``artifacts/weights_<cfg>.bin`` and loaded by Rust, so Python and Rust
+    run the *same* model."""
+    key = jax.random.PRNGKey(seed)
+    h, hd = cfg.d_model, cfg.head_dim
+
+    def dense(key, shape, fan_in):
+        return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+    keys = iter(jax.random.split(key, 4 + cfg.n_layers * 10))
+    embedding = dense(next(keys), (cfg.vocab, h), h)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(LayerWeights(
+            ln1=jnp.ones((h,), jnp.float32),
+            wq=dense(next(keys), (h, cfg.q_dim), h),
+            wk=dense(next(keys), (h, cfg.kv_dim), h),
+            wv=dense(next(keys), (h, cfg.kv_dim), h),
+            wo=dense(next(keys), (cfg.q_dim, h), cfg.q_dim),
+            ln2=jnp.ones((h,), jnp.float32),
+            router=dense(next(keys), (h, cfg.n_experts), h),
+            w1=dense(next(keys), (cfg.n_experts, h, cfg.d_ff), h),
+            w3=dense(next(keys), (cfg.n_experts, h, cfg.d_ff), h),
+            w2=dense(next(keys), (cfg.n_experts, cfg.d_ff, h), cfg.d_ff),
+        ))
+        _ = next(keys)  # keep stream aligned (ln uses no key)
+        _ = next(keys)
+    final_norm = jnp.ones((h,), jnp.float32)
+    lm_head = dense(next(keys), (h, cfg.vocab), h)
+    return ModelWeights(embedding, layers, final_norm, lm_head)
+
+
+def layer_weight_names():
+    return [f.name for f in fields(LayerWeights)]
+
+
+# ---------------------------------------------------------------------------
+# The five AOT-compiled functions
+# ---------------------------------------------------------------------------
+
+def embed(cfg: ModelConfig):
+    def fn(ids, embedding):
+        # ids: [n] int32 -> [n, h]
+        return (jnp.take(embedding, ids, axis=0),)
+    return fn
+
+
+def gpu_task_a(cfg: ModelConfig):
+    """GA: RMSNorm -> QKV projection -> RoPE. Returns (q, k, v).
+
+    k/v are returned un-flattened so the coordinator can (a) write them to
+    the paged KV cache (prefill + decode) and (b) feed prefill attention.
+    """
+    def fn(x, positions, ln1, wq, wk, wv):
+        n = x.shape[0]
+        xn = ref.rmsnorm(x, ln1)
+        q = (xn @ wq).reshape(n, cfg.n_heads, cfg.head_dim)
+        k = (xn @ wk).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+        v = (xn @ wv).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+        q = ref.apply_rope(q, positions, cfg.rope_theta)
+        k = ref.apply_rope(k, positions, cfg.rope_theta)
+        return (q, k, v)
+    return fn
+
+
+def prefill_attn(cfg: ModelConfig):
+    """GPU flash attention over packed prefill tokens (Pallas kernel)."""
+    def fn(q, k, v, seg_ids):
+        n = q.shape[0]
+        bq = min(cfg.n_tok, 128)
+        if n % bq != 0:
+            bq = n  # odd-sized reference calls: single block
+        return (flash_prefill_attention(q, k, v, seg_ids, block_q=bq, block_k=bq),)
+    return fn
+
+
+def gpu_task_b(cfg: ModelConfig):
+    """GB: O-projection + residual, then MoE layer (router + Pallas FFN)."""
+    def fn(attn_out, resid, wo, ln2, router_w, w1, w3, w2):
+        n = attn_out.shape[0]
+        x = resid + attn_out @ wo
+        xn = ref.rmsnorm(x, ln2)
+        weights, top_idx = ref.ref_router(xn, router_w, cfg.top_k)
+        combine = jnp.zeros((n, cfg.n_experts), jnp.float32)
+        combine = combine.at[jnp.arange(n)[:, None], top_idx].set(weights)
+        moe_out = moe_ffn(xn, combine, w1, w3, w2)
+        return (x + moe_out,)
+    return fn
+
+
+def head(cfg: ModelConfig):
+    """H: final norm + LM head. Returns (greedy token ids, logits)."""
+    def fn(x, final_norm, lm_head):
+        xn = ref.rmsnorm(x, final_norm)
+        logits = xn @ lm_head
+        return (jnp.argmax(logits, axis=-1).astype(jnp.int32), logits)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (golden generator / pytest oracle)
+# ---------------------------------------------------------------------------
+
+def forward_packed(cfg: ModelConfig, w: ModelWeights, ids, positions, seg_ids):
+    """Full forward over a packed batch of *prefill* tokens (no KV cache),
+    composing the five pieces exactly as the engine does. Returns
+    (next-token ids [n], logits [n, vocab], per-layer kv list)."""
+    (x,) = embed(cfg)(ids, w.embedding)
+    kv_per_layer = []
+    for lw in w.layers:
+        q, k, v = gpu_task_a(cfg)(x, positions, lw.ln1, lw.wq, lw.wk, lw.wv)
+        kv_per_layer.append((k, v))
+        (attn,) = prefill_attn(cfg)(q, k, v, seg_ids)
+        (x,) = gpu_task_b(cfg)(attn, x, lw.wo, lw.ln2, lw.router, lw.w1, lw.w3, lw.w2)
+    next_ids, logits = head(cfg)(x, w.final_norm, w.lm_head)
+    return next_ids, logits, kv_per_layer
+
+
+def generate_greedy(cfg: ModelConfig, w: ModelWeights, prompts, n_steps):
+    """Reference greedy generation with a BF16 KV cache, mirroring the Rust
+    engine's numerics (KV stored in bf16, attention in f32). ``prompts`` is
+    a list of int lists. Returns list of generated-token lists.
+
+    Intentionally simple (one sequence at a time, dense python loops) —
+    this is the golden generator, not a fast path.
+    """
+    outs = []
+    for prompt in prompts:
+        p = len(prompt)
+        ids = jnp.array(prompt, jnp.int32)
+        pos = jnp.arange(p, dtype=jnp.int32)
+        seg = jnp.zeros((p,), jnp.int32)
+        next_ids, _, kvs = forward_packed(cfg, w, ids, pos, seg)
+        # bf16-round cached KV like the Rust paged cache does
+        caches = [
+            (k.astype(jnp.bfloat16).astype(jnp.float32),
+             v.astype(jnp.bfloat16).astype(jnp.float32))
+            for k, v in kvs
+        ]
+        tok = int(next_ids[p - 1])
+        gen = [tok]
+        for step in range(1, n_steps):
+            cur = p + step - 1  # position of the token being fed
+            x = jnp.take(w.embedding, jnp.array([tok], jnp.int32), axis=0)
+            new_caches = []
+            for li, lw in enumerate(w.layers):
+                kc, vc = caches[li]
+                q, k, v = gpu_task_a(cfg)(
+                    x, jnp.array([cur], jnp.int32), lw.ln1, lw.wq, lw.wk, lw.wv)
+                k16 = k.astype(jnp.bfloat16).astype(jnp.float32)
+                v16 = v.astype(jnp.bfloat16).astype(jnp.float32)
+                kc = jnp.concatenate([kc, k16], axis=0)
+                vc = jnp.concatenate([vc, v16], axis=0)
+                new_caches.append((kc, vc))
+                attn = ref.ref_decode_attention(
+                    q, kc[None], vc[None], jnp.array([kc.shape[0]], jnp.int32))
+                (x,) = gpu_task_b(cfg)(
+                    attn, x, lw.wo, lw.ln2, lw.router, lw.w1, lw.w3, lw.w2)
+            caches = new_caches
+            nid, _ = head(cfg)(x, w.final_norm, w.lm_head)
+            tok = int(nid[0])
+            gen.append(tok)
+        outs.append(gen)
+    return outs

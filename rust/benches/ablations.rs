@@ -1,0 +1,92 @@
+//! Ablations for the design choices DESIGN.md §6 calls out, each
+//! isolating one MoE-Lens ingredient on the simulated testbed
+//! (Mixtral-8x7B, MTBench-like p=98):
+//!
+//! 1. prefill/decode **overlap** alone (two-phase baseline given the
+//!    *fast* attention kernel and full-memory plans);
+//! 2. KV **block size** (the §5.5 paging term, executed not just modeled);
+//! 3. CPU attention **kernel efficiency** inside the full system;
+//! 4. memory-controller **contention** κ sensitivity (§8.2).
+
+use moe_lens::baselines::MoeLightningSim;
+use moe_lens::config::ModelSpec;
+use moe_lens::simhw::{run_uniform, SimConfig};
+use moe_lens::util::bench::{banner, Table};
+
+fn main() {
+    let model = ModelSpec::mixtral_8x7b();
+    let (p, g, kv_gb, k) = (98usize, 64usize, 70u64, 10_000usize);
+
+    banner("ablation1", "prefill/decode overlap isolated (fast attention everywhere)");
+    let (_, lens) = run_uniform(SimConfig::moe_lens(model.clone(), kv_gb), p, g, k);
+    let mut two_phase = MoeLightningSim::new(model.clone(), kv_gb);
+    two_phase.cpu_attn_eff = 0.8; // same kernel as MoE-Lens
+    let (_, tp) = two_phase.run_uniform(p, g, k);
+    let mut t = Table::new(&["schedule", "gen_tok_s"]);
+    t.row(&["overlapped (MoE-Lens)".into(), format!("{:.0}", lens.generation_throughput)]);
+    t.row(&["two-phase, fast attention".into(), format!("{:.0}", tp.generation_throughput)]);
+    t.print();
+    assert!(
+        lens.generation_throughput > tp.generation_throughput,
+        "overlap alone must win: {} vs {}",
+        lens.generation_throughput,
+        tp.generation_throughput
+    );
+
+    banner("ablation2", "paged-KV block size (Eq. 8 executed)");
+    let mut t = Table::new(&["block_size", "gen_tok_s", "preemptions"]);
+    let mut by_block = Vec::new();
+    for b in [1usize, 16, 64, 256] {
+        let mut cfg = SimConfig::moe_lens(model.clone(), kv_gb);
+        cfg.block_size = b;
+        let (_, r) = run_uniform(cfg, p, g, k);
+        t.row(&[
+            b.to_string(),
+            format!("{:.0}", r.generation_throughput),
+            r.preemptions.to_string(),
+        ]);
+        by_block.push((b, r.generation_throughput));
+    }
+    t.print();
+    t.print_csv("ablation_block");
+    // Coarser blocks waste slot fragments -> throughput must not improve.
+    assert!(
+        by_block[0].1 >= by_block[3].1 * 0.98,
+        "b=1 {} vs b=256 {}",
+        by_block[0].1,
+        by_block[3].1
+    );
+
+    banner("ablation3", "CPU attention kernel efficiency inside the full system");
+    let mut t = Table::new(&["kernel_eff", "gen_tok_s"]);
+    let mut by_eff = Vec::new();
+    for (label, eff) in [("autovec 0.26", 0.8 / 3.1), ("optimized 0.80", 0.8)] {
+        let mut cfg = SimConfig::moe_lens(model.clone(), kv_gb);
+        cfg.cpu_attn_eff = eff;
+        let (_, r) = run_uniform(cfg, p, g, k);
+        t.row(&[label.into(), format!("{:.0}", r.generation_throughput)]);
+        by_eff.push(r.generation_throughput);
+    }
+    t.print();
+    assert!(by_eff[1] >= by_eff[0], "faster kernel must not hurt");
+
+    banner("ablation4", "memory-controller contention sensitivity (§8.2)");
+    // κ is a compile-time constant in simhw; show its effect via the lane
+    // model directly (quiet vs heavy attention at κ = 0.25).
+    let costs = moe_lens::simhw::CostModel {
+        machine: &moe_lens::config::MachineSpec::paper_testbed(),
+        model: &model,
+        cpu_attn_eff: 0.8,
+    };
+    let mut t = Table::new(&["kv_tokens_scanned", "io_s", "io_contended_s"]);
+    for kv_tokens in [0u64, 500_000, 2_000_000, 8_000_000] {
+        let lanes = costs.overlapped_iter(10_000, kv_tokens);
+        t.row(&[
+            kv_tokens.to_string(),
+            format!("{:.2}", lanes.io),
+            format!("{:.2}", lanes.io_contended),
+        ]);
+    }
+    t.print();
+    println!("\n(κ = 0.25 reproduces §8.2's ~5 s → ~6 s weight-sweep stretch)");
+}

@@ -1,0 +1,77 @@
+//! Fig. 12: RAG (prefill-heavy, 926/128) and AIME-2024 (generation-heavy,
+//! 128/512) — MoE-Lens vs MoE-Lightning, 70 and 210 GB KV caches.
+//!
+//! Paper shape: up to 25.5x (19.4x avg) on RAG, up to 9.9x (4.7x avg) on
+//! AIME; RAG speedups exceed AIME speedups because high-PME prefill
+//! tokens are exactly what the baseline's two-phase schedule wastes.
+
+use moe_lens::baselines::MoeLightningSim;
+use moe_lens::config::{ModelSpec, AIME, RAG};
+use moe_lens::perfmodel::Stage2Model;
+use moe_lens::simhw::{run_uniform, SimConfig};
+use moe_lens::util::bench::{banner, Table};
+use moe_lens::util::stats::{geomean, prediction_accuracy};
+
+fn main() {
+    banner("fig12", "RAG + AIME2024 throughput (tok/s, sim clock)");
+    let models = [ModelSpec::mixtral_8x7b(), ModelSpec::mixtral_8x22b(), ModelSpec::dbrx()];
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+    let mut accs = Vec::new();
+
+    let mut t = Table::new(&[
+        "dataset", "model", "kv_GB", "lightning", "moe-lens", "predicted", "speedup", "acc_%",
+    ]);
+    for (wl, p, g) in [(&RAG, 926usize, 128usize), (&AIME, 128, 512)] {
+        for model in &models {
+            for kv_gb in [70u64, 210] {
+                let s2 = Stage2Model::new(
+                    moe_lens::config::MachineSpec::paper_testbed(),
+                    model.clone(),
+                    16,
+                );
+                let k = ((5.0 * g as f64 * s2.q(p, g, kv_gb << 30)) as usize)
+                    .clamp(200, 10_000);
+                let (_, lens) = run_uniform(SimConfig::moe_lens(model.clone(), kv_gb), p, g, k);
+                let (_, light) =
+                    MoeLightningSim::new(model.clone(), kv_gb).run_uniform(p, g, 1000);
+                let pred = s2.predict(p, g, kv_gb << 30, k as f64);
+                let speedup = lens.generation_throughput / light.generation_throughput;
+                speedups.push((wl.name, speedup));
+                accs.push(prediction_accuracy(pred.throughput, lens.generation_throughput));
+                t.row(&[
+                    wl.name.to_string(),
+                    model.name.to_string(),
+                    kv_gb.to_string(),
+                    format!("{:.0}", light.generation_throughput),
+                    format!("{:.0}", lens.generation_throughput),
+                    format!("{:.0}", pred.throughput),
+                    format!("{speedup:.1}x"),
+                    format!("{:.0}", 100.0 * accs.last().unwrap()),
+                ]);
+                assert!(speedup > 1.0, "{} {} kv={kv_gb}", wl.name, model.name);
+            }
+        }
+    }
+    t.print();
+    t.print_csv("fig12");
+
+    let by = |name: &str| -> Vec<f64> {
+        speedups.iter().filter(|(n, _)| *n == name).map(|&(_, s)| s).collect()
+    };
+    let rag = geomean(&by("rag"));
+    let aime = geomean(&by("aime"));
+    println!("\n== summary ==");
+    println!("  RAG  geomean speedup: {rag:.1}x (paper avg: 19.4x, up to 25.5x)");
+    println!("  AIME geomean speedup: {aime:.1}x (paper avg: 4.7x, up to 9.9x)");
+    println!(
+        "  Stage-2 accuracy: {:.0}%",
+        100.0 * accs.iter().sum::<f64>() / accs.len() as f64
+    );
+    println!(
+        "\nnote: our MoE-Lightning baseline is *idealized* (perfect pipelining,\n\
+         zero framework overhead), which compresses the paper's 19.4x RAG gap;\n\
+         the reproduced shape is lens > lightning everywhere, speedups growing\n\
+         with KV size, and prediction accuracy ~94% (see EXPERIMENTS.md)."
+    );
+    assert!(rag > 1.5 && aime > 1.5, "MoE-Lens must clearly win both workloads");
+}

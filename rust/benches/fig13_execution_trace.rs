@@ -1,0 +1,77 @@
+//! Fig. 13: execution-status traces of MoE-Lens on MTBench/Mixtral-8x7B —
+//! prefill/decode throughput, GPU utilization, and the per-pass IO / GPU
+//! compute / CPU attention breakdown over the run, for max generation
+//! lengths {32, 64, 256} and KV caches {70, 210} GB.
+//!
+//! Full per-pass CSVs are written to `bench_out/fig13_*.csv` for
+//! plotting; the stdout tables sample the series.
+
+use moe_lens::config::ModelSpec;
+use moe_lens::simhw::{run_uniform, SimConfig};
+use moe_lens::util::bench::{banner, Table};
+
+fn main() {
+    banner("fig13", "execution traces: MTBench on Mixtral-8x7B (sim clock)");
+    std::fs::create_dir_all("bench_out").ok();
+    let p = 98usize;
+
+    for kv_gb in [70u64, 210] {
+        for g in [32usize, 64, 256] {
+            let cfg = SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), kv_gb);
+            // Enough requests to keep admission pressure on the cache for
+            // the whole run (the paper uses 20-25k; bounded for bench
+            // runtime while preserving the contention regime).
+            let k = (120_000usize / g).max(3000);
+            let (trace, report) = run_uniform(cfg, p, g, k);
+            let tag = format!("fig13_kv{kv_gb}_g{g}");
+            std::fs::write(format!("bench_out/{tag}.csv"), trace.to_csv()).unwrap();
+
+            println!(
+                "\n-- g={g}, KV={kv_gb} GB: {} passes, {:.0} gen tok/s, {} preemptions --",
+                report.passes, report.generation_throughput, report.preemptions
+            );
+            let mut t = Table::new(&[
+                "t_s", "prefill_tok", "decode_tok", "gpu_util", "io_s", "gpu_s", "cpu_s",
+                "kv_used",
+            ]);
+            let n = trace.passes.len();
+            for idx in [0, n / 8, n / 4, n / 2, 3 * n / 4, n - 1] {
+                let pr = &trace.passes[idx];
+                t.row(&[
+                    format!("{:.0}", pr.t_end),
+                    pr.prefill_tokens.to_string(),
+                    pr.decode_tokens.to_string(),
+                    format!("{:.2}", pr.gpu_time / pr.duration),
+                    format!("{:.1}", pr.io_time),
+                    format!("{:.1}", pr.gpu_time),
+                    format!("{:.1}", pr.cpu_time),
+                    pr.kv_blocks_used.to_string(),
+                ]);
+            }
+            t.print();
+
+            // Shape checks per the paper's §8.2 narrative.
+            if g == 32 {
+                assert_eq!(
+                    report.preemptions, 0,
+                    "g=32 fits: no thrashing at {kv_gb} GB"
+                );
+            }
+            if g == 256 && kv_gb == 70 {
+                assert!(
+                    report.preemptions > 0,
+                    "g=256 at 70 GB must thrash (observed the paper's stalls)"
+                );
+            }
+        }
+        // Larger cache smooths execution: fewer preemptions at g=256.
+    }
+    let (_, r70) = run_uniform(SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 70), p, 256, 3000);
+    let (_, r210) =
+        run_uniform(SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 210), p, 256, 3000);
+    println!(
+        "\npreemptions at g=256: 70GB={} vs 210GB={} (larger cache smooths execution)",
+        r70.preemptions, r210.preemptions
+    );
+    assert!(r210.preemptions <= r70.preemptions);
+}

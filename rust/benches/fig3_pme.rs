@@ -1,0 +1,55 @@
+//! Fig. 3: Parallelism-Memory Efficiency visualizations.
+//!
+//! (a) max GPU utilization over the (p, g) plane, Mixtral-8x7B on A40
+//!     with a 100 GB KV cache;
+//! (b) the roofline: utilization vs KV capacity at p = 100, g = 128.
+
+use moe_lens::config::{MachineSpec, ModelSpec};
+use moe_lens::perfmodel::stage1::Bound;
+use moe_lens::perfmodel::Stage1Model;
+use moe_lens::util::bench::{banner, Table};
+
+fn main() {
+    let s1 = Stage1Model::new(MachineSpec::paper_testbed(), ModelSpec::mixtral_8x7b());
+
+    banner("fig3a", "max GPU utilization over (p, g), 100 GB KV (Mixtral-8x7B/A40)");
+    let ps = [25usize, 50, 100, 200, 400, 800];
+    let gs = [16usize, 32, 64, 128, 256, 512];
+    let headers: Vec<String> = std::iter::once("p\\g".to_string())
+        .chain(gs.iter().map(|g| g.to_string()))
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs);
+    let kv = 100u64 << 30;
+    for &p in &ps {
+        let mut row = vec![p.to_string()];
+        for &g in &gs {
+            row.push(format!("{:.2}", s1.max_gpu_utilization(p, g, kv)));
+        }
+        t.row(&row);
+    }
+    t.print();
+    t.print_csv("fig3a");
+    // Shape assertions (paper): longer sequences -> lower utilization;
+    // higher p:g ratio at fixed total -> higher utilization.
+    assert!(s1.max_gpu_utilization(100, 64, kv) > s1.max_gpu_utilization(100, 256, kv));
+    assert!(s1.max_gpu_utilization(200, 56, kv) > s1.max_gpu_utilization(128, 128, kv));
+
+    banner("fig3b", "roofline: utilization vs KV capacity at p=100, g=128");
+    let mut t = Table::new(&["kv_GB", "util", "bound"]);
+    let mut prev = 0.0;
+    let mut knee_seen = false;
+    for kv_gb in [10u64, 25, 50, 100, 200, 400, 800, 1600, 3200] {
+        let u = s1.max_gpu_utilization(100, 128, kv_gb << 30);
+        let b = s1.bound(100, 128, kv_gb << 30);
+        if b == Bound::GpuCompute {
+            knee_seen = true;
+        }
+        t.row(&[kv_gb.to_string(), format!("{u:.3}"), format!("{b:?}")]);
+        assert!(u + 1e-12 >= prev, "monotone");
+        prev = u;
+    }
+    t.print();
+    t.print_csv("fig3b");
+    assert!(knee_seen, "the roofline must reach the GPU-bound regime");
+}

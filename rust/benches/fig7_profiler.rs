@@ -1,0 +1,86 @@
+//! Fig. 7: the pipeline profiler's n_real search — analytic (paper
+//! constants, Mixtral-8x7B on A40) and *live* on the real PJRT engine
+//! (`small` model): GPU pass time is measured at several token counts,
+//! a line is fitted, and the threshold where GPU compute covers the
+//! per-layer weight transfer is reported.
+
+use moe_lens::config::{GpuSpec, MachineSpec, ModelSpec};
+use moe_lens::engine::{EngineConfig, ServingEngine};
+use moe_lens::model::Request;
+use moe_lens::sched::PipelineProfiler;
+use moe_lens::transfer::LinkTiming;
+use moe_lens::util::bench::{banner, Table};
+use moe_lens::util::stats::line_fit;
+
+fn main() -> anyhow::Result<()> {
+    banner("fig7a", "analytic profile: Mixtral-8x7B on A40 (paper constants)");
+    let fit = PipelineProfiler::analytic(
+        &MachineSpec::nominal(GpuSpec::a40()),
+        &ModelSpec::mixtral_8x7b(),
+    );
+    println!("  slope      : {:.3} us/token", fit.line.slope * 1e6);
+    println!("  layer IO   : {:.2} ms", fit.layer_io_secs * 1e3);
+    println!("  n_real     : {} tokens (paper's Eq.-2 estimate: ~19.2k)", fit.n_real);
+    assert!((fit.n_real as f64 - 19_200.0).abs() / 19_200.0 < 0.25);
+
+    banner("fig7b", "live profile: GPU pass time vs token count ('small' on PJRT)");
+    // Measure whole prefill passes at 1..=4 buckets by serving pure-
+    // prefill batches (g = 1) and reading the trace's per-pass GPU time.
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut t = Table::new(&["tokens", "buckets", "gpu_ms_per_pass"]);
+    for buckets in 1usize..=4 {
+        let mut cfg = EngineConfig::for_model("small");
+        cfg.timing = LinkTiming::Unthrottled;
+        cfg.token_budget = buckets * 64;
+        cfg.kv_blocks = 512;
+        let mut engine = ServingEngine::load(cfg)?;
+        let n_tok = engine.n_tok();
+        // `buckets` requests with (n_tok - 1)-token prompts, 1 generated
+        // token: pass 0 is a pure prefill pass of `buckets` full buckets.
+        let reqs: Vec<Request> = (0..buckets)
+            .map(|i| Request::new(i as u64, vec![(i + 1) as i32; n_tok - 1], 1))
+            .collect();
+        let (trace, _) = engine.run(reqs)?;
+        let gpu = trace.passes[0].gpu_time;
+        let tokens = buckets * n_tok;
+        t.row(&[
+            tokens.to_string(),
+            buckets.to_string(),
+            format!("{:.1}", gpu * 1e3),
+        ]);
+        xs.push(tokens as f64);
+        ys.push(gpu);
+    }
+    t.print();
+    t.print_csv("fig7b");
+
+    let live = line_fit(&xs, &ys);
+    println!(
+        "  live fit: gpu_ms = {:.3} us/token * n + {:.1} ms  (r2 = {:.3})",
+        live.slope * 1e6,
+        live.intercept * 1e3,
+        live.r2
+    );
+    // At which token count would GPU time cover a layer transfer on a
+    // 2 GB/s link? (the threshold the scheduler would use on this box)
+    let spec = ModelSpec::small();
+    let layer_io = spec.layer_bytes() as f64 / 2e9; // f32 weights, 2 GB/s
+    let n_real = (layer_io - live.intercept) / live.slope;
+    if n_real < 1.0 {
+        println!(
+            "  layer IO at 2 GB/s: {:.1} ms < pass floor {:.1} ms -> this box is \
+             GPU-bound at any token count (n_real < 1 bucket); the scheduler \
+             would cap passes at one bucket",
+            layer_io * 1e3,
+            live.intercept * 1e3
+        );
+    } else {
+        println!(
+            "  layer IO at 2 GB/s: {:.1} ms -> n_real ≈ {n_real:.0} tokens",
+            layer_io * 1e3
+        );
+    }
+    assert!(live.slope > 0.0, "GPU time must grow with tokens");
+    Ok(())
+}

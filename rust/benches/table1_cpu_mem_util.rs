@@ -1,0 +1,45 @@
+//! Table 1: CPU memory utilization of MoE-Lightning's execution plans.
+//!
+//! Replays the baseline's published plans (back-derived from the ASPLOS
+//! artifact — see `perfmodel::hrm::artifact_plan`) through our memory
+//! accounting and reports KV-region utilization next to the paper's
+//! measured numbers, plus what the MoE-Lens scheduler would commit on the
+//! same machine (full utilization + Eq.-7 overlap headroom).
+
+use moe_lens::config::{MachineSpec, ModelSpec};
+use moe_lens::perfmodel::hrm::HrmModel;
+use moe_lens::util::bench::{banner, Table};
+
+fn main() {
+    banner("table1", "CPU memory utilization of MoE-Lightning execution plans");
+    let model = ModelSpec::mixtral_8x7b();
+    let hrm = HrmModel::new(MachineSpec::paper_testbed(), model.clone());
+    let cap = 265u64 << 30;
+
+    let rows = [(98usize, 32usize, 52.0), (98, 64, 56.2), (926, 128, 35.0)];
+    let mut t = Table::new(&[
+        "prefill", "gen", "cpu_mem_GB", "util_paper_%", "util_ours_%", "lens_util_%",
+    ]);
+    for (p, g, paper) in rows {
+        let plan = hrm.artifact_plan(p, g).expect("table-1 config");
+        let ours = hrm.kv_region_utilization(&plan, cap) * 100.0;
+        // MoE-Lens fills the KV region and overlap amplifies it (Eq. 7):
+        // effective utilization of the same physical bytes.
+        let lens = 100.0 * (p + g) as f64 / (p as f64 + g as f64 / 2.0);
+        t.row(&[
+            p.to_string(),
+            g.to_string(),
+            format!("{}", cap >> 30),
+            format!("{paper:.1}"),
+            format!("{ours:.1}"),
+            format!("{lens:.1}"),
+        ]);
+        assert!((ours - paper).abs() < 3.0, "row ({p},{g}) drifted: {ours} vs {paper}");
+    }
+    t.print();
+    t.print_csv("table1");
+    println!(
+        "\nshape check: the RAG row (926/128) is the most underutilized, and all \
+         baseline plans leave ~half the KV region idle — the §3.1 motivation."
+    );
+}

@@ -1,0 +1,41 @@
+//! Table 2: tokens + KV-cache size needed to saturate GPU compute
+//! (Mixtral-8x7B, nominal PCIe 4.0 at B = 32 GB/s; Eq. 2).
+
+use moe_lens::config::{GpuSpec, MachineSpec, ModelSpec};
+use moe_lens::perfmodel::Stage1Model;
+use moe_lens::util::bench::{banner, Table};
+
+fn main() {
+    banner("table2", "KV cache size needed to saturate GPU compute (Eq. 2)");
+    // (gpu, paper TFLOPS, paper tokens, paper KV GB @256, @512)
+    let rows = [
+        (GpuSpec::a40(), 150.0, 19_200.0, 614.0, 1228.0),
+        (GpuSpec::l40(), 181.0, 23_200.0, 741.0, 1482.0),
+        (GpuSpec::a100(), 312.0, 40_000.0, 1277.0, 2554.0),
+    ];
+    let model = ModelSpec::mixtral_8x7b();
+    let mut t = Table::new(&[
+        "gpu", "TFLOPS", "tokens_paper", "tokens_ours", "kv256_paper_GB",
+        "kv256_ours_GB", "kv512_paper_GB", "kv512_ours_GB",
+    ]);
+    for (gpu, tflops, tok_paper, kv256_paper, kv512_paper) in rows {
+        let s1 = Stage1Model::new(MachineSpec::nominal(gpu.clone()), model.clone());
+        let tok = s1.tokens_to_saturate();
+        let kv256 = s1.kv_bytes_to_saturate(256) / 1e9;
+        let kv512 = s1.kv_bytes_to_saturate(512) / 1e9;
+        t.row(&[
+            gpu.name.to_string(),
+            format!("{tflops:.0}"),
+            format!("{tok_paper:.0}"),
+            format!("{tok:.0}"),
+            format!("{kv256_paper:.0}"),
+            format!("{kv256:.0}"),
+            format!("{kv512_paper:.0}"),
+            format!("{kv512:.0}"),
+        ]);
+        assert!((tok - tok_paper).abs() / tok_paper < 0.05, "{}", gpu.name);
+        assert!((kv512 - kv512_paper).abs() / kv512_paper < 0.08, "{}", gpu.name);
+    }
+    t.print();
+    t.print_csv("table2");
+}

@@ -1,0 +1,20 @@
+//! Baseline serving policies (§7): MoE-Lightning-like and vLLM-like,
+//! replayed on the same simulated machine and cost model as MoE-Lens.
+//!
+//! Fig. 11/12 compare *policies* under identical hardware constants
+//! (DESIGN.md §1): the baselines' handicaps are structural —
+//!
+//! * **MoE-Lightning**: HRM-planned batches that underutilize CPU memory
+//!   (Table 1), strict prefill/decode phase separation (no overlap, so no
+//!   Eq.-7 KV amplification and idle IO during prefill / idle GPU during
+//!   decode), and the auto-vectorized CPU attention kernel (Fig. 10's
+//!   1/3.1 efficiency).
+//! * **vLLM (CPU-offload)**: all compute on the GPU; model weights *and*
+//!   the active KV cache stream over PCIe every iteration, so the link
+//!   is the only lane that matters.
+
+mod moe_lightning;
+mod vllm;
+
+pub use moe_lightning::MoeLightningSim;
+pub use vllm::VllmSim;

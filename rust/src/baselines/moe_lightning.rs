@@ -1,0 +1,199 @@
+//! MoE-Lightning-like policy: HRM-planned, two-phase (no prefill/decode
+//! overlap), CPU attention at auto-vectorized efficiency.
+
+use crate::config::{MachineSpec, ModelSpec};
+use crate::metrics::{PassRecord, RunReport, Trace};
+use crate::perfmodel::hrm::HrmModel;
+use crate::simhw::CostModel;
+
+/// Fig.-10: the auto-vectorized kernel reaches ~1/3.1 of the optimized
+/// kernel's full-thread throughput.
+pub const AUTOVEC_CPU_ATTN_EFF: f64 = 0.8 / 3.1;
+
+/// The baseline simulator.
+pub struct MoeLightningSim {
+    pub machine: MachineSpec,
+    pub model: ModelSpec,
+    /// CPU memory available for weights + KV (its §7 "memory profile").
+    pub cpu_mem_bytes: u64,
+    pub hrm: HrmModel,
+    /// Attention-kernel efficiency of the baseline (default: the
+    /// auto-vectorized 1/3.1 of Fig. 10; ablations override it).
+    pub cpu_attn_eff: f64,
+}
+
+impl MoeLightningSim {
+    pub fn new(model: ModelSpec, kv_gb: u64) -> Self {
+        let machine = MachineSpec::paper_testbed();
+        // §7: profile = model size + KV size + 30 GB overhead.
+        let cpu_mem_bytes = model.model_bytes() + (kv_gb << 30) + (30 << 30);
+        let mut hrm = HrmModel::new(machine.clone(), model.clone());
+        hrm.cpu_attn_efficiency = AUTOVEC_CPU_ATTN_EFF;
+        MoeLightningSim { machine, model, cpu_mem_bytes, hrm, cpu_attn_eff: AUTOVEC_CPU_ATTN_EFF }
+    }
+
+    /// The plan the baseline runs: the artifact's published plan when one
+    /// exists for (p, g), else the HRM roofline plan.
+    fn decode_batch(&self, p: usize, g: usize) -> usize {
+        let kv_budget = self.cpu_mem_bytes - self.model.model_bytes() - (30 << 30);
+        let plan = self
+            .hrm
+            .artifact_plan(p, g)
+            .unwrap_or_else(|| self.hrm.plan(p, g, self.cpu_mem_bytes));
+        // Never exceed what the KV region can actually hold at peak.
+        let cap = (kv_budget / ((p + g) as u64 * self.model.kv_bytes_per_token()))
+            .max(1) as usize;
+        plan.decode_seqs.min(cap).max(1)
+    }
+
+    /// Run `k` uniform (p, g) requests through the two-phase schedule.
+    /// Returns the trace on the virtual clock.
+    pub fn run_uniform(&self, p: usize, g: usize, k: usize) -> (Trace, RunReport) {
+        let costs = CostModel {
+            machine: &self.machine,
+            model: &self.model,
+            cpu_attn_eff: self.cpu_attn_eff,
+        };
+        let gbs = self.decode_batch(p, g);
+        let mut trace = Trace::new(0);
+        let mut now = 0.0;
+        let mut pass_id = 0;
+        let mut remaining = k;
+
+        while remaining > 0 {
+            let batch = remaining.min(gbs);
+
+            // --- Prefill phase: GPU-bound micro-batches; the weight sweep
+            // streams once per full-model pass over the batch. IO and GPU
+            // are pipelined *within* the phase, but decode is NOT running,
+            // so the CPU-attention lane idles (§3.2, Fig. 1).
+            let prefill_tokens = batch * p;
+            let gpu = costs.gpu_time(prefill_tokens);
+            // Every full-model pass needs one δ sweep; a compute-saturated
+            // prefill amortizes it entirely, a small batch pays δ.
+            let io = costs.delta().max(gpu);
+            let dur = io;
+            now += dur;
+            trace.push(PassRecord {
+                pass_id,
+                t_end: now,
+                duration: dur,
+                prefill_tokens,
+                decode_tokens: 0,
+                io_time: costs.delta(),
+                gpu_time: gpu,
+                cpu_time: 0.0,
+                active_decode: 0,
+                ..Default::default()
+            });
+            pass_id += 1;
+
+            // --- Decode phase: g iterations; each sweeps the weights while
+            // the slow CPU attention scans every sequence's context. No
+            // prefill refills the batch as sequences finish (§3.2: GPU
+            // utilization collapses to ~16.5%).
+            for step in 0..g {
+                let ctx = p + step;
+                let kv_tokens = (batch * ctx) as u64;
+                let lanes = costs.overlapped_iter(batch, kv_tokens);
+                // Without VSLPipe's compute-graph regrouping (§6.4), each
+                // layer's CPU attention serializes between GPU task A and
+                // task B: the attention lane sits ON the critical path
+                // rather than overlapping the next partition's GEMMs
+                // (Fig. 1's idle gaps).
+                let dur = lanes.io_contended.max(lanes.gpu) + lanes.cpu;
+                now += dur;
+                let finished = if step + 1 == g { batch } else { 0 };
+                trace.push(PassRecord {
+                    pass_id,
+                    t_end: now,
+                    duration: dur,
+                    prefill_tokens: 0,
+                    decode_tokens: batch,
+                    generated: batch,
+                    finished,
+                    io_time: lanes.io_contended,
+                    gpu_time: lanes.gpu,
+                    cpu_time: lanes.cpu,
+                    active_decode: batch,
+                    ..Default::default()
+                });
+                pass_id += 1;
+            }
+            remaining -= batch;
+        }
+        let report = RunReport::from_trace(&trace, k);
+        (trace, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simhw::{run_uniform as lens_run, SimConfig};
+
+    fn sim(kv_gb: u64) -> MoeLightningSim {
+        MoeLightningSim::new(ModelSpec::mixtral_8x7b(), kv_gb)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let (_, report) = sim(70).run_uniform(98, 32, 5000);
+        assert_eq!(report.requests, 5000);
+        assert_eq!(report.generated_tokens, 5000 * 32);
+    }
+
+    #[test]
+    fn moe_lens_beats_moe_lightning() {
+        // Fig. 11's headline shape: MoE-Lens wins everywhere, and by more
+        // at a larger KV cache (paper: 3.2x avg at 70 GB, 6.4x at 210 GB).
+        // K must be large enough to leave the pipeline-fill regime.
+        let mut speedups = Vec::new();
+        for kv_gb in [70u64, 210] {
+            let k = 10_000usize;
+            let (_, light) = sim(kv_gb).run_uniform(98, 64, k);
+            let (_, lens) = lens_run(
+                SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), kv_gb),
+                98,
+                64,
+                k,
+            );
+            let speedup = lens.generation_throughput / light.generation_throughput;
+            assert!(
+                speedup > 1.1,
+                "kv={kv_gb}GB: lens {} vs lightning {} (x{speedup:.2})",
+                lens.generation_throughput,
+                light.generation_throughput
+            );
+            speedups.push(speedup);
+        }
+        assert!(
+            speedups[1] > speedups[0],
+            "larger KV must widen the gap: {speedups:?}"
+        );
+    }
+
+    #[test]
+    fn decode_phase_gpu_utilization_is_low() {
+        // §3.2: "GPU utilization drops to 16.5% during decode".
+        let (trace, _) = sim(70).run_uniform(98, 32, 3000);
+        let decode_passes: Vec<_> =
+            trace.passes.iter().filter(|p| p.decode_tokens > 0).collect();
+        let util: f64 = decode_passes.iter().map(|p| p.gpu_time / p.duration).sum::<f64>()
+            / decode_passes.len() as f64;
+        assert!(util < 0.5, "decode GPU util {util} should be far from 1");
+    }
+
+    #[test]
+    fn artifact_plans_drive_table1_rows() {
+        // With enough CPU memory the artifact plan is used verbatim...
+        let s = sim(141); // Table 1's machine: 265 GB total - 94 - 30
+        assert_eq!(s.decode_batch(98, 32), 4840);
+        // ...a smaller KV region clamps it at peak-length capacity...
+        let tight = sim(70);
+        let cap = (70u64 << 30) / (130 * ModelSpec::mixtral_8x7b().kv_bytes_per_token());
+        assert_eq!(tight.decode_batch(98, 32), cap as usize);
+        // ...and unknown configs fall back to the HRM roofline plan.
+        assert!(s.decode_batch(64, 48) > 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Configuration: model architectures, hardware profiles, and workload
+//! descriptors. The paper-scale entries (Mixtral-8x7B/8x22B, DBRX; A40/L40/
+//! A100/T4/L4; MTBench/RAG/AIME) drive the performance model and the
+//! hardware simulator; the executable entries (`tiny`, `small`) mirror
+//! `python/compile/config.py` and are cross-checked against the AOT
+//! manifest at load time.
+
+mod hardware;
+mod model;
+mod workload;
+
+pub use hardware::{GpuSpec, HostSpec, MachineSpec};
+pub use model::ModelSpec;
+pub use workload::{WorkloadSpec, MTBENCH, RAG, AIME};

@@ -1,0 +1,258 @@
+//! MoE model architecture specs.
+//!
+//! `ModelSpec` carries the dimensions the performance model (Eqs. 1–14)
+//! and the simulator need. The paper-scale entries use the published
+//! architectures; `tiny`/`small` mirror `python/compile/config.py` and are
+//! actually executed through PJRT.
+
+/// Architecture of a Mixtral-style MoE transformer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,      // h
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub n_experts: usize,    // N_e
+    pub top_k: usize,        // N_k
+    pub d_ff: usize,         // h_i
+    /// Bytes per weight element (BF16 for the paper models, F32 for the
+    /// executable configs — matching what the AOT path exports).
+    pub weight_bytes: usize,
+    /// Bytes per KV-cache element (BF16, §5.3).
+    pub kv_bytes: usize,
+}
+
+impl ModelSpec {
+    pub const fn gqa_group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub const fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub const fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// `m` in Eq. 1: expert intermediate expansion factor h_i / h.
+    pub fn m_ratio(&self) -> f64 {
+        self.d_ff as f64 / self.d_model as f64
+    }
+
+    /// Total parameter count (embedding + per-layer attn/router/experts +
+    /// final norm + LM head).
+    pub fn param_count(&self) -> u64 {
+        let h = self.d_model as u64;
+        let attn = h * self.q_dim() as u64 * 2 + h * self.kv_dim() as u64 * 2;
+        let router = h * self.n_experts as u64;
+        let experts = 3 * h * self.d_ff as u64 * self.n_experts as u64;
+        let norms = 2 * h;
+        let per_layer = attn + router + experts + norms;
+        let emb = self.vocab as u64 * h;
+        emb * 2 + per_layer * self.n_layers as u64 + h
+    }
+
+    /// Model size in bytes at `weight_bytes` precision.
+    pub fn model_bytes(&self) -> u64 {
+        self.param_count() * self.weight_bytes as u64
+    }
+
+    /// Per-layer weight bytes (the data mover's transfer granularity).
+    pub fn layer_bytes(&self) -> u64 {
+        let h = self.d_model as u64;
+        let attn = h * self.q_dim() as u64 * 2 + h * self.kv_dim() as u64 * 2;
+        let router = h * self.n_experts as u64;
+        let experts = 3 * h * self.d_ff as u64 * self.n_experts as u64;
+        (attn + router + experts + 2 * h) * self.weight_bytes as u64
+    }
+
+    /// KV-cache bytes per token (both K and V, all layers).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.n_layers as u64 * self.kv_dim() as u64 * self.kv_bytes as u64
+    }
+
+    /// FLOPs per token for the *activated* GEMM path (dense per-token work:
+    /// QKVO projections + top-k experts; 2 FLOPs per MAC).
+    pub fn flops_per_token(&self) -> f64 {
+        let h = self.d_model as f64;
+        let attn = 2.0 * (h * self.q_dim() as f64 * 2.0 + h * self.kv_dim() as f64 * 2.0);
+        let experts = 2.0 * 3.0 * h * self.d_ff as f64 * self.top_k as f64;
+        (attn + experts) * self.n_layers as f64
+    }
+
+    /// All specs (paper-scale + executable).
+    pub fn all() -> Vec<ModelSpec> {
+        vec![
+            Self::mixtral_8x7b(),
+            Self::mixtral_8x22b(),
+            Self::dbrx(),
+            Self::tiny(),
+            Self::small(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        Self::all().into_iter().find(|m| m.name == name)
+    }
+
+    /// Mixtral-8x7B: 47B params, 94 GB in BF16.
+    pub fn mixtral_8x7b() -> ModelSpec {
+        ModelSpec {
+            name: "mixtral-8x7b",
+            vocab: 32_000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            n_experts: 8,
+            top_k: 2,
+            d_ff: 14_336,
+            weight_bytes: 2,
+            kv_bytes: 2,
+        }
+    }
+
+    /// Mixtral-8x22B: 141B params, 282 GB in BF16.
+    pub fn mixtral_8x22b() -> ModelSpec {
+        ModelSpec {
+            name: "mixtral-8x22b",
+            vocab: 32_768,
+            d_model: 6144,
+            n_layers: 56,
+            n_heads: 48,
+            n_kv_heads: 8,
+            head_dim: 128,
+            n_experts: 8,
+            top_k: 2,
+            d_ff: 16_384,
+            weight_bytes: 2,
+            kv_bytes: 2,
+        }
+    }
+
+    /// DBRX: 132B params, 264 GB in BF16 (16 experts, top-4).
+    pub fn dbrx() -> ModelSpec {
+        ModelSpec {
+            name: "dbrx",
+            vocab: 100_352,
+            d_model: 6144,
+            n_layers: 40,
+            n_heads: 48,
+            n_kv_heads: 8,
+            head_dim: 128,
+            n_experts: 16,
+            top_k: 4,
+            d_ff: 10_752,
+            weight_bytes: 2,
+            kv_bytes: 2,
+        }
+    }
+
+    /// Executable config mirroring python/compile/config.py TINY.
+    pub fn tiny() -> ModelSpec {
+        ModelSpec {
+            name: "tiny",
+            vocab: 512,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            n_experts: 4,
+            top_k: 2,
+            d_ff: 128,
+            weight_bytes: 4,
+            kv_bytes: 2,
+        }
+    }
+
+    /// Executable config mirroring python/compile/config.py SMALL.
+    pub fn small() -> ModelSpec {
+        ModelSpec {
+            name: "small",
+            vocab: 2048,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 2,
+            head_dim: 32,
+            n_experts: 8,
+            top_k: 2,
+            d_ff: 512,
+            weight_bytes: 4,
+            kv_bytes: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixtral_8x7b_matches_published_size() {
+        let m = ModelSpec::mixtral_8x7b();
+        let params = m.param_count() as f64;
+        assert!((params / 1e9 - 47.0).abs() < 1.0, "params={params:.3e}");
+        let gb = m.model_bytes() as f64 / 1e9;
+        assert!((gb - 94.0).abs() < 3.0, "size={gb} GB");
+    }
+
+    #[test]
+    fn mixtral_8x22b_matches_published_size() {
+        let m = ModelSpec::mixtral_8x22b();
+        assert!((m.param_count() as f64 / 1e9 - 141.0).abs() < 4.0);
+    }
+
+    #[test]
+    fn dbrx_matches_published_size() {
+        let m = ModelSpec::dbrx();
+        assert!((m.param_count() as f64 / 1e9 - 132.0).abs() < 4.0);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_mixtral() {
+        // 2 (K+V) * 32 layers * 8 heads * 128 dim * 2 bytes = 131072 B
+        let m = ModelSpec::mixtral_8x7b();
+        assert_eq!(m.kv_bytes_per_token(), 131_072);
+    }
+
+    #[test]
+    fn layer_bytes_sum_close_to_model_bytes() {
+        let m = ModelSpec::mixtral_8x7b();
+        let layers = m.layer_bytes() * m.n_layers as u64;
+        let total = m.model_bytes();
+        // embedding + head are the only difference
+        let emb = 2 * m.vocab as u64 * m.d_model as u64 * m.weight_bytes as u64;
+        assert!(layers <= total);
+        assert!(total - layers <= emb + 1_000_000);
+    }
+
+    #[test]
+    fn gqa_group_sizes() {
+        assert_eq!(ModelSpec::mixtral_8x7b().gqa_group(), 4);
+        assert_eq!(ModelSpec::dbrx().gqa_group(), 6);
+        assert_eq!(ModelSpec::tiny().gqa_group(), 2);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in ModelSpec::all() {
+            assert_eq!(ModelSpec::by_name(m.name).unwrap(), m);
+        }
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn flops_per_token_scale() {
+        // Mixtral-8x7B activates ~13B params per token -> ~26 GFLOPs/token
+        let m = ModelSpec::mixtral_8x7b();
+        let gf = m.flops_per_token() / 1e9;
+        assert!(gf > 20.0 && gf < 32.0, "{gf} GFLOPs/token");
+    }
+}

@@ -1,0 +1,313 @@
+//! The decode-attention kernel bodies: scalar baseline vs hand-optimized.
+//!
+//! Both consume the cache as contiguous `[tokens × kv_dim]` BF16 runs
+//! (one run per KV block) and keep flash-decode running state, so they
+//! stream the KV cache exactly once per query group — the §5.3 arithmetic
+//! intensity the performance model assumes (`I_cpu_attn ≈ 1` FLOP/byte on
+//! the dot, ditto on the saxpby).
+
+use super::AttnShape;
+use crate::kvcache::{PagedKvCache, SeqId};
+use crate::util::bf16::bf16_to_f32;
+
+/// Kernel tier (§6.6's ladder). `Threaded` shards [`Tier::Optimized`]
+/// across a [`super::ThreadPool`]; within one thread it is identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Scalar,
+    Optimized,
+}
+
+/// Attend one query against one sequence's cached context (all heads).
+pub(super) fn attend_one(
+    cache: &PagedKvCache,
+    layer: usize,
+    shape: AttnShape,
+    seq: SeqId,
+    q: &[f32],
+    out: &mut [f32],
+    tier: Tier,
+) {
+    match tier {
+        Tier::Scalar => attend_scalar(cache, layer, shape, seq, q, out),
+        Tier::Optimized => attend_optimized(cache, layer, shape, seq, q, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar baseline ("auto-vectorized"): head-major loops, one KV pass per
+// *query* head (so a GQA group re-reads its KV s times), plain indexing.
+// ---------------------------------------------------------------------------
+
+fn attend_scalar(
+    cache: &PagedKvCache,
+    layer: usize,
+    shape: AttnShape,
+    seq: SeqId,
+    q: &[f32],
+    out: &mut [f32],
+) {
+    let hd = shape.head_dim;
+    let kv_dim = shape.kv_dim();
+    let group = shape.gqa_group();
+    let scale = 1.0 / (hd as f32).sqrt();
+    for h in 0..shape.n_heads {
+        let kvh = h / group;
+        let qh = &q[h * hd..(h + 1) * hd];
+        let mut m = f32::NEG_INFINITY;
+        let mut denom = 0f32;
+        let mut acc = vec![0f32; hd];
+        cache.walk_context(seq, layer, |k_run, v_run, n| {
+            for t in 0..n {
+                let kt = &k_run[t * kv_dim + kvh * hd..t * kv_dim + (kvh + 1) * hd];
+                let vt = &v_run[t * kv_dim + kvh * hd..t * kv_dim + (kvh + 1) * hd];
+                let mut dot = 0f32;
+                for d in 0..hd {
+                    dot += qh[d] * bf16_to_f32(kt[d]);
+                }
+                let s = dot * scale;
+                if s > m {
+                    let corr = (m - s).exp();
+                    for a in acc.iter_mut() {
+                        *a *= corr;
+                    }
+                    denom *= corr;
+                    m = s;
+                }
+                let w = (s - m).exp();
+                denom += w;
+                for d in 0..hd {
+                    acc[d] += w * bf16_to_f32(vt[d]);
+                }
+            }
+        });
+        let inv = 1.0 / denom;
+        for d in 0..hd {
+            out[h * hd + d] = acc[d] * inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Optimized kernel: one KV pass per *group* (all s query heads share the
+// loaded K/V), stack-staged f32 tiles, 8-lane unrolled dot / saxpby.
+// ---------------------------------------------------------------------------
+
+/// Max head_dim the stack tiles support (covers all paper models: 128).
+const MAX_HD: usize = 256;
+
+/// Flash running state for one GQA group of `s` query heads.
+struct GroupState {
+    m: Vec<f32>,
+    denom: Vec<f32>,
+    /// [s][hd] accumulators, flattened.
+    acc: Vec<f32>,
+}
+
+#[inline(always)]
+fn dot_unrolled(a: &[f32], b: &[f32], n: usize) -> f32 {
+    // 8-lane partial sums: independent accumulators keep the FMA chain
+    // parallel (what the intrinsics version does with AVX registers).
+    let mut s = [0f32; 8];
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        s[0] += a[i] * b[i];
+        s[1] += a[i + 1] * b[i + 1];
+        s[2] += a[i + 2] * b[i + 2];
+        s[3] += a[i + 3] * b[i + 3];
+        s[4] += a[i + 4] * b[i + 4];
+        s[5] += a[i + 5] * b[i + 5];
+        s[6] += a[i + 6] * b[i + 6];
+        s[7] += a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7])) + tail
+}
+
+#[inline(always)]
+fn saxpy_unrolled(acc: &mut [f32], x: &[f32], w: f32, n: usize) {
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        acc[i] += w * x[i];
+        acc[i + 1] += w * x[i + 1];
+        acc[i + 2] += w * x[i + 2];
+        acc[i + 3] += w * x[i + 3];
+        acc[i + 4] += w * x[i + 4];
+        acc[i + 5] += w * x[i + 5];
+        acc[i + 6] += w * x[i + 6];
+        acc[i + 7] += w * x[i + 7];
+    }
+    for i in chunks * 8..n {
+        acc[i] += w * x[i];
+    }
+}
+
+#[inline(always)]
+fn upconvert(dst: &mut [f32], src: &[u16], n: usize) {
+    // BF16 -> f32 is a 16-bit shift; written as a flat loop so the
+    // compiler vectorizes the widening.
+    for i in 0..n {
+        dst[i] = f32::from_bits((src[i] as u32) << 16);
+    }
+}
+
+fn attend_optimized(
+    cache: &PagedKvCache,
+    layer: usize,
+    shape: AttnShape,
+    seq: SeqId,
+    q: &[f32],
+    out: &mut [f32],
+) {
+    let hd = shape.head_dim;
+    assert!(hd <= MAX_HD, "head_dim {hd} exceeds kernel tile size");
+    let kv_dim = shape.kv_dim();
+    let group = shape.gqa_group();
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut states: Vec<GroupState> = (0..shape.n_kv_heads)
+        .map(|_| GroupState {
+            m: vec![f32::NEG_INFINITY; group],
+            denom: vec![0.0; group],
+            acc: vec![0.0; group * hd],
+        })
+        .collect();
+
+    let mut k_tile = [0f32; MAX_HD];
+    let mut v_tile = [0f32; MAX_HD];
+
+    cache.walk_context(seq, layer, |k_run, v_run, n| {
+        for t in 0..n {
+            let row = t * kv_dim;
+            for kvh in 0..shape.n_kv_heads {
+                let off = row + kvh * hd;
+                upconvert(&mut k_tile, &k_run[off..off + hd], hd);
+                upconvert(&mut v_tile, &v_run[off..off + hd], hd);
+                let st = &mut states[kvh];
+                for gi in 0..group {
+                    let h = kvh * group + gi;
+                    let qh = &q[h * hd..(h + 1) * hd];
+                    let s = dot_unrolled(qh, &k_tile, hd) * scale;
+                    let acc = &mut st.acc[gi * hd..(gi + 1) * hd];
+                    if s > st.m[gi] {
+                        let corr = (st.m[gi] - s).exp();
+                        for a in acc.iter_mut() {
+                            *a *= corr;
+                        }
+                        st.denom[gi] *= corr;
+                        st.m[gi] = s;
+                    }
+                    let w = (s - st.m[gi]).exp();
+                    st.denom[gi] += w;
+                    saxpy_unrolled(acc, &v_tile, w, hd);
+                }
+            }
+        }
+    });
+
+    for kvh in 0..shape.n_kv_heads {
+        let st = &states[kvh];
+        for gi in 0..group {
+            let h = kvh * group + gi;
+            let inv = 1.0 / st.denom[gi];
+            let acc = &st.acc[gi * hd..(gi + 1) * hd];
+            let dst = &mut out[h * hd..(h + 1) * hd];
+            for d in 0..hd {
+                dst[d] = acc[d] * inv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense entry point (golden vectors, Fig.-10 bench): contexts laid out as
+// [n_seq, l_max, kv_dim] BF16, per-sequence true lengths in `lens`.
+// ---------------------------------------------------------------------------
+
+/// Decode attention over dense BF16 context buffers. `q` is
+/// `[n_seq, n_heads*head_dim]`; output is written per sequence into `out`.
+pub fn decode_attention_dense(
+    shape: AttnShape,
+    q: &[f32],
+    k_bits: &[u16],
+    v_bits: &[u16],
+    lens: &[usize],
+    l_max: usize,
+    out: &mut [f32],
+    tier: Tier,
+) {
+    use crate::kvcache::KvLayout;
+    let kv_dim = shape.kv_dim();
+    let q_dim = shape.q_dim();
+    assert_eq!(q.len(), lens.len() * q_dim);
+    assert_eq!(k_bits.len(), lens.len() * l_max * kv_dim);
+    assert_eq!(out.len(), lens.len() * q_dim);
+
+    // Stage through a single-layer paged cache with block_size = l_max so
+    // every sequence is one contiguous run — zero-cost adapter that keeps
+    // one kernel implementation.
+    let mut cache =
+        PagedKvCache::new(KvLayout::new(l_max, lens.len()), 1, kv_dim);
+    for (i, &len) in lens.iter().enumerate() {
+        let id = i as SeqId;
+        cache.register(id);
+        cache.grow(id, len);
+        for pos in 0..len {
+            let base = (i * l_max + pos) * kv_dim;
+            let kf: Vec<f32> =
+                k_bits[base..base + kv_dim].iter().map(|&b| bf16_to_f32(b)).collect();
+            let vf: Vec<f32> =
+                v_bits[base..base + kv_dim].iter().map(|&b| bf16_to_f32(b)).collect();
+            cache.write(id, 0, pos, &kf, &vf);
+        }
+    }
+    for (i, _) in lens.iter().enumerate() {
+        attend_one(
+            &cache,
+            0,
+            shape,
+            i as SeqId,
+            &q[i * q_dim..(i + 1) * q_dim],
+            &mut out[i * q_dim..(i + 1) * q_dim],
+            tier,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| (i as f32) * 0.1 - 1.0).collect();
+        let b: Vec<f32> = (0..37).map(|i| 0.5 - (i as f32) * 0.05).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let fast = dot_unrolled(&a, &b, 37);
+        assert!((naive - fast).abs() < 1e-4, "{naive} vs {fast}");
+    }
+
+    #[test]
+    fn saxpy_unrolled_matches_naive() {
+        let mut acc = vec![1.0f32; 19];
+        let x: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        saxpy_unrolled(&mut acc, &x, 0.5, 19);
+        for (i, a) in acc.iter().enumerate() {
+            assert_eq!(*a, 1.0 + 0.5 * i as f32);
+        }
+    }
+
+    #[test]
+    fn upconvert_is_exact() {
+        use crate::util::bf16::f32_to_bf16;
+        let src: Vec<u16> = [-2.5f32, 0.0, 1.5, 100.0].iter().map(|&x| f32_to_bf16(x)).collect();
+        let mut dst = [0f32; 4];
+        upconvert(&mut dst, &src, 4);
+        assert_eq!(dst, [-2.5, 0.0, 1.5, 100.0]);
+    }
+}

@@ -1,0 +1,241 @@
+//! CPU decode attention (§6.6) — the host-side half of the hybrid system.
+//!
+//! The paper's CPU Task (C): flash-decode attention over the paged BF16
+//! KV cache, computed in f32. Three tiers reproduce §6.6's optimization
+//! ladder:
+//!
+//! * [`Tier::Scalar`] — the "auto-vectorized" baseline: straightforward
+//!   loops, one query head at a time, whatever LLVM makes of them.
+//! * [`Tier::Optimized`] — the hand-optimized kernel: GQA-grouped KV
+//!   walks (one cache pass serves all `s` query heads of a group),
+//!   8-lane unrolled dot/saxpby bodies shaped for the vector units, and
+//!   block-contiguous strides from the paged store.
+//! * [`Tier::Threaded`] — the optimized kernel sharded over worker
+//!   threads by sequence (scales until the memory controller saturates —
+//!   Fig. 10's knee).
+//!
+//! Numerics: BF16 loads are up-converted to f32 (§5.3); the softmax is
+//! the running-max/running-sum flash form, matching the JAX oracle
+//! `kernels/ref.py::ref_decode_attention` bit-for-bit in structure.
+
+mod kernel;
+mod threaded;
+
+pub use kernel::{decode_attention_dense, Tier};
+pub use threaded::ThreadPool;
+
+use crate::kvcache::{PagedKvCache, SeqId};
+
+/// One decode query: a sequence and its current query vector
+/// (`n_heads * head_dim` f32, laid out head-major).
+pub struct DecodeQuery<'a> {
+    pub seq: SeqId,
+    pub q: &'a [f32],
+}
+
+/// Geometry the kernel needs (a subset of `ModelSpec`).
+#[derive(Debug, Clone, Copy)]
+pub struct AttnShape {
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl AttnShape {
+    pub fn gqa_group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+}
+
+/// Decode attention for a batch of queries against the paged cache, one
+/// layer. Writes each result (`n_heads * head_dim` f32) into `out`
+/// (concatenated, query-major). The scalar/optimized tiers run on the
+/// caller's thread; use [`ThreadPool::decode_attention`] for the threaded
+/// tier.
+pub fn decode_attention(
+    cache: &PagedKvCache,
+    layer: usize,
+    shape: AttnShape,
+    queries: &[DecodeQuery],
+    out: &mut [f32],
+    tier: Tier,
+) {
+    let q_dim = shape.q_dim();
+    assert_eq!(out.len(), queries.len() * q_dim);
+    assert_eq!(cache.kv_dim(), shape.kv_dim());
+    for (qi, query) in queries.iter().enumerate() {
+        assert_eq!(query.q.len(), q_dim);
+        let dst = &mut out[qi * q_dim..(qi + 1) * q_dim];
+        kernel::attend_one(cache, layer, shape, query.seq, query.q, dst, tier);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvLayout;
+    use crate::util::bf16::bf16_round;
+    use crate::util::rng::Rng;
+
+    /// Pure-f64 oracle mirroring ref.py::ref_decode_attention.
+    pub(crate) fn oracle(
+        shape: AttnShape,
+        q: &[f32],
+        k_ctx: &[f32], // [len, kv_dim], already bf16-rounded
+        v_ctx: &[f32],
+        len: usize,
+    ) -> Vec<f32> {
+        let (nh, hd) = (shape.n_heads, shape.head_dim);
+        let group = shape.gqa_group();
+        let scale = 1.0 / (hd as f64).sqrt();
+        let mut out = vec![0f32; nh * hd];
+        for h in 0..nh {
+            let kvh = h / group;
+            let qh = &q[h * hd..(h + 1) * hd];
+            let mut scores = vec![0f64; len];
+            for t in 0..len {
+                let kt = &k_ctx[t * shape.kv_dim() + kvh * hd..];
+                let mut dot = 0f64;
+                for d in 0..hd {
+                    dot += qh[d] as f64 * kt[d] as f64;
+                }
+                scores[t] = dot * scale;
+            }
+            let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut denom = 0f64;
+            for s in scores.iter_mut() {
+                *s = (*s - m).exp();
+                denom += *s;
+            }
+            for t in 0..len {
+                let vt = &v_ctx[t * shape.kv_dim() + kvh * hd..];
+                let w = scores[t] / denom;
+                for d in 0..hd {
+                    out[h * hd + d] += (w * vt[d] as f64) as f32;
+                }
+            }
+        }
+        out
+    }
+
+    pub(crate) fn build_cache(
+        shape: AttnShape,
+        lens: &[usize],
+        block_size: usize,
+        rng: &mut Rng,
+    ) -> (PagedKvCache, Vec<(Vec<f32>, Vec<f32>)>) {
+        let total_blocks: usize =
+            lens.iter().map(|&l| l.div_ceil(block_size)).sum::<usize>() + 1;
+        let mut cache =
+            PagedKvCache::new(KvLayout::new(block_size, total_blocks), 1, shape.kv_dim());
+        let mut dense = Vec::new();
+        for (i, &len) in lens.iter().enumerate() {
+            let id = i as SeqId;
+            cache.register(id);
+            cache.grow(id, len);
+            let mut kd = Vec::new();
+            let mut vd = Vec::new();
+            for pos in 0..len {
+                let k: Vec<f32> =
+                    (0..shape.kv_dim()).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                let v: Vec<f32> =
+                    (0..shape.kv_dim()).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                cache.write(id, 0, pos, &k, &v);
+                kd.extend(k.iter().map(|&x| bf16_round(x)));
+                vd.extend(v.iter().map(|&x| bf16_round(x)));
+            }
+            dense.push((kd, vd));
+        }
+        (cache, dense)
+    }
+
+    fn check_tier(tier: Tier) {
+        let shape = AttnShape { n_heads: 4, n_kv_heads: 2, head_dim: 16 };
+        let mut rng = Rng::new(42);
+        let lens = [1usize, 5, 16, 33];
+        let (cache, dense) = build_cache(shape, &lens, 16, &mut rng);
+        let qs: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|_| (0..shape.q_dim()).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect();
+        let queries: Vec<DecodeQuery> = qs
+            .iter()
+            .enumerate()
+            .map(|(i, q)| DecodeQuery { seq: i as SeqId, q })
+            .collect();
+        let mut out = vec![0f32; queries.len() * shape.q_dim()];
+        decode_attention(&cache, 0, shape, &queries, &mut out, tier);
+        for (i, &len) in lens.iter().enumerate() {
+            let (kd, vd) = &dense[i];
+            let want = oracle(shape, &qs[i], kd, vd, len);
+            let got = &out[i * shape.q_dim()..(i + 1) * shape.q_dim()];
+            for (a, b) in got.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "tier {tier:?} seq {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_matches_oracle() {
+        check_tier(Tier::Scalar);
+    }
+
+    #[test]
+    fn optimized_matches_oracle() {
+        check_tier(Tier::Optimized);
+    }
+
+    #[test]
+    fn tiers_agree_closely() {
+        // Scalar and optimized reorder float ops; results must still agree
+        // tightly because both accumulate in f32 over short contexts.
+        let shape = AttnShape { n_heads: 8, n_kv_heads: 2, head_dim: 32 };
+        let mut rng = Rng::new(3);
+        let lens = [40usize, 7];
+        let (cache, _) = build_cache(shape, &lens, 8, &mut rng);
+        let q: Vec<f32> = (0..shape.q_dim()).map(|_| rng.f32() - 0.5).collect();
+        let mut a = vec![0f32; shape.q_dim()];
+        let mut b = vec![0f32; shape.q_dim()];
+        let query = [DecodeQuery { seq: 0, q: &q }];
+        decode_attention(&cache, 0, shape, &query, &mut a, Tier::Scalar);
+        decode_attention(&cache, 0, shape, &query, &mut b, Tier::Optimized);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn single_token_context_is_identity_over_v() {
+        // len=1: softmax weight is 1, output == v (bf16-rounded).
+        let shape = AttnShape { n_heads: 2, n_kv_heads: 1, head_dim: 4 };
+        let mut rng = Rng::new(11);
+        let (cache, dense) = build_cache(shape, &[1], 4, &mut rng);
+        let q = vec![0.3f32; shape.q_dim()];
+        let mut out = vec![0f32; shape.q_dim()];
+        decode_attention(
+            &cache,
+            0,
+            shape,
+            &[DecodeQuery { seq: 0, q: &q }],
+            &mut out,
+            Tier::Optimized,
+        );
+        let v = &dense[0].1;
+        for h in 0..2 {
+            for d in 0..4 {
+                assert!((out[h * 4 + d] - v[d]).abs() < 1e-6);
+            }
+        }
+    }
+}

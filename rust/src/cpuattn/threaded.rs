@@ -1,0 +1,237 @@
+//! Thread-sharded decode attention (§6.6's full-thread tier).
+//!
+//! A long-lived worker pool (std threads + channels; the offline crate set
+//! has no rayon) shards decode queries by sequence. Work items carry raw
+//! pointers bounded by the call's scope — the pool joins a completion
+//! latch before `decode_attention` returns, upholding the borrow.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::kernel::{attend_one, Tier};
+use super::{AttnShape, DecodeQuery};
+use crate::kvcache::PagedKvCache;
+
+/// A batch-scoped work item: attend queries `lo..hi` of the batch.
+struct Job {
+    ctx: *const BatchCtx,
+    lo: usize,
+    hi: usize,
+}
+// Safety: `BatchCtx` outlives all jobs of a batch (completion latch), and
+// disjoint `lo..hi` ranges write disjoint `out` regions.
+unsafe impl Send for Job {}
+
+struct BatchCtx {
+    cache: *const PagedKvCache,
+    shape: AttnShape,
+    layer: usize,
+    queries: *const [DecodeQueryRaw],
+    out: *mut f32,
+    q_dim: usize,
+    remaining: AtomicUsize,
+    done: (Mutex<bool>, Condvar),
+}
+unsafe impl Sync for BatchCtx {}
+
+struct DecodeQueryRaw {
+    seq: crate::kvcache::SeqId,
+    q_ptr: *const f32,
+    q_len: usize,
+}
+
+/// Long-lived worker pool for the threaded attention tier.
+pub struct ThreadPool {
+    tx: Sender<Job>,
+    workers: Vec<JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `n_threads` workers (>= 1).
+    pub fn new(n_threads: usize) -> Self {
+        let n_threads = n_threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n_threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || worker_loop(rx))
+            })
+            .collect();
+        ThreadPool { tx, workers, n_threads }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Threaded decode attention over the batch: shards sequences across
+    /// the pool and blocks until every result is written to `out`.
+    pub fn decode_attention(
+        &self,
+        cache: &PagedKvCache,
+        layer: usize,
+        shape: AttnShape,
+        queries: &[DecodeQuery],
+        out: &mut [f32],
+    ) {
+        let q_dim = shape.q_dim();
+        assert_eq!(out.len(), queries.len() * q_dim);
+        if queries.is_empty() {
+            return;
+        }
+        let raw: Vec<DecodeQueryRaw> = queries
+            .iter()
+            .map(|q| DecodeQueryRaw { seq: q.seq, q_ptr: q.q.as_ptr(), q_len: q.q.len() })
+            .collect();
+
+        // Chunk so each worker gets ~2 jobs (cheap dynamic balancing for
+        // skewed context lengths).
+        let n = queries.len();
+        let chunk = n.div_ceil(self.n_threads * 2).max(1);
+        let n_jobs = n.div_ceil(chunk);
+
+        let ctx = BatchCtx {
+            cache,
+            shape,
+            layer,
+            queries: raw.as_slice(),
+            out: out.as_mut_ptr(),
+            q_dim,
+            remaining: AtomicUsize::new(n_jobs),
+            done: (Mutex::new(false), Condvar::new()),
+        };
+
+        for j in 0..n_jobs {
+            let lo = j * chunk;
+            let hi = ((j + 1) * chunk).min(n);
+            self.tx.send(Job { ctx: &ctx, lo, hi }).expect("pool alive");
+        }
+
+        // Completion latch: wait for all jobs of *this* batch.
+        let (lock, cvar) = &ctx.done;
+        let mut finished = lock.lock().unwrap();
+        while !*finished {
+            finished = cvar.wait(finished).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Closing the channel ends the worker loops.
+        let (tx, _) = channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // pool dropped
+        };
+        // Safety: see `Job`.
+        let ctx = unsafe { &*job.ctx };
+        let queries = unsafe { &*ctx.queries };
+        let cache = unsafe { &*ctx.cache };
+        for i in job.lo..job.hi {
+            let q = &queries[i];
+            let qs = unsafe { std::slice::from_raw_parts(q.q_ptr, q.q_len) };
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(ctx.out.add(i * ctx.q_dim), ctx.q_dim)
+            };
+            attend_one(cache, ctx.layer, ctx.shape, q.seq, qs, dst, Tier::Optimized);
+        }
+        if ctx.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let (lock, cvar) = &ctx.done;
+            // Notify while *holding* the lock: the waiter cannot observe
+            // `true` and destroy `ctx` until we release the guard, so the
+            // condvar outlives this notify (it is a stack-scoped latch).
+            let mut finished = lock.lock().unwrap();
+            *finished = true;
+            cvar.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpuattn::tests::{build_cache, oracle};
+    use crate::cpuattn::{decode_attention, Tier};
+    use crate::kvcache::SeqId;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn threaded_matches_single_thread() {
+        let shape = AttnShape { n_heads: 4, n_kv_heads: 2, head_dim: 16 };
+        let mut rng = Rng::new(9);
+        let lens: Vec<usize> = (0..17).map(|_| rng.range(1, 50)).collect();
+        let (cache, dense) = build_cache(shape, &lens, 8, &mut rng);
+        let qs: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|_| (0..shape.q_dim()).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let queries: Vec<DecodeQuery> = qs
+            .iter()
+            .enumerate()
+            .map(|(i, q)| DecodeQuery { seq: i as SeqId, q })
+            .collect();
+
+        let mut single = vec![0f32; queries.len() * shape.q_dim()];
+        decode_attention(&cache, 0, shape, &queries, &mut single, Tier::Optimized);
+
+        for n_threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(n_threads);
+            let mut out = vec![0f32; queries.len() * shape.q_dim()];
+            pool.decode_attention(&cache, 0, shape, &queries, &mut out);
+            assert_eq!(out, single, "n_threads={n_threads}");
+        }
+
+        // and against the oracle for good measure
+        for (i, &len) in lens.iter().enumerate() {
+            let (kd, vd) = &dense[i];
+            let want = oracle(shape, &qs[i], kd, vd, len);
+            let got = &single[i * shape.q_dim()..(i + 1) * shape.q_dim()];
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let pool = ThreadPool::new(2);
+        let shape = AttnShape { n_heads: 2, n_kv_heads: 1, head_dim: 8 };
+        let cache = crate::kvcache::PagedKvCache::new(
+            crate::kvcache::KvLayout::new(4, 2),
+            1,
+            shape.kv_dim(),
+        );
+        let mut out = [];
+        pool.decode_attention(&cache, 0, shape, &[], &mut out);
+    }
+
+    #[test]
+    fn pool_survives_many_batches() {
+        let pool = ThreadPool::new(3);
+        let shape = AttnShape { n_heads: 2, n_kv_heads: 1, head_dim: 8 };
+        let mut rng = Rng::new(1);
+        let (cache, _) = build_cache(shape, &[5, 5, 5], 4, &mut rng);
+        let q: Vec<f32> = (0..shape.q_dim()).map(|_| rng.f32()).collect();
+        for _ in 0..50 {
+            let queries: Vec<DecodeQuery> =
+                (0..3).map(|i| DecodeQuery { seq: i as SeqId, q: &q }).collect();
+            let mut out = vec![0f32; 3 * shape.q_dim()];
+            pool.decode_attention(&cache, 0, shape, &queries, &mut out);
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Token-bucket assembly: pack a pass plan's rows into fixed-shape
+//! buckets (the compiled `n_tok` PJRT shape), the engine-side realization
+//! of VSLPipe's job partitioning (§6.4).
+//!
+//! Each bucket is one "partition" of the pipeline: prefill chunks stay
+//! whole within a bucket (segment attention must not cross buckets),
+//! decode rows are singletons and balance the remainder — mirroring the
+//! paper's "balancing the number of decode and prefill tokens" rule.
+
+use crate::kvcache::SeqId;
+use crate::sched::{PassPlan, Scheduler};
+
+/// Why a row is in the bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowKind {
+    Prefill,
+    Decode,
+}
+
+/// One scheduled token row.
+#[derive(Debug, Clone, Copy)]
+pub struct Row {
+    pub seq: SeqId,
+    pub kind: RowKind,
+    /// Token id fed at this row.
+    pub token: i32,
+    /// Logical position (RoPE) == KV position.
+    pub pos: usize,
+    /// Whether this row's head output becomes a generated token (every
+    /// decode row; the last row of a completing prefill chunk).
+    pub yields: bool,
+}
+
+/// A fixed-shape packed bucket.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub rows: Vec<Row>,
+    /// Capacity (compiled n_tok).
+    pub n_tok: usize,
+    /// Padded model inputs.
+    pub ids: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub seg_ids: Vec<i32>,
+}
+
+impl Bucket {
+    fn new(n_tok: usize) -> Self {
+        Bucket { rows: Vec::new(), n_tok, ids: Vec::new(), positions: Vec::new(), seg_ids: Vec::new() }
+    }
+
+    pub fn free(&self) -> usize {
+        self.n_tok - self.rows.len()
+    }
+
+    pub fn n_prefill(&self) -> usize {
+        self.rows.iter().filter(|r| r.kind == RowKind::Prefill).count()
+    }
+
+    pub fn n_decode(&self) -> usize {
+        self.rows.len() - self.n_prefill()
+    }
+
+    /// Finalize padded arrays. Segment ids: one id per (sequence, chunk)
+    /// run of prefill rows; decode and padding rows get -1 / -2 so the
+    /// prefill flash kernel masks them out (each decode row's real
+    /// attention runs on the CPU over the paged cache).
+    fn seal(&mut self) {
+        let n = self.n_tok;
+        self.ids = vec![0; n];
+        self.positions = vec![0; n];
+        self.seg_ids = vec![-2; n];
+        let mut seg = 0i32;
+        let mut prev: Option<(SeqId, usize)> = None;
+        for (i, r) in self.rows.iter().enumerate() {
+            self.ids[i] = r.token;
+            self.positions[i] = r.pos as i32;
+            match r.kind {
+                RowKind::Decode => {
+                    self.seg_ids[i] = -1;
+                    prev = None;
+                }
+                RowKind::Prefill => {
+                    // contiguous rows of the same sequence share a segment
+                    let cont = prev == Some((r.seq, r.pos.wrapping_sub(1)));
+                    if !cont {
+                        seg += 1;
+                    }
+                    self.seg_ids[i] = seg;
+                    prev = Some((r.seq, r.pos));
+                }
+            }
+        }
+    }
+}
+
+/// Pack a pass plan into buckets of `n_tok` rows.
+///
+/// Prefill chunks are placed first-fit (opening buckets as needed);
+/// decode rows then fill the least-loaded buckets, balancing lanes.
+pub fn pack_plan(plan: &PassPlan, sched: &Scheduler, n_tok: usize) -> Vec<Bucket> {
+    let mut buckets: Vec<Bucket> = Vec::new();
+
+    // Prefill chunks, largest first (first-fit decreasing).
+    let mut chunks: Vec<_> = plan.prefill.iter().collect();
+    chunks.sort_by_key(|c| std::cmp::Reverse(c.len));
+    for c in chunks {
+        assert!(c.len <= n_tok, "chunk {} exceeds bucket {}", c.len, n_tok);
+        let seq = sched
+            .sequence(c.id)
+            .unwrap_or_else(|| panic!("planned sequence {} not live", c.id));
+        let bi = match buckets.iter().position(|b| b.free() >= c.len) {
+            Some(bi) => bi,
+            None => {
+                buckets.push(Bucket::new(n_tok));
+                buckets.len() - 1
+            }
+        };
+        for j in 0..c.len {
+            let pos = c.start + j;
+            buckets[bi].rows.push(Row {
+                seq: c.id,
+                kind: RowKind::Prefill,
+                token: seq.token_at(pos),
+                pos,
+                yields: c.completes && j + 1 == c.len,
+            });
+        }
+    }
+
+    // Decode rows: pre-open enough buckets for the whole plan so the
+    // least-loaded placement actually balances lanes across partitions
+    // (the paper's "balancing the number of decode and prefill tokens").
+    let total = plan.total_tokens();
+    while buckets.len() * n_tok < total {
+        buckets.push(Bucket::new(n_tok));
+    }
+    for &(id, pos) in &plan.decode {
+        let seq = sched
+            .sequence(id)
+            .unwrap_or_else(|| panic!("decoding sequence {id} not live"));
+        // The fed token: the most recently generated one (pos>prompt) or
+        // the last prompt token (first decode step never happens here —
+        // completing prefill chunks yield it — so generated is non-empty).
+        let token = *seq.generated.last().expect("decode implies a generated token");
+        if buckets.iter().all(|b| b.free() == 0) {
+            buckets.push(Bucket::new(n_tok));
+        }
+        let bi = buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.free() > 0)
+            .min_by_key(|(_, b)| b.rows.len())
+            .map(|(i, _)| i)
+            .unwrap();
+        buckets[bi].rows.push(Row { seq: id, kind: RowKind::Decode, token, pos, yields: true });
+    }
+
+    for b in &mut buckets {
+        b.seal();
+    }
+    buckets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{KvLayout, PagedLayout};
+    use crate::model::Request;
+    use crate::sched::SchedConfig;
+
+    fn mk(budget: usize, chunk: usize) -> (Scheduler, PagedLayout) {
+        (
+            Scheduler::new(SchedConfig::new(budget, chunk)),
+            PagedLayout::new(KvLayout::new(4, 256)),
+        )
+    }
+
+    #[test]
+    fn prefill_chunks_stay_whole_and_segmented() {
+        let (mut s, mut kv) = mk(32, 8);
+        s.submit(Request::new(0, vec![10, 11, 12], 4));
+        s.submit(Request::new(1, vec![20, 21, 22, 23, 24], 4));
+        let plan = s.plan(&mut kv);
+        let buckets = pack_plan(&plan, &s, 8);
+        assert_eq!(buckets.len(), 1);
+        let b = &buckets[0];
+        assert_eq!(b.rows.len(), 8);
+        // FFD: seq 1 (len 5) first, then seq 0 (len 3)
+        assert_eq!(b.ids[..5], [20, 21, 22, 23, 24]);
+        assert_eq!(b.ids[5..8], [10, 11, 12]);
+        assert_eq!(b.positions[..5], [0, 1, 2, 3, 4]);
+        // two distinct segments, no -1s
+        assert_eq!(b.seg_ids[0], b.seg_ids[4]);
+        assert_eq!(b.seg_ids[5], b.seg_ids[7]);
+        assert_ne!(b.seg_ids[0], b.seg_ids[5]);
+        // both chunks complete -> last row of each yields
+        let yields: Vec<_> = b.rows.iter().map(|r| r.yields).collect();
+        assert_eq!(yields, [false, false, false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn decode_rows_fill_and_balance() {
+        let (mut s, mut kv) = mk(64, 16);
+        for i in 0..6 {
+            s.submit(Request::new(i, vec![1, 2], 4));
+        }
+        // pass 1: all prefill
+        let p1 = s.plan(&mut kv);
+        let toks: Vec<_> = p1.prefill.iter().map(|c| (c.id, 7)).collect();
+        s.complete(&toks, &mut kv);
+        // pass 2: 6 decode rows into buckets of 4
+        let p2 = s.plan(&mut kv);
+        assert_eq!(p2.decode_tokens(), 6);
+        let buckets = pack_plan(&p2, &s, 4);
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0].n_decode() + buckets[1].n_decode(), 6);
+        assert!((buckets[0].n_decode() as i64 - buckets[1].n_decode() as i64).abs() <= 1);
+        for b in &buckets {
+            for (i, r) in b.rows.iter().enumerate() {
+                assert_eq!(b.seg_ids[i], -1);
+                assert_eq!(r.token, 7, "fed token is the last generated one");
+                assert_eq!(r.pos, 2, "decode position continues the prompt");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_rows_are_masked() {
+        let (mut s, mut kv) = mk(8, 8);
+        s.submit(Request::new(0, vec![5; 3], 2));
+        let plan = s.plan(&mut kv);
+        let buckets = pack_plan(&plan, &s, 8);
+        let b = &buckets[0];
+        assert_eq!(&b.seg_ids[3..], &[-2, -2, -2, -2, -2]);
+        assert_eq!(&b.ids[3..], &[0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn mixed_pass_keeps_chunks_contiguous() {
+        let (mut s, mut kv) = mk(16, 4);
+        s.submit(Request::new(0, vec![1; 2], 8));
+        let p1 = s.plan(&mut kv);
+        s.complete(&[(0, 3)], &mut kv);
+        s.submit(Request::new(1, vec![2; 6], 8));
+        let p2 = s.plan(&mut kv);
+        assert_eq!(p2.decode_tokens(), 1);
+        assert_eq!(p2.prefill_tokens(), 4); // chunked at max_chunk
+        let buckets = pack_plan(&p2, &s, 8);
+        let b = &buckets[0];
+        // chunk rows contiguous with one segment id; decode row seg -1
+        let segs: Vec<_> = b.seg_ids[..5].to_vec();
+        assert_eq!(segs[..4], [1, 1, 1, 1]);
+        assert_eq!(segs[4], -1);
+    }
+}

@@ -1,0 +1,23 @@
+//! The VSLPipe execution engine (§6.4): the real serving path.
+//!
+//! Layers compose exactly as the paper's Fig. 8 divides them:
+//!
+//! * **GPU Task A** (PJRT `task_a`): RMSNorm + QKV projection + RoPE;
+//! * **CPU Task** (`cpuattn` thread pool): KV-cache store + decode
+//!   attention over the paged BF16 cache;
+//! * **GPU flash attention** (PJRT `prefill_attn`, Pallas L1): packed
+//!   segment-causal attention for prefill rows;
+//! * **GPU Task B** (PJRT `task_b`): O-projection + residual + MoE layer.
+//!
+//! Per layer, the CPU task runs on the attention pool *concurrently* with
+//! the GPU-side flash attention (the paper's phase overlap), weights
+//! stream through the double-buffered [`transfer::WeightBuffer`] via the
+//! Contiguous Data Mover, and stage boundaries are the only CPU↔GPU sync
+//! points. Python is never on this path: all five compute pieces are
+//! AOT-compiled PJRT executables.
+
+mod batch;
+mod vslpipe;
+
+pub use batch::{pack_plan, Bucket, Row, RowKind};
+pub use vslpipe::{EngineConfig, ServingEngine};

@@ -1,0 +1,397 @@
+//! The serving engine: scheduler + VSLPipe pipeline over the PJRT
+//! executables, the paged KV cache, the CPU attention pool, and the
+//! weight-streaming path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::batch::{pack_plan, Bucket, RowKind};
+use crate::cpuattn::{AttnShape, DecodeQuery, ThreadPool};
+use crate::kvcache::{KvLayout, PagedKvCache, SeqId};
+use crate::metrics::{PassRecord, RunReport, Stopwatch, Trace};
+use crate::model::Request;
+use crate::runtime::{to_f32, to_i32, Arg, Manifest, PjrtEngine};
+use crate::sched::{SchedConfig, Scheduler};
+use crate::transfer::{DataMover, LinkTiming, PcieLink, WeightBuffer, WeightFile};
+
+/// Engine deployment configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: String,
+    /// Model config name ("tiny" / "small").
+    pub model: String,
+    /// Paged-KV geometry (CPU-memory budget in blocks).
+    pub block_size: usize,
+    pub kv_blocks: usize,
+    /// Link clocking (unthrottled for correctness runs, throttled for
+    /// timing experiments).
+    pub timing: LinkTiming,
+    /// Data-mover packet size (§6.5; scaled down from 100 MB for the
+    /// small artifacts).
+    pub packet_bytes: usize,
+    /// CPU attention worker threads.
+    pub attn_threads: usize,
+    /// Scheduler token budget per pass (buckets of `n_tok` are opened as
+    /// needed up to this).
+    pub token_budget: usize,
+}
+
+impl EngineConfig {
+    /// Correctness-oriented defaults for a config name.
+    pub fn for_model(model: &str) -> Self {
+        EngineConfig {
+            artifacts_dir: "artifacts".into(),
+            model: model.into(),
+            block_size: 16,
+            kv_blocks: 256,
+            timing: LinkTiming::Unthrottled,
+            // §Perf iteration 2: 1 MB packets cost ~2x mover bandwidth vs
+            // large packets (5.9 vs 11.5 GB/s memcpy roof); 8 MB keeps
+            // §6.5's no-head-of-line-blocking property at small-model
+            // scale (paper-scale default stays 100 MB).
+            packet_bytes: 8 << 20,
+            attn_threads: 2,
+            token_budget: 0, // 0 => 2 buckets (set at load)
+        }
+    }
+}
+
+/// Per-pass lane timings (wall clock).
+#[derive(Debug, Clone, Copy, Default)]
+struct PassTimes {
+    io_wait: f64,
+    gpu: f64,
+    cpu_attn: f64,
+}
+
+/// The end-to-end serving engine.
+pub struct ServingEngine {
+    pub pjrt: PjrtEngine,
+    pub sched: Scheduler,
+    cache: PagedKvCache,
+    weights: Arc<WeightFile>,
+    buffer: Arc<WeightBuffer>,
+    link: Arc<PcieLink>,
+    mover: DataMover,
+    pool: ThreadPool,
+    shape: AttnShape,
+    /// Host-resident non-layer weights (embedding table, final norm, LM
+    /// head — the paper keeps only layer weights on the streaming path).
+    embedding: Vec<f32>,
+    final_norm: Vec<f32>,
+    lm_head: Vec<f32>,
+}
+
+impl ServingEngine {
+    pub fn load(cfg: EngineConfig) -> Result<ServingEngine> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let pjrt = PjrtEngine::load(&manifest, &cfg.model)?;
+        let rc = pjrt.config.clone();
+
+        let cm = manifest.config(&cfg.model)?;
+        let weights = Arc::new(WeightFile::load(&cfg.artifacts_dir, &cm.weights)?);
+        anyhow::ensure!(
+            weights.n_layers() == rc.n_layers,
+            "weight file has {} layers, config {}",
+            weights.n_layers(),
+            rc.n_layers
+        );
+        let layer_elems = weights.layer_data(0).len();
+        let buffer = Arc::new(WeightBuffer::new(layer_elems));
+        let link = Arc::new(PcieLink::new(cfg.timing));
+        let mover = DataMover::spawn(
+            Arc::clone(&weights),
+            Arc::clone(&buffer),
+            Arc::clone(&link),
+            cfg.packet_bytes,
+        );
+
+        let shape = AttnShape {
+            n_heads: rc.n_heads,
+            n_kv_heads: rc.n_kv_heads,
+            head_dim: rc.head_dim,
+        };
+        let cache = PagedKvCache::new(
+            KvLayout::new(cfg.block_size, cfg.kv_blocks),
+            rc.n_layers,
+            shape.kv_dim(),
+        );
+
+        let token_budget = if cfg.token_budget == 0 { 2 * rc.n_tok } else { cfg.token_budget };
+        let sched =
+            Scheduler::new(SchedConfig::new(token_budget, rc.n_tok).atomic());
+
+        let embedding = weights.tensor_data("embedding")?.to_vec();
+        let final_norm = weights.tensor_data("final_norm")?.to_vec();
+        let lm_head = weights.tensor_data("lm_head")?.to_vec();
+
+        Ok(ServingEngine {
+            pjrt,
+            sched,
+            cache,
+            weights,
+            buffer,
+            link,
+            mover,
+            pool: ThreadPool::new(cfg.attn_threads),
+            shape,
+            embedding,
+            final_norm,
+            lm_head,
+        })
+    }
+
+    pub fn n_tok(&self) -> usize {
+        self.pjrt.config.n_tok
+    }
+
+    pub fn link(&self) -> &PcieLink {
+        &self.link
+    }
+
+    /// Serve a batch of requests to completion. Returns the trace and the
+    /// run report; generated tokens live in `self.sched.finished()`.
+    pub fn run(&mut self, requests: Vec<Request>) -> Result<(Trace, RunReport)> {
+        let n_req = requests.len();
+        for r in &requests {
+            anyhow::ensure!(
+                r.prompt.len() + r.max_gen <= self.n_tok(),
+                "request {}: prompt({}) + max_gen({}) must fit the compiled \
+                 bucket ({}) so preemption replay stays atomic",
+                r.id,
+                r.prompt.len(),
+                r.max_gen,
+                self.n_tok()
+            );
+            anyhow::ensure!(
+                r.prompt.len() + r.max_gen <= self.pjrt.config.max_ctx,
+                "request {} exceeds max_ctx",
+                r.id
+            );
+        }
+        self.sched.submit_all(requests);
+
+        let mut trace = Trace::new(self.cache.layout().layout().n_blocks);
+        let run_clock = Stopwatch::start();
+        let mut pass_id = 0usize;
+        while !self.sched.is_done() {
+            let plan = self.sched.plan(self.cache.layout_mut());
+            let buckets = pack_plan(&plan, &self.sched, self.n_tok());
+            let pass_clock = Stopwatch::start();
+            let (tokens, times) = self.run_pass(&buckets)?;
+            let duration = pass_clock.elapsed().as_secs_f64();
+            let generated = tokens.len();
+            let finished = self.sched.complete(&tokens, self.cache.layout_mut());
+
+            trace.push(PassRecord {
+                pass_id,
+                t_end: run_clock.elapsed().as_secs_f64(),
+                duration,
+                prefill_tokens: plan.prefill_tokens(),
+                decode_tokens: plan.decode_tokens(),
+                generated,
+                finished,
+                preempted: plan.preempted.len(),
+                io_time: times.io_wait,
+                gpu_time: times.gpu,
+                cpu_time: times.cpu_attn,
+                kv_blocks_used: self.cache.layout().used_blocks(),
+                active_decode: self.sched.active_decode(),
+            });
+            pass_id += 1;
+        }
+        let report = RunReport::from_trace(&trace, n_req);
+        Ok((trace, report))
+    }
+
+    /// One VSLPipe pass over the packed buckets.
+    fn run_pass(&mut self, buckets: &[Bucket]) -> Result<(Vec<(SeqId, i32)>, PassTimes)> {
+        let rc = &self.pjrt.config;
+        let (n_tok, q_dim, kv_dim) = (rc.n_tok, rc.q_dim(), rc.kv_dim());
+        let n_layers = rc.n_layers;
+        let mut times = PassTimes::default();
+
+        // Prologue: prime the double buffer (§6.4 prologue).
+        self.mover.reset();
+        self.mover.request(0);
+        if n_layers > 1 {
+            self.mover.request(1);
+        }
+
+        // Embed every bucket.
+        let mut clock = Stopwatch::start();
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(buckets.len());
+        for b in buckets {
+            let outs = self
+                .pjrt
+                .embed
+                .run(&[Arg::I32(&b.ids), Arg::F32(&self.embedding)])
+                .context("embed")?;
+            xs.push(to_f32(&outs[0])?);
+        }
+        times.gpu += clock.lap().as_secs_f64();
+
+        for layer in 0..n_layers {
+            // Stage-boundary sync: weights for this layer must be staged.
+            clock.lap();
+            self.mover.wait_layer(layer);
+            times.io_wait += clock.lap().as_secs_f64();
+
+            // Stage the layer's weight literals ONCE (not per bucket) and
+            // outside the buffer lock — §Perf iteration 6: the big task_b
+            // expert tensors dominated H2D staging when copied per bucket.
+            let ta = &self.pjrt.task_a;
+            let tb = &self.pjrt.task_b;
+            let (a_w, b_w) = self.buffer.read(layer, |w| -> Result<_> {
+                let t = |name: &str| self.weights.tensor_in_layer(layer, name, w);
+                let a_w = [
+                    ta.literal(2, &Arg::F32(t("ln1")?))?,
+                    ta.literal(3, &Arg::F32(t("wq")?))?,
+                    ta.literal(4, &Arg::F32(t("wk")?))?,
+                    ta.literal(5, &Arg::F32(t("wv")?))?,
+                ];
+                let b_w = [
+                    tb.literal(2, &Arg::F32(t("wo")?))?,
+                    tb.literal(3, &Arg::F32(t("ln2")?))?,
+                    tb.literal(4, &Arg::F32(t("router")?))?,
+                    tb.literal(5, &Arg::F32(t("w1")?))?,
+                    tb.literal(6, &Arg::F32(t("w3")?))?,
+                    tb.literal(7, &Arg::F32(t("w2")?))?,
+                ];
+                Ok((a_w, b_w))
+            })?;
+
+            // --- GPU Task A per bucket, then KV-cache stores (CPU task's
+            // store half).
+            let mut qs: Vec<Vec<f32>> = Vec::with_capacity(buckets.len());
+            let mut ks: Vec<Vec<f32>> = Vec::with_capacity(buckets.len());
+            let mut vs: Vec<Vec<f32>> = Vec::with_capacity(buckets.len());
+            for (bi, b) in buckets.iter().enumerate() {
+                let x_lit = ta.literal(0, &Arg::F32(&xs[bi]))?;
+                let pos_lit = ta.literal(1, &Arg::I32(&b.positions))?;
+                let args =
+                    [&x_lit, &pos_lit, &a_w[0], &a_w[1], &a_w[2], &a_w[3]];
+                let outs = ta.run_prepared(&args).context("task_a")?;
+                qs.push(to_f32(&outs[0])?);
+                ks.push(to_f32(&outs[1])?);
+                vs.push(to_f32(&outs[2])?);
+            }
+            times.gpu += clock.lap().as_secs_f64();
+
+            for (bi, b) in buckets.iter().enumerate() {
+                for (ri, row) in b.rows.iter().enumerate() {
+                    self.cache.write(
+                        row.seq,
+                        layer,
+                        row.pos,
+                        &ks[bi][ri * kv_dim..(ri + 1) * kv_dim],
+                        &vs[bi][ri * kv_dim..(ri + 1) * kv_dim],
+                    );
+                }
+            }
+
+            // --- Phase overlap: CPU decode attention (pool) runs while the
+            // GPU computes packed flash attention for the prefill rows.
+            let mut decode_refs: Vec<(usize, usize)> = Vec::new(); // (bucket, row)
+            let mut queries: Vec<DecodeQuery> = Vec::new();
+            for (bi, b) in buckets.iter().enumerate() {
+                for (ri, row) in b.rows.iter().enumerate() {
+                    if row.kind == RowKind::Decode {
+                        decode_refs.push((bi, ri));
+                        queries.push(DecodeQuery {
+                            seq: row.seq,
+                            q: &qs[bi][ri * q_dim..(ri + 1) * q_dim],
+                        });
+                    }
+                }
+            }
+            let mut cpu_out = vec![0f32; queries.len() * q_dim];
+            let cpu_nanos = AtomicU64::new(0);
+            let mut prefill_attn: Vec<Vec<f32>> = Vec::with_capacity(buckets.len());
+
+            std::thread::scope(|s| -> Result<()> {
+                let cache = &self.cache;
+                let pool = &self.pool;
+                let shape = self.shape;
+                let cpu_nanos = &cpu_nanos;
+                let queries_ref = &queries;
+                let cpu_out_ref = &mut cpu_out;
+                let handle = s.spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    pool.decode_attention(cache, layer, shape, queries_ref, cpu_out_ref);
+                    cpu_nanos.store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                });
+                // GPU lane: packed flash attention per bucket.
+                for (bi, b) in buckets.iter().enumerate() {
+                    let outs = self
+                        .pjrt
+                        .prefill_attn
+                        .run(&[
+                            Arg::F32(&qs[bi]),
+                            Arg::F32(&ks[bi]),
+                            Arg::F32(&vs[bi]),
+                            Arg::I32(&b.seg_ids),
+                        ])
+                        .context("prefill_attn")?;
+                    prefill_attn.push(to_f32(&outs[0])?);
+                }
+                handle.join().expect("attention thread");
+                Ok(())
+            })?;
+            times.gpu += clock.lap().as_secs_f64();
+            times.cpu_attn += cpu_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+
+            // Merge: decode rows take the CPU result.
+            for (qi, &(bi, ri)) in decode_refs.iter().enumerate() {
+                prefill_attn[bi][ri * q_dim..(ri + 1) * q_dim]
+                    .copy_from_slice(&cpu_out[qi * q_dim..(qi + 1) * q_dim]);
+            }
+
+            // --- GPU Task B per bucket (weights pre-staged once above).
+            for (bi, _b) in buckets.iter().enumerate() {
+                let attn_lit = tb.literal(0, &Arg::F32(&prefill_attn[bi]))?;
+                let resid_lit = tb.literal(1, &Arg::F32(&xs[bi]))?;
+                let args = [
+                    &attn_lit, &resid_lit, &b_w[0], &b_w[1], &b_w[2], &b_w[3],
+                    &b_w[4], &b_w[5],
+                ];
+                let outs = tb.run_prepared(&args).context("task_b")?;
+                xs[bi] = to_f32(&outs[0])?;
+            }
+            times.gpu += clock.lap().as_secs_f64();
+
+            // Stage epilogue: release the slot, prefetch layer + 2 (§6.4).
+            self.mover.done_with(layer);
+            if layer + 2 < n_layers {
+                self.mover.request(layer + 2);
+            }
+        }
+
+        // Head: greedy next-token ids; collect yielding rows.
+        debug_assert_eq!(self.embedding.len(), rc.vocab * rc.d_model);
+        let mut tokens: Vec<(SeqId, i32)> = Vec::new();
+        for (bi, b) in buckets.iter().enumerate() {
+            let outs = self
+                .pjrt
+                .head
+                .run(&[
+                    Arg::F32(&xs[bi]),
+                    Arg::F32(&self.final_norm),
+                    Arg::F32(&self.lm_head),
+                ])
+                .context("head")?;
+            let ids = to_i32(&outs[0])?;
+            debug_assert_eq!(ids.len(), n_tok);
+            for (ri, row) in b.rows.iter().enumerate() {
+                if row.yields {
+                    tokens.push((row.seq, ids[ri]));
+                }
+            }
+        }
+        times.gpu += clock.lap().as_secs_f64();
+
+        Ok((tokens, times))
+    }
+}

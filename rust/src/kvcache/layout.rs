@@ -1,0 +1,337 @@
+//! Block allocator + page tables: the capacity half of the paged KV cache.
+//!
+//! Block ids are *layer-invariant*: a sequence's token `t` occupies the
+//! same (block, slot) coordinate in every layer's pool, so one allocation
+//! covers all layers and the allocator's arithmetic matches
+//! `ModelSpec::kv_bytes_per_token` (which already counts all layers).
+
+use std::collections::BTreeMap;
+
+/// Sequence identifier (assigned by the scheduler).
+pub type SeqId = u64;
+
+/// Static geometry of the paged cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvLayout {
+    /// Token slots per block (`b` in Eq. 8).
+    pub block_size: usize,
+    /// Total blocks (`N` in Eq. 8).
+    pub n_blocks: usize,
+}
+
+impl KvLayout {
+    pub fn new(block_size: usize, n_blocks: usize) -> Self {
+        assert!(block_size >= 1 && n_blocks >= 1);
+        KvLayout { block_size, n_blocks }
+    }
+
+    /// Blocks needed to hold `len` tokens: `⌈len/b⌉`.
+    pub fn blocks_for(&self, len: usize) -> usize {
+        len.div_ceil(self.block_size)
+    }
+
+    /// Total token slots.
+    pub fn capacity_tokens(&self) -> usize {
+        self.block_size * self.n_blocks
+    }
+
+    /// Lifetime block cost of a (p, g) sequence — the per-sequence term of
+    /// Eq. 8's denominator. Used by the scheduler to decide admission.
+    pub fn lifetime_blocks(&self, p: usize, g: usize) -> usize {
+        (0..=g).map(|i| self.blocks_for(p + i)).sum()
+    }
+}
+
+/// Free-list block allocator.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    layout: KvLayout,
+    free: Vec<u32>,
+}
+
+impl BlockAllocator {
+    pub fn new(layout: KvLayout) -> Self {
+        // LIFO free list; ids handed out ascending initially.
+        let free = (0..layout.n_blocks as u32).rev().collect();
+        BlockAllocator { layout, free }
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.layout.n_blocks - self.free.len()
+    }
+
+    pub fn alloc(&mut self) -> Option<u32> {
+        self.free.pop()
+    }
+
+    pub fn release(&mut self, block: u32) {
+        debug_assert!((block as usize) < self.layout.n_blocks);
+        debug_assert!(!self.free.contains(&block), "double free of block {block}");
+        self.free.push(block);
+    }
+}
+
+/// Per-sequence page table: the ordered blocks backing its KV entries.
+#[derive(Debug, Clone, Default)]
+pub struct PageTable {
+    pub blocks: Vec<u32>,
+    /// Tokens currently cached.
+    pub len: usize,
+}
+
+impl PageTable {
+    /// (block, slot) coordinate of token `t`.
+    pub fn locate(&self, t: usize, block_size: usize) -> (u32, usize) {
+        debug_assert!(t < self.len);
+        (self.blocks[t / block_size], t % block_size)
+    }
+}
+
+/// Page-table registry + allocator: the layout-only paged cache.
+///
+/// The engine pairs this with [`super::store::PagedKvCache`]'s data pools;
+/// the simulator uses it alone.
+#[derive(Debug)]
+pub struct PagedLayout {
+    alloc: BlockAllocator,
+    tables: BTreeMap<SeqId, PageTable>,
+}
+
+impl PagedLayout {
+    pub fn new(layout: KvLayout) -> Self {
+        PagedLayout { alloc: BlockAllocator::new(layout), tables: BTreeMap::new() }
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        self.alloc.layout()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.alloc.used_blocks()
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn contains(&self, id: SeqId) -> bool {
+        self.tables.contains_key(&id)
+    }
+
+    pub fn table(&self, id: SeqId) -> &PageTable {
+        &self.tables[&id]
+    }
+
+    pub fn len(&self, id: SeqId) -> usize {
+        self.tables.get(&id).map_or(0, |t| t.len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tables.is_empty()
+    }
+
+    pub fn seq_ids(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.tables.keys().copied()
+    }
+
+    /// Register a new (empty) sequence. Panics on duplicate ids — the
+    /// scheduler owns id assignment.
+    pub fn register(&mut self, id: SeqId) {
+        let prev = self.tables.insert(id, PageTable::default());
+        assert!(prev.is_none(), "sequence {id} already registered");
+    }
+
+    /// Whether `extra` more tokens can be appended to `id` with the blocks
+    /// currently free (the Decode Scheduler's §6.2 pre-check).
+    pub fn can_grow(&self, id: SeqId, extra: usize) -> bool {
+        let t = &self.tables[&id];
+        let layout = self.alloc.layout();
+        let need = layout.blocks_for(t.len + extra) - t.blocks.len();
+        need <= self.alloc.free_blocks()
+    }
+
+    /// Reserve slots for `extra` tokens on `id`, allocating blocks as
+    /// needed. Returns the first reserved position, or `None` (with no
+    /// partial allocation) if the cache lacks blocks — the preemption
+    /// trigger.
+    pub fn grow(&mut self, id: SeqId, extra: usize) -> Option<usize> {
+        let layout = self.alloc.layout();
+        let t = self.tables.get_mut(&id).expect("unknown sequence");
+        let target = layout.blocks_for(t.len + extra);
+        let need = target - t.blocks.len();
+        if need > self.alloc.free.len() {
+            return None;
+        }
+        for _ in 0..need {
+            t.blocks.push(self.alloc.alloc().unwrap());
+        }
+        let first = t.len;
+        t.len += extra;
+        Some(first)
+    }
+
+    /// Drop a sequence and release its blocks (decode-completion GC or
+    /// preemption eviction). Returns how many blocks were freed.
+    pub fn release(&mut self, id: SeqId) -> usize {
+        let t = self.tables.remove(&id).expect("unknown sequence");
+        let n = t.blocks.len();
+        for b in t.blocks {
+            self.alloc.release(b);
+        }
+        n
+    }
+
+    /// Invariant check (used by property tests): every block is either
+    /// free or owned by exactly one sequence.
+    pub fn check_invariants(&self) {
+        let layout = self.alloc.layout();
+        let mut owner = vec![None::<SeqId>; layout.n_blocks];
+        for (&id, t) in &self.tables {
+            assert!(
+                t.blocks.len() == layout.blocks_for(t.len),
+                "seq {id}: {} blocks for len {}",
+                t.blocks.len(),
+                t.len
+            );
+            for &b in &t.blocks {
+                assert!(owner[b as usize].is_none(), "block {b} double-owned");
+                owner[b as usize] = Some(id);
+            }
+        }
+        for &b in &self.alloc.free {
+            assert!(owner[b as usize].is_none(), "free block {b} is owned");
+            owner[b as usize] = Some(u64::MAX);
+        }
+        assert!(owner.iter().all(|o| o.is_some()), "leaked block");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let l = KvLayout::new(16, 100);
+        assert_eq!(l.blocks_for(0), 0);
+        assert_eq!(l.blocks_for(1), 1);
+        assert_eq!(l.blocks_for(16), 1);
+        assert_eq!(l.blocks_for(17), 2);
+        assert_eq!(l.capacity_tokens(), 1600);
+    }
+
+    #[test]
+    fn lifetime_blocks_matches_eq8_denominator() {
+        let l = KvLayout::new(16, 1);
+        let (p, g) = (98usize, 32usize);
+        let manual: usize = (0..=g).map(|i| (p + i).div_ceil(16)).sum();
+        assert_eq!(l.lifetime_blocks(p, g), manual);
+    }
+
+    #[test]
+    fn grow_and_release_roundtrip() {
+        let mut c = PagedLayout::new(KvLayout::new(4, 8));
+        c.register(1);
+        assert_eq!(c.grow(1, 5), Some(0)); // 2 blocks
+        assert_eq!(c.used_blocks(), 2);
+        assert_eq!(c.grow(1, 3), Some(5)); // fills block 2
+        assert_eq!(c.used_blocks(), 2);
+        assert_eq!(c.len(1), 8);
+        assert_eq!(c.release(1), 2);
+        assert_eq!(c.free_blocks(), 8);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn grow_fails_atomically_when_full() {
+        let mut c = PagedLayout::new(KvLayout::new(4, 2));
+        c.register(1);
+        c.register(2);
+        assert!(c.grow(1, 4).is_some());
+        assert!(c.grow(2, 4).is_some());
+        // no free blocks: growing past the block boundary must fail whole
+        assert!(!c.can_grow(1, 1));
+        assert_eq!(c.grow(1, 1), None);
+        assert_eq!(c.len(1), 4, "failed grow must not change length");
+        c.check_invariants();
+    }
+
+    #[test]
+    fn can_grow_within_partial_block_needs_no_alloc() {
+        let mut c = PagedLayout::new(KvLayout::new(4, 1));
+        c.register(7);
+        assert!(c.grow(7, 2).is_some());
+        assert_eq!(c.free_blocks(), 0);
+        assert!(c.can_grow(7, 2)); // slots 2..4 are in the owned block
+        assert!(!c.can_grow(7, 3));
+    }
+
+    #[test]
+    fn locate_coordinates() {
+        let mut c = PagedLayout::new(KvLayout::new(4, 4));
+        c.register(1);
+        c.grow(1, 10);
+        let t = c.table(1);
+        let (b0, s0) = t.locate(0, 4);
+        let (b9, s9) = t.locate(9, 4);
+        assert_eq!((b0, s0), (t.blocks[0], 0));
+        assert_eq!((b9, s9), (t.blocks[2], 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn duplicate_register_panics() {
+        let mut c = PagedLayout::new(KvLayout::new(4, 4));
+        c.register(1);
+        c.register(1);
+    }
+
+    #[test]
+    fn prop_alloc_release_never_leaks() {
+        prop::check("kvcache_layout", |rng| {
+            let bs = rng.range(1, 9);
+            let nb = rng.range(1, 65);
+            let mut c = PagedLayout::new(KvLayout::new(bs, nb));
+            let mut live: Vec<SeqId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                match rng.below(3) {
+                    0 => {
+                        c.register(next_id);
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let id = *rng.choose(&live);
+                        let extra = rng.range(1, 2 * bs + 2);
+                        let before = c.len(id);
+                        match c.grow(id, extra) {
+                            Some(first) => assert_eq!(first, before),
+                            None => assert_eq!(c.len(id), before),
+                        }
+                    }
+                    _ if !live.is_empty() => {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let id = live.swap_remove(i);
+                        c.release(id);
+                    }
+                    _ => {}
+                }
+                c.check_invariants();
+            }
+        });
+    }
+}

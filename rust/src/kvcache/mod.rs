@@ -1,0 +1,18 @@
+//! Paged KV cache (§2, §5.5).
+//!
+//! The KV cache lives in **CPU memory** (the paper's defining resource
+//! constraint) and is organized vLLM-style into fixed-size blocks of `b`
+//! token slots. Two pieces:
+//!
+//! * [`layout`] — block allocator + per-sequence page tables. Pure
+//!   capacity accounting, shared by the real engine and the `simhw`
+//!   simulator (which never materializes data).
+//! * [`store`] — the BF16 data pools behind the layout, written by the
+//!   engine (K/V offloaded from "GPU" task A) and scanned by the CPU
+//!   decode-attention kernel (`cpuattn`).
+
+pub mod layout;
+pub mod store;
+
+pub use layout::{BlockAllocator, KvLayout, PagedLayout, PageTable, SeqId};
+pub use store::PagedKvCache;

@@ -1,0 +1,209 @@
+//! BF16 data pools behind the paged layout: the real engine's KV cache.
+//!
+//! Values are stored as raw BF16 bits (`u16`) — the paper's storage format
+//! (§5.3) — and up-converted to f32 by the CPU attention kernel. Each
+//! layer owns one K pool and one V pool; a block's data is contiguous
+//! (`block_size × kv_dim` elements), which is what lets the optimized
+//! kernel walk the cache with long unit-stride runs.
+
+use super::layout::{KvLayout, PagedLayout, SeqId};
+use crate::util::bf16::f32_to_bf16;
+
+/// Per-layer K/V pools.
+struct LayerPool {
+    k: Vec<u16>,
+    v: Vec<u16>,
+}
+
+/// The full paged KV cache: layout + data.
+pub struct PagedKvCache {
+    layout: PagedLayout,
+    pools: Vec<LayerPool>,
+    /// Elements per token slot (`n_kv_heads * head_dim`).
+    kv_dim: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(layout: KvLayout, n_layers: usize, kv_dim: usize) -> Self {
+        let pool_len = layout.n_blocks * layout.block_size * kv_dim;
+        let pools = (0..n_layers)
+            .map(|_| LayerPool { k: vec![0; pool_len], v: vec![0; pool_len] })
+            .collect();
+        PagedKvCache { layout: PagedLayout::new(layout), pools, kv_dim }
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// The layout half, for scheduler queries (free blocks, lengths, ...).
+    pub fn layout(&self) -> &PagedLayout {
+        &self.layout
+    }
+
+    pub fn layout_mut(&mut self) -> &mut PagedLayout {
+        &mut self.layout
+    }
+
+    pub fn register(&mut self, id: SeqId) {
+        self.layout.register(id);
+    }
+
+    /// Reserve `extra` token slots on `id` (all layers at once — block ids
+    /// are layer-invariant). Returns the first reserved position.
+    pub fn grow(&mut self, id: SeqId, extra: usize) -> Option<usize> {
+        self.layout.grow(id, extra)
+    }
+
+    pub fn release(&mut self, id: SeqId) -> usize {
+        self.layout.release(id)
+    }
+
+    /// Write one token's K/V for one layer at position `pos` (previously
+    /// reserved via [`grow`]). `k`/`v` are f32 and are BF16-rounded on
+    /// store, matching JAX `astype(bfloat16)` semantics.
+    pub fn write(&mut self, id: SeqId, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.kv_dim);
+        assert_eq!(v.len(), self.kv_dim);
+        let bs = self.layout.layout().block_size;
+        let (block, slot) = self.layout.table(id).locate(pos, bs);
+        let base = (block as usize * bs + slot) * self.kv_dim;
+        let pool = &mut self.pools[layer];
+        for i in 0..self.kv_dim {
+            pool.k[base + i] = f32_to_bf16(k[i]);
+            pool.v[base + i] = f32_to_bf16(v[i]);
+        }
+    }
+
+    /// Visit the context of `id` in layer `layer` as contiguous per-block
+    /// runs: `f(k_run, v_run, tokens_in_run)` where each run is
+    /// `tokens_in_run * kv_dim` BF16 elements. This is the access pattern
+    /// the optimized CPU attention kernel exploits.
+    pub fn walk_context<F>(&self, id: SeqId, layer: usize, mut f: F)
+    where
+        F: FnMut(&[u16], &[u16], usize),
+    {
+        let bs = self.layout.layout().block_size;
+        let table = self.layout.table(id);
+        let pool = &self.pools[layer];
+        let mut remaining = table.len;
+        for &block in &table.blocks {
+            if remaining == 0 {
+                break;
+            }
+            let run = remaining.min(bs);
+            let base = block as usize * bs * self.kv_dim;
+            let len = run * self.kv_dim;
+            f(&pool.k[base..base + len], &pool.v[base..base + len], run);
+            remaining -= run;
+        }
+    }
+
+    /// Gather the full (dense) context of `id` for one layer as f32 —
+    /// test/oracle helper, not a hot path.
+    pub fn gather_context(&self, id: SeqId, layer: usize) -> (Vec<f32>, Vec<f32>) {
+        use crate::util::bf16::bf16_to_f32;
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        self.walk_context(id, layer, |kr, vr, _| {
+            k.extend(kr.iter().map(|&b| bf16_to_f32(b)));
+            v.extend(vr.iter().map(|&b| bf16_to_f32(b)));
+        });
+        (k, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bf16::bf16_round;
+    use crate::util::rng::Rng;
+
+    fn cache() -> PagedKvCache {
+        PagedKvCache::new(KvLayout::new(4, 8), 2, 6)
+    }
+
+    #[test]
+    fn write_then_gather_roundtrips_bf16() {
+        let mut c = cache();
+        c.register(1);
+        c.grow(1, 3);
+        let mut rng = Rng::new(7);
+        let mut expect_k = Vec::new();
+        let mut expect_v = Vec::new();
+        for pos in 0..3 {
+            let k: Vec<f32> = (0..6).map(|_| rng.f32() * 3.0 - 1.5).collect();
+            let v: Vec<f32> = (0..6).map(|_| rng.f32() * 3.0 - 1.5).collect();
+            c.write(1, 0, pos, &k, &v);
+            c.write(1, 1, pos, &v, &k); // layers are independent
+            expect_k.extend(k.iter().map(|&x| bf16_round(x)));
+            expect_v.extend(v.iter().map(|&x| bf16_round(x)));
+        }
+        let (k0, v0) = c.gather_context(1, 0);
+        let (k1, v1) = c.gather_context(1, 1);
+        assert_eq!(k0, expect_k);
+        assert_eq!(v0, expect_v);
+        assert_eq!(k1, expect_v);
+        assert_eq!(v1, expect_k);
+    }
+
+    #[test]
+    fn walk_context_runs_respect_block_boundaries() {
+        let mut c = cache();
+        c.register(9);
+        c.grow(9, 10); // 3 blocks: runs of 4, 4, 2
+        for pos in 0..10 {
+            let k = vec![pos as f32; 6];
+            c.write(9, 0, pos, &k, &k);
+        }
+        let mut runs = Vec::new();
+        c.walk_context(9, 0, |kr, _, n| {
+            assert_eq!(kr.len(), n * 6);
+            runs.push(n);
+        });
+        assert_eq!(runs, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn interleaved_sequences_stay_isolated() {
+        let mut c = cache();
+        c.register(1);
+        c.register(2);
+        c.grow(1, 2);
+        c.grow(2, 2);
+        c.grow(1, 3); // interleaved growth -> interleaved blocks
+        for pos in 0..5 {
+            c.write(1, 0, pos, &vec![1.0; 6], &vec![1.0; 6]);
+        }
+        for pos in 0..2 {
+            c.write(2, 0, pos, &vec![2.0; 6], &vec![2.0; 6]);
+        }
+        let (k1, _) = c.gather_context(1, 0);
+        let (k2, _) = c.gather_context(2, 0);
+        assert!(k1.iter().all(|&x| x == 1.0));
+        assert!(k2.iter().all(|&x| x == 2.0));
+        assert_eq!(k1.len(), 5 * 6);
+        assert_eq!(k2.len(), 2 * 6);
+    }
+
+    #[test]
+    fn release_recycles_data_blocks_safely() {
+        let mut c = PagedKvCache::new(KvLayout::new(2, 2), 1, 2);
+        c.register(1);
+        c.grow(1, 4);
+        c.write(1, 0, 3, &[9.0, 9.0], &[9.0, 9.0]);
+        c.release(1);
+        c.register(2);
+        c.grow(2, 4);
+        // stale data from seq 1 may remain but must be overwritable
+        for pos in 0..4 {
+            c.write(2, 0, pos, &[5.0, 5.0], &[5.0, 5.0]);
+        }
+        let (k, v) = c.gather_context(2, 0);
+        assert!(k.iter().chain(v.iter()).all(|&x| x == 5.0));
+    }
+}

@@ -1,0 +1,23 @@
+//! MoE-Lens: high-throughput MoE LLM serving under resource constraints.
+//!
+//! Reproduction of *MoE-Lens: Towards the Hardware Limit of High-Throughput
+//! MoE LLM Serving Under Resource Constraints* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack. This crate is Layer 3: the
+//! coordinator that owns scheduling, the paged KV cache, weight streaming,
+//! CPU decode attention, and the PJRT runtime that executes the AOT-lowered
+//! Layer-1/2 artifacts. See DESIGN.md for the system inventory.
+
+pub mod baselines;
+pub mod config;
+pub mod cpuattn;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sched;
+pub mod simhw;
+pub mod transfer;
+pub mod util;
+pub mod workload;

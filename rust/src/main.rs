@@ -1,0 +1,279 @@
+//! MoE-Lens CLI (Layer-3 leader entrypoint).
+//!
+//! Subcommands mirror the paper's three-stage methodology: `plan` runs
+//! the Stage-1/Stage-2 performance models, `simulate` replays policies on
+//! the paper-scale virtual machine, and `serve`/`profile` drive the real
+//! PJRT engine on the executable configs.
+
+use moe_lens::config::{GpuSpec, MachineSpec, ModelSpec, WorkloadSpec};
+use moe_lens::engine::{EngineConfig, ServingEngine};
+use moe_lens::metrics::RunReport;
+use moe_lens::perfmodel::{Stage1Model, Stage2Model};
+use moe_lens::sched::PipelineProfiler;
+use moe_lens::simhw::{SimConfig, SimMachine};
+use moe_lens::transfer::LinkTiming;
+use moe_lens::util::args::Args;
+use moe_lens::workload::WorkloadGen;
+
+fn usage() -> ! {
+    eprintln!(
+        "moe-lens — high-throughput MoE LLM serving under resource constraints
+
+USAGE: moe-lens <COMMAND> [OPTIONS]
+
+COMMANDS:
+  serve      serve a batch through the real PJRT engine
+             --model tiny|small  --requests N  --prompt N  --gen N
+             --kv-blocks N  --block-size N  --attn-threads N
+             [--link-gbps F] [--trace-csv PATH]
+  plan       print Stage-1/Stage-2 performance-model analysis
+             --model <name> --gpu <name> --kv-gb N --p N --g N [--batch K]
+  simulate   run the paper-scale hardware simulator
+             --model <name> --workload mtbench|rag|aime --gen N --kv-gb N
+             --policy moe-lens|moe-lightning|vllm  [--requests K]
+  profile    run the pipeline profiler (Fig. 7) on paper constants
+             --model <name> --gpu <name>
+  models     list model/hardware/workload specs
+"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args = Args::from_env();
+    let r = match args.positional.first().map(|s| s.as_str()) {
+        Some("models") => {
+            cmd_models();
+            Ok(())
+        }
+        Some("plan") => {
+            cmd_plan(&args);
+            Ok(())
+        }
+        Some("simulate") => {
+            cmd_simulate(&args);
+            Ok(())
+        }
+        Some("profile") => {
+            cmd_profile(&args);
+            Ok(())
+        }
+        Some("serve") => cmd_serve(&args),
+        _ => usage(),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn model_arg(args: &Args) -> ModelSpec {
+    let name = args.str_or("model", "mixtral-8x7b");
+    ModelSpec::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}' (try `moe-lens models`)");
+        std::process::exit(2);
+    })
+}
+
+fn machine_arg(args: &Args) -> MachineSpec {
+    match args.get("gpu") {
+        None => MachineSpec::paper_testbed(),
+        Some(g) => {
+            let gpu = GpuSpec::by_name(g).unwrap_or_else(|| {
+                eprintln!("unknown GPU '{g}'");
+                std::process::exit(2);
+            });
+            MachineSpec { gpu, ..MachineSpec::paper_testbed() }
+        }
+    }
+}
+
+fn cmd_models() {
+    println!("models:");
+    for m in ModelSpec::all() {
+        println!(
+            "  {:<14} params={:>6.1}B  size={:>6.1} GB  layers={:<3} experts={}x top-{}",
+            m.name,
+            m.param_count() as f64 / 1e9,
+            m.model_bytes() as f64 / 1e9,
+            m.n_layers,
+            m.n_experts,
+            m.top_k,
+        );
+    }
+    println!("gpus:");
+    for name in ["A40", "L40", "A100", "T4", "L4"] {
+        let g = GpuSpec::by_name(name).unwrap();
+        println!(
+            "  {:<6} {:>5.0} TFLOPS bf16, {:>3} GB",
+            g.name,
+            g.bf16_flops / 1e12,
+            g.mem_bytes >> 30
+        );
+    }
+    println!("workloads:");
+    for w in WorkloadSpec::all() {
+        println!(
+            "  {:<8} avg_p={:<5} max_p={:<5} gen={:?}  ({})",
+            w.name, w.avg_prefill, w.max_prefill, w.gen_lengths, w.category
+        );
+    }
+}
+
+fn cmd_plan(args: &Args) {
+    let model = model_arg(args);
+    let machine = machine_arg(args);
+    let kv_gb = args.u64_or("kv-gb", 100);
+    let p = args.usize_or("p", 98);
+    let g = args.usize_or("g", 32);
+    let kv = kv_gb << 30;
+
+    let s1 = Stage1Model::new(machine.clone(), model.clone());
+    println!("== Stage 1 (theoretical upper bound) ==");
+    println!(
+        "  model {}  machine {} @ {:.1} GB/s PCIe",
+        model.name,
+        machine.gpu.name,
+        machine.pcie_bw / 1e9
+    );
+    println!("  delta (weight sweep)      : {:.2} s", s1.delta());
+    println!("  tokens to saturate GPU    : {:.0}", s1.tokens_to_saturate());
+    println!("  PME(p={p}, g={g})           : {:.5}", s1.pme(p, g));
+    println!("  T_max                     : {:.0} tok/s", s1.t_max(p, g, kv));
+    println!(
+        "  max GPU utilization       : {:.1} %",
+        s1.max_gpu_utilization(p, g, kv) * 100.0
+    );
+    println!("  bound                     : {:?}", s1.bound(p, g, kv));
+    println!(
+        "  CPU mem bw required       : {:.1} GB/s",
+        s1.cpu_mem_bw_required(kv) / 1e9
+    );
+    println!(
+        "  CPU attn FLOPs required   : {:.0} GFLOP/s",
+        s1.cpu_flops_required(kv) / 1e9
+    );
+    println!(
+        "  Eq.7 overlap KV amplify   : {:.2}x",
+        s1.effective_kv(p, g, kv) / kv as f64
+    );
+
+    let s2 = Stage2Model::new(machine, model, 16);
+    let k = args.f64_or("batch", s2.default_batch(p, g, kv));
+    let pred = s2.predict(p, g, kv, k);
+    println!("== Stage 2 (realistic, paged b=16, K={k:.0}) ==");
+    println!("  q (prefills/iter)         : {:.2}", pred.q);
+    println!("  T1 (memory-bound)         : {:.0} tok/s", pred.t1);
+    println!("  T2 (GPU-bound)            : {:.0} tok/s", pred.t2);
+    println!("  predicted throughput      : {:.0} gen tok/s", pred.throughput);
+    println!("  predicted wall time       : {:.0} s", pred.wall_secs);
+    println!(
+        "  predicted GPU utilization : {:.1} %",
+        pred.gpu_utilization * 100.0
+    );
+    println!("  regime                    : {:?}", pred.regime);
+}
+
+fn cmd_simulate(args: &Args) {
+    let model = model_arg(args);
+    let wl = WorkloadSpec::by_name(args.str_or("workload", "mtbench")).unwrap_or_else(|| {
+        eprintln!("unknown workload");
+        std::process::exit(2);
+    });
+    let g = args.usize_or("gen", wl.gen_lengths[0]);
+    let kv_gb = args.u64_or("kv-gb", 70);
+    let policy = args.str_or("policy", "moe-lens").to_string();
+    let p = wl.avg_prefill;
+
+    let (label, report): (String, RunReport) = match policy.as_str() {
+        "moe-lens" => {
+            let cfg = SimConfig::moe_lens(model.clone(), kv_gb);
+            let s2 = Stage2Model::new(cfg.machine.clone(), model.clone(), cfg.block_size);
+            let k = args.usize_or(
+                "requests",
+                (5.0 * g as f64 * s2.q(p, g, kv_gb << 30)) as usize,
+            );
+            let gen = WorkloadGen::new(wl, g, model.vocab.min(32_000));
+            let reqs = gen.batch(k, 0, 42);
+            let (_, report) = SimMachine::new(cfg).run(reqs);
+            (
+                format!("moe-lens {} {} g={g} kv={kv_gb}GB K={k}", model.name, wl.name),
+                report,
+            )
+        }
+        "moe-lightning" => {
+            let sim = moe_lens::baselines::MoeLightningSim::new(model.clone(), kv_gb);
+            let k = args.usize_or("requests", 5000);
+            let (_, report) = sim.run_uniform(p, g, k);
+            (
+                format!("moe-lightning {} {} g={g} kv={kv_gb}GB K={k}", model.name, wl.name),
+                report,
+            )
+        }
+        "vllm" => {
+            let sim = moe_lens::baselines::VllmSim::new(model.clone(), kv_gb);
+            let k = args.usize_or("requests", 500);
+            let (_, report) = sim.run_uniform(p, g, k);
+            (
+                format!("vllm {} {} g={g} kv={kv_gb}GB K={k}", model.name, wl.name),
+                report,
+            )
+        }
+        other => {
+            eprintln!("unknown policy '{other}'");
+            std::process::exit(2);
+        }
+    };
+    report.print(&label);
+}
+
+fn cmd_profile(args: &Args) {
+    let model = model_arg(args);
+    let machine = machine_arg(args);
+    let fit = PipelineProfiler::analytic(&machine, &model);
+    println!("== Pipeline profile: {} on {} ==", model.name, machine.gpu.name);
+    println!("  GPU time slope  : {:.3} us/token", fit.line.slope * 1e6);
+    println!("  layer IO time   : {:.2} ms", fit.layer_io_secs * 1e3);
+    println!("  n_real          : {} tokens", fit.n_real);
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "small").to_string();
+    let mut cfg = EngineConfig::for_model(&model);
+    cfg.block_size = args.usize_or("block-size", cfg.block_size);
+    cfg.kv_blocks = args.usize_or("kv-blocks", cfg.kv_blocks);
+    cfg.attn_threads = args.usize_or("attn-threads", cfg.attn_threads);
+    if let Some(gbps) = args.get("link-gbps") {
+        cfg.timing = LinkTiming::Throttle(gbps.parse::<f64>().unwrap() * 1e9);
+    }
+    let mut engine = ServingEngine::load(cfg)?;
+
+    let n = args.usize_or("requests", 16);
+    let p = args.usize_or("prompt", engine.n_tok() / 4);
+    let g = args.usize_or("gen", engine.n_tok() / 4);
+    let vocab = engine.pjrt.config.vocab;
+    let mut rng = moe_lens::util::rng::Rng::new(7);
+    let reqs: Vec<moe_lens::model::Request> = (0..n)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..p).map(|_| rng.range(1, vocab - 1) as i32).collect();
+            moe_lens::model::Request::new(i as u64, prompt, g)
+        })
+        .collect();
+
+    println!(
+        "serving {n} requests (p={p}, g={g}) on '{model}' via PJRT {}...",
+        engine.pjrt.platform()
+    );
+    let (trace, report) = engine.run(reqs)?;
+    report.print("real engine");
+    println!(
+        "  link: {:.1} MB moved, achieved {:.2} GB/s (link clock)",
+        engine.link().total_bytes() as f64 / 1e6,
+        engine.link().achieved_bw() / 1e9
+    );
+    if let Some(path) = args.get("trace-csv") {
+        std::fs::write(path, trace.to_csv())?;
+        println!("  trace written to {path}");
+    }
+    Ok(())
+}

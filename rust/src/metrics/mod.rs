@@ -1,0 +1,283 @@
+//! Execution telemetry: per-pass breakdowns, throughput summaries, and
+//! the Fig.-13-style execution traces.
+//!
+//! Both clocks feed the same records: the real engine stamps wall-clock
+//! durations; the simulator stamps virtual seconds. The benches render
+//! these as the paper's throughput / utilization / per-pass IO-GPU-CPU
+//! series.
+
+use std::time::Duration;
+
+/// One inference pass (forward iteration) of the pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct PassRecord {
+    pub pass_id: usize,
+    /// Time since run start at pass end (seconds, wall or virtual).
+    pub t_end: f64,
+    /// Pass duration (seconds).
+    pub duration: f64,
+    /// Prefill tokens processed this pass.
+    pub prefill_tokens: usize,
+    /// Decode tokens processed this pass.
+    pub decode_tokens: usize,
+    /// Tokens *yielded* this pass: decode rows plus completing prefill
+    /// chunks (whose last row emits the sequence's first new token).
+    pub generated: usize,
+    /// Sequences finished this pass.
+    pub finished: usize,
+    /// Sequences preempted this pass (§6.2 preemption mode).
+    pub preempted: usize,
+    /// Weight-transfer (IO) time within the pass (seconds).
+    pub io_time: f64,
+    /// GPU compute time within the pass (seconds).
+    pub gpu_time: f64,
+    /// CPU attention time within the pass (seconds).
+    pub cpu_time: f64,
+    /// KV blocks in use at pass end.
+    pub kv_blocks_used: usize,
+    /// Active decode sequences at pass end.
+    pub active_decode: usize,
+}
+
+/// A whole run's trace + derived summaries.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub passes: Vec<PassRecord>,
+    /// Total KV blocks (for utilization ratios).
+    pub kv_blocks_total: usize,
+}
+
+impl Trace {
+    pub fn new(kv_blocks_total: usize) -> Self {
+        Trace { passes: Vec::new(), kv_blocks_total }
+    }
+
+    pub fn push(&mut self, rec: PassRecord) {
+        self.passes.push(rec);
+    }
+
+    pub fn wall_secs(&self) -> f64 {
+        self.passes.last().map_or(0.0, |p| p.t_end)
+    }
+
+    pub fn total_decode_tokens(&self) -> usize {
+        self.passes.iter().map(|p| p.decode_tokens).sum()
+    }
+
+    /// Total generated (yielded) tokens — the numerator of Fig. 11's
+    /// generation-throughput metric.
+    pub fn total_generated(&self) -> usize {
+        self.passes.iter().map(|p| p.generated).sum()
+    }
+
+    pub fn total_prefill_tokens(&self) -> usize {
+        self.passes.iter().map(|p| p.prefill_tokens).sum()
+    }
+
+    pub fn total_preemptions(&self) -> usize {
+        self.passes.iter().map(|p| p.preempted).sum()
+    }
+
+    /// Generation throughput: generated tokens per second (Fig. 11).
+    pub fn generation_throughput(&self) -> f64 {
+        let t = self.wall_secs();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.total_generated() as f64 / t
+        }
+    }
+
+    /// Processed-token throughput (prefill + decode).
+    pub fn processed_throughput(&self) -> f64 {
+        let t = self.wall_secs();
+        if t == 0.0 {
+            0.0
+        } else {
+            (self.total_decode_tokens() + self.total_prefill_tokens()) as f64 / t
+        }
+    }
+
+    /// Mean GPU busy fraction (Fig. 13 row 3: gpu_time / pass duration).
+    pub fn mean_gpu_utilization(&self) -> f64 {
+        if self.passes.is_empty() {
+            return 0.0;
+        }
+        let busy: f64 = self.passes.iter().map(|p| p.gpu_time).sum();
+        let total: f64 = self.passes.iter().map(|p| p.duration).sum();
+        if total == 0.0 {
+            0.0
+        } else {
+            busy / total
+        }
+    }
+
+    /// Downsample to `n` points for the Fig.-13 time-series plots.
+    pub fn series<F: Fn(&PassRecord) -> f64>(&self, n: usize, f: F) -> Vec<(f64, f64)> {
+        if self.passes.is_empty() {
+            return Vec::new();
+        }
+        let stride = (self.passes.len() / n.max(1)).max(1);
+        self.passes
+            .iter()
+            .step_by(stride)
+            .map(|p| (p.t_end, f(p)))
+            .collect()
+    }
+
+    /// Render as CSV (one row per pass) for offline plotting.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "pass,t_end,duration,prefill_tokens,decode_tokens,finished,preempted,\
+             io_time,gpu_time,cpu_time,kv_blocks_used,active_decode\n",
+        );
+        for p in &self.passes {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{},{},{},{},{:.6},{:.6},{:.6},{},{}\n",
+                p.pass_id,
+                p.t_end,
+                p.duration,
+                p.prefill_tokens,
+                p.decode_tokens,
+                p.finished,
+                p.preempted,
+                p.io_time,
+                p.gpu_time,
+                p.cpu_time,
+                p.kv_blocks_used,
+                p.active_decode,
+            ));
+        }
+        s
+    }
+}
+
+/// Final report of a serving run (engine or simulator).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub requests: usize,
+    pub generated_tokens: usize,
+    pub wall_secs: f64,
+    pub generation_throughput: f64,
+    pub processed_throughput: f64,
+    pub mean_gpu_utilization: f64,
+    pub preemptions: usize,
+    pub passes: usize,
+}
+
+impl RunReport {
+    pub fn from_trace(trace: &Trace, requests: usize) -> Self {
+        RunReport {
+            requests,
+            generated_tokens: trace.total_generated(),
+            wall_secs: trace.wall_secs(),
+            generation_throughput: trace.generation_throughput(),
+            processed_throughput: trace.processed_throughput(),
+            mean_gpu_utilization: trace.mean_gpu_utilization(),
+            preemptions: trace.total_preemptions(),
+            passes: trace.passes.len(),
+        }
+    }
+
+    pub fn print(&self, label: &str) {
+        println!("== {label} ==");
+        println!("  requests          : {}", self.requests);
+        println!("  generated tokens  : {}", self.generated_tokens);
+        println!("  wall time         : {:.3} s", self.wall_secs);
+        println!("  gen throughput    : {:.1} tok/s", self.generation_throughput);
+        println!("  total throughput  : {:.1} tok/s", self.processed_throughput);
+        println!("  mean GPU util     : {:.1} %", self.mean_gpu_utilization * 100.0);
+        println!("  preemptions       : {}", self.preemptions);
+        println!("  passes            : {}", self.passes);
+    }
+}
+
+/// Wall-clock stopwatch for engine instrumentation.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn lap(&mut self) -> Duration {
+        let now = std::time::Instant::now();
+        let d = now - self.0;
+        self.0 = now;
+        d
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pass(id: usize, t: f64, pf: usize, dc: usize, gpu: f64, dur: f64) -> PassRecord {
+        PassRecord {
+            pass_id: id,
+            t_end: t,
+            duration: dur,
+            prefill_tokens: pf,
+            decode_tokens: dc,
+            generated: dc,
+            gpu_time: gpu,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut tr = Trace::new(100);
+        tr.push(pass(0, 1.0, 100, 10, 0.5, 1.0));
+        tr.push(pass(1, 2.0, 50, 20, 1.0, 1.0));
+        assert_eq!(tr.total_decode_tokens(), 30);
+        assert_eq!(tr.total_prefill_tokens(), 150);
+        assert!((tr.generation_throughput() - 15.0).abs() < 1e-9);
+        assert!((tr.processed_throughput() - 90.0).abs() < 1e-9);
+        assert!((tr.mean_gpu_utilization() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_trace_is_zero() {
+        let tr = Trace::new(10);
+        assert_eq!(tr.generation_throughput(), 0.0);
+        assert_eq!(tr.mean_gpu_utilization(), 0.0);
+        assert_eq!(tr.wall_secs(), 0.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut tr = Trace::new(10);
+        tr.push(pass(0, 0.5, 1, 2, 0.1, 0.5));
+        let csv = tr.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("pass,"));
+        assert!(csv.contains("0,0.5"));
+    }
+
+    #[test]
+    fn series_downsamples() {
+        let mut tr = Trace::new(10);
+        for i in 0..100 {
+            tr.push(pass(i, i as f64, 0, i, 0.0, 1.0));
+        }
+        let s = tr.series(10, |p| p.decode_tokens as f64);
+        assert!(s.len() >= 10 && s.len() <= 11);
+        assert_eq!(s[0], (0.0, 0.0));
+    }
+
+    #[test]
+    fn report_from_trace() {
+        let mut tr = Trace::new(10);
+        tr.push(pass(0, 2.0, 10, 20, 1.0, 2.0));
+        let r = RunReport::from_trace(&tr, 5);
+        assert_eq!(r.requests, 5);
+        assert_eq!(r.generated_tokens, 20);
+        assert_eq!(r.passes, 1);
+        assert!((r.generation_throughput - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,180 @@
+//! Golden vectors exported by `python/compile/aot.py` — the cross-layer
+//! correctness contract: the JAX oracle's numbers, replayed against the
+//! Rust kernels and the full engine by `cargo test`.
+
+use crate::util::bf16::f32_to_bf16;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Oracle vectors for the CPU decode-attention kernel.
+#[derive(Debug, Clone)]
+pub struct DecodeAttnGolden {
+    pub nd: usize,
+    pub l_max: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// [nd, n_heads*head_dim] f32 queries.
+    pub q: Vec<f32>,
+    /// [nd, l_max, kv_dim] BF16 bits (exported as bf16-rounded f32).
+    pub k_bits: Vec<u16>,
+    pub v_bits: Vec<u16>,
+    pub ctx_lens: Vec<usize>,
+    /// Expected [nd, n_heads*head_dim].
+    pub out: Vec<f32>,
+}
+
+/// One packed forward pass through the whole model.
+#[derive(Debug, Clone)]
+pub struct ForwardGolden {
+    pub ids: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub seg_ids: Vec<i32>,
+    pub p0: usize,
+    pub p1: usize,
+    /// Expected next-token ids at the last row of each packed sequence.
+    pub next_ids: Vec<i32>,
+    /// Expected logits at sequence 0's last row.
+    pub logits_seq0_last: Vec<f32>,
+}
+
+/// End-to-end greedy generation.
+#[derive(Debug, Clone)]
+pub struct GenerationGolden {
+    pub prompts: Vec<Vec<i32>>,
+    pub steps: usize,
+    /// Expected generated tokens per prompt.
+    pub tokens: Vec<Vec<i32>>,
+}
+
+/// The full golden file.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub decode_attn: DecodeAttnGolden,
+    pub forward: ForwardGolden,
+    pub generation: GenerationGolden,
+}
+
+fn f32s(j: &Json) -> Result<Vec<f32>> {
+    j.as_f32_vec().context("expected number array")
+}
+
+fn i32s(j: &Json) -> Result<Vec<i32>> {
+    Ok(j.as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect())
+}
+
+impl Golden {
+    /// Load `<dir>/<file>` (the manifest's `golden` entry).
+    pub fn load(dir: &str, file: &str) -> Result<Golden> {
+        let path = format!("{dir}/{file}");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e:?}"))?;
+
+        let d = root.req("decode_attn");
+        let to_bits = |j: &Json| -> Result<Vec<u16>> {
+            Ok(f32s(j)?.into_iter().map(f32_to_bf16).collect())
+        };
+        let decode_attn = DecodeAttnGolden {
+            nd: d.req("nd").as_usize().context("nd")?,
+            l_max: d.req("l_max").as_usize().context("l_max")?,
+            n_heads: d.req("n_heads").as_usize().context("n_heads")?,
+            n_kv_heads: d.req("n_kv_heads").as_usize().context("n_kv_heads")?,
+            head_dim: d.req("head_dim").as_usize().context("head_dim")?,
+            q: f32s(d.req("q"))?,
+            k_bits: to_bits(d.req("k_bf16"))?,
+            v_bits: to_bits(d.req("v_bf16"))?,
+            ctx_lens: d.req("ctx_lens").as_usize_vec().context("ctx_lens")?,
+            out: f32s(d.req("out"))?,
+        };
+
+        let f = root.req("forward");
+        let forward = ForwardGolden {
+            ids: i32s(f.req("ids"))?,
+            positions: i32s(f.req("positions"))?,
+            seg_ids: i32s(f.req("seg_ids"))?,
+            p0: f.req("p0").as_usize().context("p0")?,
+            p1: f.req("p1").as_usize().context("p1")?,
+            next_ids: i32s(f.req("next_ids"))?,
+            logits_seq0_last: f32s(f.req("logits_seq0_last"))?,
+        };
+
+        let g = root.req("generation");
+        let prompts = g
+            .req("prompts")
+            .as_arr()
+            .context("prompts")?
+            .iter()
+            .map(i32s)
+            .collect::<Result<Vec<_>>>()?;
+        let tokens = g
+            .req("tokens")
+            .as_arr()
+            .context("tokens")?
+            .iter()
+            .map(i32s)
+            .collect::<Result<Vec<_>>>()?;
+        let generation = GenerationGolden {
+            prompts,
+            steps: g.req("steps").as_usize().context("steps")?,
+            tokens,
+        };
+
+        Ok(Golden { decode_attn, forward, generation })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpuattn::{decode_attention_dense, AttnShape, Tier};
+
+    fn golden() -> Option<Golden> {
+        std::path::Path::new("artifacts/golden_tiny.json")
+            .exists()
+            .then(|| Golden::load("artifacts", "golden_tiny.json").unwrap())
+    }
+
+    #[test]
+    fn shapes_are_consistent() {
+        let Some(g) = golden() else { return };
+        let d = &g.decode_attn;
+        let q_dim = d.n_heads * d.head_dim;
+        let kv_dim = d.n_kv_heads * d.head_dim;
+        assert_eq!(d.q.len(), d.nd * q_dim);
+        assert_eq!(d.k_bits.len(), d.nd * d.l_max * kv_dim);
+        assert_eq!(d.out.len(), d.nd * q_dim);
+        assert_eq!(d.ctx_lens.len(), d.nd);
+        assert_eq!(g.forward.ids.len(), g.forward.seg_ids.len());
+        assert_eq!(g.generation.prompts.len(), g.generation.tokens.len());
+        assert!(g.generation.tokens.iter().all(|t| t.len() == g.generation.steps));
+    }
+
+    /// THE §6.6 correctness gate: the Rust CPU decode-attention kernel vs
+    /// the JAX oracle's exported vectors, all tiers.
+    #[test]
+    fn cpu_attention_matches_jax_oracle() {
+        let Some(g) = golden() else { return };
+        let d = &g.decode_attn;
+        let shape = AttnShape {
+            n_heads: d.n_heads,
+            n_kv_heads: d.n_kv_heads,
+            head_dim: d.head_dim,
+        };
+        for tier in [Tier::Scalar, Tier::Optimized] {
+            let mut out = vec![0f32; d.out.len()];
+            decode_attention_dense(
+                shape, &d.q, &d.k_bits, &d.v_bits, &d.ctx_lens, d.l_max, &mut out, tier,
+            );
+            for (i, (a, b)) in out.iter().zip(&d.out).enumerate() {
+                assert!(
+                    (a - b).abs() <= 2e-4 * b.abs().max(1.0),
+                    "{tier:?} elem {i}: rust {a} vs jax {b}"
+                );
+            }
+        }
+    }
+}

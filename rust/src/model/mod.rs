@@ -1,0 +1,9 @@
+//! Model-level types shared by the engine, scheduler, and simulator:
+//! serving requests, sequence lifecycle state, and the golden-vector
+//! loader that cross-validates the Rust engine against the JAX oracle.
+
+mod golden;
+mod request;
+
+pub use golden::{DecodeAttnGolden, ForwardGolden, GenerationGolden, Golden};
+pub use request::{Request, SeqPhase, Sequence};

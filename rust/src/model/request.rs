@@ -1,0 +1,158 @@
+//! Serving requests and live sequence state.
+
+use crate::kvcache::SeqId;
+
+/// An inference request: a prompt and a generation budget.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: SeqId,
+    pub prompt: Vec<i32>,
+    /// Maximum tokens to generate (the Table-3 caps).
+    pub max_gen: usize,
+    /// Optional EOS token: generation stops early when produced (§8.1's
+    /// "terminate generation when the EOS token is reached" mode).
+    pub eos: Option<i32>,
+}
+
+impl Request {
+    pub fn new(id: SeqId, prompt: Vec<i32>, max_gen: usize) -> Self {
+        assert!(!prompt.is_empty() && max_gen > 0);
+        Request { id, prompt, max_gen, eos: None }
+    }
+
+    pub fn with_eos(mut self, eos: i32) -> Self {
+        self.eos = Some(eos);
+        self
+    }
+}
+
+/// Lifecycle phase of a scheduled sequence (§6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Waiting in the Prefill Scheduler's queue.
+    Queued,
+    /// Prompt being processed (possibly chunked across passes).
+    Prefilling,
+    /// In the Decode Scheduler's active set.
+    Decoding,
+    /// Generation finished; resources reclaimed.
+    Finished,
+}
+
+/// A request in flight.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub req: Request,
+    pub phase: SeqPhase,
+    /// Prompt tokens already prefilled (chunked prefill cursor).
+    pub prefilled: usize,
+    /// Generated tokens so far.
+    pub generated: Vec<i32>,
+    /// Times this sequence was preempted (telemetry + §6.2 re-prefill).
+    pub preemptions: usize,
+}
+
+impl Sequence {
+    pub fn new(req: Request) -> Self {
+        Sequence { req, phase: SeqPhase::Queued, prefilled: 0, generated: Vec::new(), preemptions: 0 }
+    }
+
+    pub fn id(&self) -> SeqId {
+        self.req.id
+    }
+
+    /// Tokens the prefill stage still has to process. After a preemption
+    /// this includes previously generated tokens (they are replayed as
+    /// prompt — §6.2: "their earlier progress has already been partially
+    /// completed").
+    pub fn pending_prefill(&self) -> usize {
+        self.full_prompt_len() - self.prefilled
+    }
+
+    /// Prompt + already-generated tokens (the effective prompt after
+    /// preemption). Prefilling this context makes the model's last-row
+    /// output the *next* new token, for fresh and re-prefilled sequences
+    /// alike.
+    pub fn full_prompt_len(&self) -> usize {
+        self.req.prompt.len() + self.generated.len()
+    }
+
+    /// Token at *logical* position `pos` of the full (prompt ++ generated)
+    /// stream — what a prefill chunk feeds the model.
+    pub fn token_at(&self, pos: usize) -> i32 {
+        if pos < self.req.prompt.len() {
+            self.req.prompt[pos]
+        } else {
+            self.generated[pos - self.req.prompt.len()]
+        }
+    }
+
+    /// Remaining generation budget.
+    pub fn remaining_gen(&self) -> usize {
+        self.req.max_gen - self.generated.len()
+    }
+
+    /// Whether the sequence is done after appending `tok`.
+    pub fn push_generated(&mut self, tok: i32) -> bool {
+        self.generated.push(tok);
+        let eos_hit = self.req.eos == Some(tok);
+        let budget_out = self.generated.len() >= self.req.max_gen;
+        if eos_hit || budget_out {
+            self.phase = SeqPhase::Finished;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Preempt: forget KV progress, requeue as prefill of prompt+prefix.
+    pub fn preempt(&mut self) {
+        self.phase = SeqPhase::Queued;
+        self.prefilled = 0;
+        self.preemptions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_lifecycle() {
+        let mut s = Sequence::new(Request::new(1, vec![1, 2, 3], 2));
+        assert_eq!(s.pending_prefill(), 3);
+        s.prefilled = 3;
+        s.phase = SeqPhase::Decoding;
+        assert!(!s.push_generated(7));
+        assert!(s.push_generated(8));
+        assert_eq!(s.phase, SeqPhase::Finished);
+        assert_eq!(s.generated, vec![7, 8]);
+    }
+
+    #[test]
+    fn eos_terminates_early() {
+        let mut s = Sequence::new(Request::new(1, vec![1], 100).with_eos(0));
+        s.phase = SeqPhase::Decoding;
+        assert!(!s.push_generated(5));
+        assert!(s.push_generated(0));
+        assert_eq!(s.generated.len(), 2);
+    }
+
+    #[test]
+    fn preemption_replays_generated_prefix() {
+        let mut s = Sequence::new(Request::new(1, vec![10, 11], 8));
+        s.prefilled = 2;
+        s.phase = SeqPhase::Decoding;
+        s.push_generated(20);
+        s.push_generated(21);
+        s.preempt();
+        // prompt(2) + generated(2): the whole generated prefix is replayed
+        // so the re-prefill's last-row output is the *next* token.
+        assert_eq!(s.full_prompt_len(), 4);
+        assert_eq!(s.pending_prefill(), 4);
+        assert_eq!(s.token_at(0), 10);
+        assert_eq!(s.token_at(2), 20);
+        assert_eq!(s.token_at(3), 21);
+        assert_eq!(s.preemptions, 1);
+    }
+}

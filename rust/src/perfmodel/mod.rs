@@ -1,0 +1,20 @@
+//! The paper's holistic two-stage performance model (§5).
+//!
+//! * [`stage1`] — theoretical upper bound from fundamental components:
+//!   GEMM arithmetic-to-IO intensity (Eq. 1–2), Parallelism-Memory
+//!   Efficiency (Eq. 3), the throughput roofline (Eq. 4), CPU bandwidth /
+//!   compute requirements (Eq. 5–6), and the prefill/decode-overlap KV
+//!   amplification (Eq. 7).
+//! * [`stage2`] — the realistic model: paged KV cache and bounded request
+//!   batch (Eq. 8–14), which converges to Stage 1 as K→∞ and b→1 and
+//!   predicts end-to-end execution time (94% average accuracy in §8.1).
+//! * [`hrm`] — MoE-Lightning's Hierarchical Roofline Model, reimplemented
+//!   for the Table-1/§3.1 contrast: it sees only arithmetic intensity and
+//!   IO bandwidth, missing CPU memory capacity and workload shape.
+
+pub mod hrm;
+pub mod stage1;
+pub mod stage2;
+
+pub use stage1::Stage1Model;
+pub use stage2::{Stage2Model, Stage2Prediction};

@@ -1,0 +1,313 @@
+//! Stage 1: theoretical performance upper bound (§5.1–§5.4).
+//!
+//! Inputs are fundamental system components only: GPU GEMM throughput,
+//! CPU-GPU IO bandwidth, CPU memory capacity for the KV cache, and the
+//! workload's (prompt length p, generation length g). This is the model
+//! that identifies CPU memory capacity — not IO bandwidth — as the primary
+//! limiter (the paper's central modeling insight).
+
+use crate::config::{MachineSpec, ModelSpec};
+
+/// Which resource binds the Stage-1 roofline (Eq. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// CPU memory capacity limits parallel tokens; throughput scales with
+    /// KV cache size.
+    MemoryCapacity,
+    /// The GPU is saturated; more KV capacity gives diminishing returns.
+    GpuCompute,
+}
+
+/// Stage-1 analytic model over a (machine, model) pair.
+#[derive(Debug, Clone)]
+pub struct Stage1Model {
+    pub machine: MachineSpec,
+    pub model: ModelSpec,
+}
+
+impl Stage1Model {
+    pub fn new(machine: MachineSpec, model: ModelSpec) -> Self {
+        Stage1Model { machine, model }
+    }
+
+    // -- Eq. 1: GEMM arithmetic-to-IO intensity ---------------------------
+
+    /// Per-token factor of Eq. 1:
+    /// `(6 m N_k + 2 + 2/s) / (6 m N_e + 2 + 2/s)`.
+    /// Multiplying by the number of parallel tokens `n` gives the GEMM
+    /// compute-per-weight-byte intensity `I`.
+    pub fn intensity_per_token(&self) -> f64 {
+        let m = self.model.m_ratio();
+        let s = self.model.gqa_group() as f64;
+        let nk = self.model.top_k as f64;
+        let ne = self.model.n_experts as f64;
+        (6.0 * m * nk + 2.0 + 2.0 / s) / (6.0 * m * ne + 2.0 + 2.0 / s)
+    }
+
+    /// Eq. 1 evaluated at `n` parallel tokens.
+    pub fn intensity(&self, n: usize) -> f64 {
+        n as f64 * self.intensity_per_token()
+    }
+
+    /// The paper's sparsity approximation of Eq. 1: `I ≈ n N_k / N_e`.
+    pub fn intensity_approx(&self, n: usize) -> f64 {
+        n as f64 * self.model.top_k as f64 / self.model.n_experts as f64
+    }
+
+    // -- Eq. 2: tokens needed to saturate GPU compute ---------------------
+
+    /// `n >= (C_GPU / B_IO) * N_e / N_k` (Table 2 uses this approximate
+    /// form; A40 + B=32 GB/s + Mixtral-8x7B gives ~19.2k tokens).
+    pub fn tokens_to_saturate(&self) -> f64 {
+        (self.machine.gpu.bf16_flops / self.machine.pcie_bw)
+            * self.model.n_experts as f64
+            / self.model.top_k as f64
+    }
+
+    /// Exact form using Eq. 1's full intensity expression. Note the
+    /// intensity here is FLOPs per weight *element*; with `weight_bytes`
+    /// bytes per element the IO requirement scales accordingly.
+    pub fn tokens_to_saturate_exact(&self) -> f64 {
+        let per_byte =
+            self.intensity_per_token() / self.model.weight_bytes as f64;
+        (self.machine.gpu.bf16_flops / self.machine.pcie_bw) / per_byte
+    }
+
+    /// KV-cache bytes needed to sustain `tokens_to_saturate()` parallel
+    /// sequences of total length `seq_len` (Table 2, right half).
+    pub fn kv_bytes_to_saturate(&self, seq_len: usize) -> f64 {
+        self.tokens_to_saturate() * seq_len as f64
+            * self.model.kv_bytes_per_token() as f64
+    }
+
+    // -- Eq. 3: Parallelism-Memory Efficiency ------------------------------
+
+    /// `PME = 2 (p + g) / ((2 p + g) g)` — parallel tokens contributed per
+    /// token-slot of KV capacity, amortized over the sequence's lifetime.
+    pub fn pme(&self, p: usize, g: usize) -> f64 {
+        assert!(g > 0, "generation length must be positive");
+        let (p, g) = (p as f64, g as f64);
+        2.0 * (p + g) / ((2.0 * p + g) * g)
+    }
+
+    // -- Eq. 4: throughput roofline ----------------------------------------
+
+    /// Model weight transfer time `δ = model_size / B_IO` (seconds).
+    pub fn delta(&self) -> f64 {
+        self.machine.transfer_secs(self.model.model_bytes())
+    }
+
+    /// GPU-bound token processing rate `T_GPU` (tokens/s): GEMM throughput
+    /// divided by activated FLOPs per token.
+    pub fn t_gpu(&self) -> f64 {
+        self.machine.gpu.bf16_flops / self.model.flops_per_token()
+    }
+
+    /// KV capacity in token slots for a byte budget.
+    pub fn kv_tokens(&self, kv_bytes: u64) -> f64 {
+        kv_bytes as f64 / self.model.kv_bytes_per_token() as f64
+    }
+
+    /// Eq. 4: `T_max = min(PME * M / δ, T_GPU)` in processed tokens/s
+    /// (prefill + decode), with `M` in token slots.
+    pub fn t_max(&self, p: usize, g: usize, kv_bytes: u64) -> f64 {
+        let io_bound = self.pme(p, g) * self.kv_tokens(kv_bytes) / self.delta();
+        io_bound.min(self.t_gpu())
+    }
+
+    /// Which side of Eq. 4's `min` binds.
+    pub fn bound(&self, p: usize, g: usize, kv_bytes: u64) -> Bound {
+        let io_bound = self.pme(p, g) * self.kv_tokens(kv_bytes) / self.delta();
+        if io_bound < self.t_gpu() {
+            Bound::MemoryCapacity
+        } else {
+            Bound::GpuCompute
+        }
+    }
+
+    /// Maximum GPU utilization `T_max / T_GPU` (Fig. 3).
+    pub fn max_gpu_utilization(&self, p: usize, g: usize, kv_bytes: u64) -> f64 {
+        self.t_max(p, g, kv_bytes) / self.t_gpu()
+    }
+
+    /// Generation throughput (tokens/s of *generated* output): the `g /
+    /// (p+g)` share of processed tokens.
+    pub fn generation_throughput(&self, p: usize, g: usize, kv_bytes: u64) -> f64 {
+        self.t_max(p, g, kv_bytes) * g as f64 / (p + g) as f64
+    }
+
+    // -- Eq. 5–6: CPU-side requirements ------------------------------------
+
+    /// Eq. 5: CPU memory bandwidth needed so KV reads + weight streaming
+    /// never stall: `B_mem = (M / M_weight) * B_IO`, with `M` the total
+    /// bytes touched per iteration (weights + KV cache).
+    pub fn cpu_mem_bw_required(&self, kv_bytes: u64) -> f64 {
+        let m_weight = self.model.model_bytes() as f64;
+        let m_total = m_weight + kv_bytes as f64;
+        (m_total / m_weight) * self.machine.pcie_bw
+    }
+
+    /// KV-read share of Eq. 5 (`B_KV`).
+    pub fn b_kv(&self, kv_bytes: u64) -> f64 {
+        self.cpu_mem_bw_required(kv_bytes) - self.machine.pcie_bw
+    }
+
+    /// Eq. 6: CPU attention FLOP rate needed to keep pace:
+    /// `T_CPU = 2 * s * I_cpu_attn * B_KV`. `I_cpu_attn` is the arithmetic
+    /// intensity of flash-decode attention per KV byte: each BF16 element
+    /// (2 bytes) takes one multiply-accumulate for the dot product or the
+    /// saxpby accumulate, i.e. 2 FLOPs / 2 bytes = 1 FLOP/byte.
+    pub fn cpu_flops_required(&self, kv_bytes: u64) -> f64 {
+        const I_CPU_ATTN: f64 = 1.0; // FLOP per KV byte
+        2.0 * self.model.gqa_group() as f64 * I_CPU_ATTN * self.b_kv(kv_bytes)
+    }
+
+    // -- Eq. 7: prefill/decode overlap -------------------------------------
+
+    /// Eq. 7: effective KV capacity under overlapped scheduling:
+    /// `C_eff = (p + g) / (p + g/2) * C_KV`.
+    pub fn effective_kv(&self, p: usize, g: usize, kv_bytes: u64) -> f64 {
+        let (p, g) = (p as f64, g as f64);
+        (p + g) / (p + g / 2.0) * kv_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+
+    fn m() -> Stage1Model {
+        Stage1Model::new(
+            MachineSpec::nominal(GpuSpec::a40()),
+            ModelSpec::mixtral_8x7b(),
+        )
+    }
+
+    #[test]
+    fn intensity_approx_close_to_exact() {
+        let s1 = m();
+        let exact = s1.intensity(1000);
+        let approx = s1.intensity_approx(1000);
+        // Eq. 1: the approximation is within ~5% for Mixtral-8x7B
+        assert!((exact - approx).abs() / approx < 0.05, "{exact} vs {approx}");
+    }
+
+    #[test]
+    fn table2_a40_tokens_to_saturate() {
+        // Paper Table 2: ~19.2k tokens for A40 at B = 32 GB/s.
+        let n = m().tokens_to_saturate();
+        assert!((n - 19_200.0).abs() / 19_200.0 < 0.05, "n = {n}");
+    }
+
+    #[test]
+    fn table2_a100_tokens_to_saturate() {
+        let s1 = Stage1Model::new(
+            MachineSpec::nominal(GpuSpec::a100()),
+            ModelSpec::mixtral_8x7b(),
+        );
+        let n = s1.tokens_to_saturate();
+        assert!((n - 40_000.0).abs() / 40_000.0 < 0.05, "n = {n}");
+    }
+
+    #[test]
+    fn table2_kv_sizes() {
+        // A40, 512-token sequences: ~1.2 TB of KV cache (paper: 1228 GB).
+        let kv = m().kv_bytes_to_saturate(512) / 1e9;
+        assert!((kv - 1228.0).abs() / 1228.0 < 0.08, "kv = {kv} GB");
+        // and ~half of it for 256-token sequences
+        let kv256 = m().kv_bytes_to_saturate(256) / 1e9;
+        assert!((kv256 * 2.0 - kv).abs() < 1.0);
+    }
+
+    #[test]
+    fn pme_formula() {
+        let s1 = m();
+        // closed form vs the defining sum: (p+g) / sum_{j=0..g-1} (p+j+1)
+        // The paper's denominator sums the per-step KV footprint.
+        // (Eq. 3 is the continuous approximation of the sum; it deviates
+        // for degenerate p,g ~ 1, so only realistic lengths are checked.)
+        for &(p, g) in &[(98usize, 32usize), (926, 128), (32, 16), (100, 256)] {
+            let sum: f64 = (0..g).map(|j| (p + j + 1) as f64).sum();
+            let direct = (p + g) as f64 / sum;
+            let closed = s1.pme(p, g);
+            // Eq. 3 uses the continuous approximation (2p+g)g/2 for the sum
+            assert!(
+                (closed - direct).abs() / direct < 0.02,
+                "p={p} g={g}: {closed} vs {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn pme_monotonicity() {
+        let s1 = m();
+        // longer generation -> lower PME (decode tokens are memory-hungry)
+        assert!(s1.pme(100, 32) > s1.pme(100, 64));
+        assert!(s1.pme(100, 64) > s1.pme(100, 256));
+        // higher prompt:generation ratio at fixed total -> higher PME
+        assert!(s1.pme(200, 56) > s1.pme(128, 128));
+    }
+
+    #[test]
+    fn roofline_regimes() {
+        let s1 = m();
+        // small KV -> memory-capacity bound; huge KV -> GPU bound (Fig. 3b)
+        assert_eq!(s1.bound(100, 128, 10 << 30), Bound::MemoryCapacity);
+        assert_eq!(s1.bound(100, 128, 4 << 40), Bound::GpuCompute);
+        // utilization is monotone in KV bytes and capped at 1
+        let u1 = s1.max_gpu_utilization(100, 128, 50 << 30);
+        let u2 = s1.max_gpu_utilization(100, 128, 200 << 30);
+        assert!(u1 < u2);
+        assert!(s1.max_gpu_utilization(100, 128, 4 << 40) <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn delta_is_5s_on_paper_testbed() {
+        let s1 = Stage1Model::new(
+            MachineSpec::paper_testbed(),
+            ModelSpec::mixtral_8x7b(),
+        );
+        assert!((s1.delta() - 4.8).abs() < 0.5, "delta = {}", s1.delta());
+    }
+
+    #[test]
+    fn cpu_bw_requirement_example() {
+        // §5.3's example: KV twice the model size -> B_mem ≈ 3 * B_IO.
+        let s1 = m();
+        let kv = 2 * s1.model.model_bytes();
+        let bw = s1.cpu_mem_bw_required(kv);
+        assert!((bw / s1.machine.pcie_bw - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_flops_requirement_is_hundreds_of_gflops() {
+        // §5.3: "the CPU attention computation [must] deliver throughput on
+        // the order of hundreds of GFLOPs".
+        let s1 = Stage1Model::new(
+            MachineSpec::paper_testbed(),
+            ModelSpec::mixtral_8x7b(),
+        );
+        let kv = 2 * s1.model.model_bytes();
+        let f = s1.cpu_flops_required(kv);
+        assert!(f > 100e9 && f < 1e12, "{f}");
+    }
+
+    #[test]
+    fn overlap_amplification() {
+        let s1 = m();
+        // Eq. 7 at p=100, g=128: (228)/(164) ≈ 1.39x
+        let eff = s1.effective_kv(100, 128, 100 << 30) / (100u64 << 30) as f64;
+        assert!((eff - 228.0 / 164.0).abs() < 1e-9);
+        // bounded: 1x (g→0) to 2x (p→0)
+        assert!((s1.effective_kv(1000, 1, 1 << 30) / (1u64 << 30) as f64) < 1.01);
+        assert!(s1.effective_kv(0, 1000, 1 << 30) / (1u64 << 30) as f64 <= 2.0);
+    }
+
+    #[test]
+    fn generation_share() {
+        let s1 = m();
+        let t = s1.t_max(100, 100, 100 << 30);
+        assert!((s1.generation_throughput(100, 100, 100 << 30) - t / 2.0).abs() < 1e-9);
+    }
+}

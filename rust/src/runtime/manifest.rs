@@ -1,0 +1,249 @@
+//! `artifacts/manifest.json` — the compile-time contract between the
+//! Python AOT path and the Rust coordinator.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// One executable argument: name, shape, dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable: HLO file + signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    /// (name, shape) per output, in tuple order.
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+/// The executable model config (mirrors python/compile/config.py).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    /// Compiled token-bucket size (static PJRT shape).
+    pub n_tok: usize,
+    /// Max context the decode path supports.
+    pub max_ctx: usize,
+}
+
+impl RuntimeConfig {
+    pub fn gqa_group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Cross-check against the Rust-side `ModelSpec` of the same name
+    /// (the two are maintained in parallel; drift is a build error).
+    pub fn check_against_spec(&self) -> Result<()> {
+        let spec = crate::config::ModelSpec::by_name(&self.name)
+            .with_context(|| format!("no ModelSpec named '{}'", self.name))?;
+        let pairs = [
+            ("vocab", self.vocab, spec.vocab),
+            ("d_model", self.d_model, spec.d_model),
+            ("n_layers", self.n_layers, spec.n_layers),
+            ("n_heads", self.n_heads, spec.n_heads),
+            ("n_kv_heads", self.n_kv_heads, spec.n_kv_heads),
+            ("head_dim", self.head_dim, spec.head_dim),
+            ("n_experts", self.n_experts, spec.n_experts),
+            ("top_k", self.top_k, spec.top_k),
+            ("d_ff", self.d_ff, spec.d_ff),
+        ];
+        for (what, a, b) in pairs {
+            if a != b {
+                bail!("config '{}' drift on {what}: manifest {a} vs ModelSpec {b}", self.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Everything the manifest records for one config.
+#[derive(Debug, Clone)]
+pub struct ConfigManifest {
+    pub config: RuntimeConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// The raw `weights` object (consumed by `transfer::WeightFile`).
+    pub weights: Json,
+    /// Golden-vector file name, if exported for this config.
+    pub golden: Option<String>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub configs: BTreeMap<String, ConfigManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e:?}"))?;
+        let version = root.req("format_version").as_usize().context("format_version")?;
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+        let mut configs = BTreeMap::new();
+        for (name, entry) in root.req("configs").as_obj().context("configs")? {
+            configs.insert(name.clone(), parse_config(name, entry)?);
+        }
+        Ok(Manifest { dir: dir.to_string(), configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigManifest> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config '{name}' not in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(&self, file: &str) -> String {
+        format!("{}/{file}", self.dir)
+    }
+}
+
+fn parse_config(name: &str, entry: &Json) -> Result<ConfigManifest> {
+    let c = entry.req("config");
+    let g = |k: &str| -> Result<usize> {
+        c.req(k).as_usize().with_context(|| format!("config.{k}"))
+    };
+    let config = RuntimeConfig {
+        name: name.to_string(),
+        vocab: g("vocab")?,
+        d_model: g("d_model")?,
+        n_layers: g("n_layers")?,
+        n_heads: g("n_heads")?,
+        n_kv_heads: g("n_kv_heads")?,
+        head_dim: g("head_dim")?,
+        n_experts: g("n_experts")?,
+        top_k: g("top_k")?,
+        d_ff: g("d_ff")?,
+        rope_theta: c.req("rope_theta").as_f64().context("rope_theta")?,
+        n_tok: g("n_tok")?,
+        max_ctx: g("max_ctx")?,
+    };
+
+    let mut artifacts = BTreeMap::new();
+    for (aname, a) in entry.req("artifacts").as_obj().context("artifacts")? {
+        let file = a.req("file").as_str().context("file")?.to_string();
+        let mut args = Vec::new();
+        for arg in a.req("args").as_arr().context("args")? {
+            let triple = arg.as_arr().context("arg triple")?;
+            args.push(ArgSpec {
+                name: triple[0].as_str().context("arg name")?.to_string(),
+                shape: triple[1].as_usize_vec().context("arg shape")?,
+                dtype: triple[2].as_str().context("arg dtype")?.to_string(),
+            });
+        }
+        let mut outputs = Vec::new();
+        for out in a.req("outputs").as_arr().context("outputs")? {
+            let pair = out.as_arr().context("output pair")?;
+            outputs.push((
+                pair[0].as_str().context("output name")?.to_string(),
+                pair[1].as_usize_vec().context("output shape")?,
+            ));
+        }
+        artifacts.insert(
+            aname.clone(),
+            ArtifactSpec { name: aname.clone(), file, args, outputs },
+        );
+    }
+
+    Ok(ConfigManifest {
+        config,
+        artifacts,
+        weights: entry.req("weights").clone(),
+        golden: entry.get("golden").and_then(|g| g.as_str()).map(String::from),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        std::path::Path::new("artifacts/manifest.json")
+            .exists()
+            .then(|| Manifest::load("artifacts").unwrap())
+    }
+
+    #[test]
+    fn loads_and_cross_checks_tiny() {
+        let Some(m) = manifest() else { return };
+        let tiny = m.config("tiny").unwrap();
+        tiny.config.check_against_spec().unwrap();
+        assert_eq!(tiny.config.n_tok, 16);
+        assert!(tiny.golden.is_some(), "tiny must ship golden vectors");
+    }
+
+    #[test]
+    fn all_five_executables_present_with_files() {
+        let Some(m) = manifest() else { return };
+        for cfg in m.configs.values() {
+            for name in ["embed", "task_a", "prefill_attn", "task_b", "head"] {
+                let a = cfg
+                    .artifacts
+                    .get(name)
+                    .unwrap_or_else(|| panic!("{}: missing {name}", cfg.config.name));
+                assert!(
+                    std::path::Path::new(&m.path(&a.file)).exists(),
+                    "{} missing",
+                    a.file
+                );
+                assert!(!a.args.is_empty() && !a.outputs.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn task_a_signature_matches_config() {
+        let Some(m) = manifest() else { return };
+        let cfg = m.config("tiny").unwrap();
+        let a = &cfg.artifacts["task_a"];
+        let c = &cfg.config;
+        assert_eq!(a.args[0].shape, vec![c.n_tok, c.d_model]); // x
+        assert_eq!(a.args[1].shape, vec![c.n_tok]); // positions
+        assert_eq!(a.args[3].shape, vec![c.d_model, c.q_dim()]); // wq
+        assert_eq!(a.outputs[0].1, vec![c.n_tok, c.n_heads, c.head_dim]); // q
+    }
+
+    #[test]
+    fn unknown_config_errors() {
+        let Some(m) = manifest() else { return };
+        assert!(m.config("huge").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! Python runs once (`make artifacts`); this module makes the Rust binary
+//! self-contained afterwards. Interchange is **HLO text** (the image's
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos with 64-bit
+//! instruction ids; the text parser reassigns ids — see
+//! /opt/xla-example/README.md and DESIGN.md).
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json`: per-config artifact
+//!   files, argument specs, weight table, golden-vector pointers.
+//! * [`executor`] — PJRT CPU client + compiled executables with argument
+//!   validation against the manifest specs.
+
+mod executor;
+mod manifest;
+
+pub use executor::{to_f32, to_i32, Arg, Engine as PjrtEngine, Executable};
+pub use manifest::{ArgSpec, ArtifactSpec, ConfigManifest, Manifest, RuntimeConfig};

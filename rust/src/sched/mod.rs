@@ -1,0 +1,14 @@
+//! The Resource-Aware Scheduler (§6.2) and Pipeline Profiler (§6.3).
+//!
+//! The scheduler overlaps prefill and decode in one pass plan per
+//! iteration, switching between *Normal Inference Mode* (both schedulers
+//! issue concurrently) and *Preemption Mode* (newest decode sequences are
+//! evicted and re-queued as prefill, old sequences are prioritized). It
+//! is engine-agnostic: the real VSLPipe engine and the `simhw` simulator
+//! drive the same planner against a [`PagedLayout`].
+
+mod profiler;
+mod resource_aware;
+
+pub use profiler::{PipelineProfiler, ProfileFit};
+pub use resource_aware::{PassPlan, SchedConfig, SchedMode, Scheduler};

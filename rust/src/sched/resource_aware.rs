@@ -1,0 +1,509 @@
+//! Prefill + Decode schedulers and their two interaction modes (§6.2).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::kvcache::{PagedLayout, SeqId};
+use crate::model::{Request, SeqPhase, Sequence};
+
+/// Scheduler tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedConfig {
+    /// Pipeline token budget per pass — the profiler's `n_real` (§6.3):
+    /// scheduling more tokens than this over-commits GPU compute.
+    pub token_budget: usize,
+    /// Max prefill tokens per sequence per pass (the engine's compiled
+    /// bucket bounds a chunk; the simulator uses larger chunks).
+    pub max_chunk: usize,
+    /// Only admit a sequence when its *whole* remaining prompt fits this
+    /// pass. The real engine requires this: the packed flash-attention
+    /// kernel sees one bucket, so a chunk continued next pass could not
+    /// attend to its own earlier tokens. The simulator (no numerics)
+    /// chunks freely.
+    pub atomic_prefill: bool,
+}
+
+impl SchedConfig {
+    pub fn new(token_budget: usize, max_chunk: usize) -> Self {
+        SchedConfig { token_budget, max_chunk, atomic_prefill: false }
+    }
+
+    pub fn atomic(mut self) -> Self {
+        self.atomic_prefill = true;
+        self
+    }
+}
+
+/// Mode the §6.2 state machine ended the pass planning in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    Normal,
+    Preemption,
+}
+
+/// One prefill chunk scheduled this pass.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillChunk {
+    pub id: SeqId,
+    /// First logical token position of the chunk.
+    pub start: usize,
+    pub len: usize,
+    /// Whether this chunk completes the sequence's (re-)prefill, i.e. its
+    /// last row yields the sequence's next generated token.
+    pub completes: bool,
+}
+
+/// One pass's work, with KV slots already reserved in the layout.
+#[derive(Debug, Clone, Default)]
+pub struct PassPlan {
+    /// Decode: (sequence, KV position of the token being fed).
+    pub decode: Vec<(SeqId, usize)>,
+    pub prefill: Vec<PrefillChunk>,
+    pub preempted: Vec<SeqId>,
+    pub mode: Option<SchedMode>,
+}
+
+impl PassPlan {
+    pub fn decode_tokens(&self) -> usize {
+        self.decode.len()
+    }
+
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill.iter().map(|c| c.len).sum()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.decode_tokens() + self.prefill_tokens()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.decode.is_empty() && self.prefill.is_empty()
+    }
+}
+
+/// The combined Prefill + Decode scheduler.
+pub struct Scheduler {
+    pub cfg: SchedConfig,
+    /// Prefill Scheduler: waiting (incl. preempted) sequences, FIFO with
+    /// preempted sequences at the front (they are "older").
+    queue: VecDeque<Sequence>,
+    /// Decode Scheduler: active sequences, keyed by id; iteration order is
+    /// id order, which is admission order (oldest first).
+    decoding: BTreeMap<SeqId, Sequence>,
+    finished: Vec<Sequence>,
+    preemptions: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedConfig) -> Self {
+        assert!(cfg.token_budget >= 1 && cfg.max_chunk >= 1);
+        Scheduler {
+            cfg,
+            queue: VecDeque::new(),
+            decoding: BTreeMap::new(),
+            finished: Vec::new(),
+            preemptions: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(Sequence::new(req));
+    }
+
+    pub fn submit_all(&mut self, reqs: impl IntoIterator<Item = Request>) {
+        for r in reqs {
+            self.submit(r);
+        }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_decode(&self) -> usize {
+        self.decoding.len()
+    }
+
+    pub fn finished(&self) -> &[Sequence] {
+        &self.finished
+    }
+
+    pub fn take_finished(&mut self) -> Vec<Sequence> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn total_preemptions(&self) -> usize {
+        self.preemptions
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.queue.is_empty() && self.decoding.is_empty()
+    }
+
+    /// Plan one pass. Reserves KV slots in `kv` for everything scheduled;
+    /// releases the blocks of preempted sequences.
+    pub fn plan(&mut self, kv: &mut PagedLayout) -> PassPlan {
+        let mut plan = PassPlan::default();
+
+        // --- Decode Scheduler: estimate blocks for all active sequences,
+        // preempt (newest first) until the rest fit.
+        let mut mode = SchedMode::Normal;
+        loop {
+            let need: usize = self
+                .decoding
+                .keys()
+                .map(|&id| {
+                    let t = kv.table(id);
+                    kv.layout().blocks_for(t.len + 1) - t.blocks.len()
+                })
+                .sum();
+            if need <= kv.free_blocks() {
+                break;
+            }
+            mode = SchedMode::Preemption;
+            // Newest = largest id (ids are assigned in admission order).
+            let victim = *self.decoding.keys().next_back().expect("need>0 => non-empty");
+            let mut seq = self.decoding.remove(&victim).unwrap();
+            kv.release(victim);
+            seq.preempt();
+            self.preemptions += 1;
+            plan.preempted.push(victim);
+            // Preempted sequences go to the *front* of the prefill queue:
+            // they are older than anything still waiting.
+            self.queue.push_front(seq);
+        }
+
+        // Schedule every surviving decode sequence (oldest first).
+        for (&id, _) in self.decoding.iter() {
+            let pos = kv.grow(id, 1).expect("pre-checked block estimate");
+            plan.decode.push((id, pos));
+        }
+
+        // --- Prefill Scheduler: fill the remaining pipeline budget, but
+        // only in normal mode (§6.2: preemption halts new admissions; the
+        // preempted sequences themselves still re-prefill — that is what
+        // hides the preemption cost).
+        let budget = self.cfg.token_budget.saturating_sub(plan.decode.len());
+        let admit_new = mode == SchedMode::Normal;
+        loop {
+            self.admit(kv, budget, admit_new, &mut plan);
+            if !plan.is_empty() || self.queue.is_empty() || !self.decoding.is_empty() {
+                break;
+            }
+            // Anti-livelock: nothing is decoding, nothing could be
+            // admitted, yet sequences wait — queued partial prefills must
+            // be hoarding the blocks. Evict the *youngest* block-holding
+            // one (its prefill restarts later) and retry.
+            let holder = (0..self.queue.len())
+                .rev()
+                .find(|&i| kv.len(self.queue[i].id()) > 0);
+            match holder {
+                Some(i) => {
+                    let seq = &mut self.queue[i];
+                    kv.release(seq.id());
+                    seq.preempt();
+                    self.preemptions += 1;
+                    plan.preempted.push(seq.id());
+                }
+                None => panic!(
+                    "prefill chunk cannot fit in an empty KV cache: \
+                     max_chunk {} vs capacity {} tokens — misconfigured layout",
+                    self.cfg.max_chunk,
+                    kv.layout().capacity_tokens()
+                ),
+            }
+        }
+
+        plan.mode = Some(if plan.preempted.is_empty() { SchedMode::Normal } else { SchedMode::Preemption });
+        plan
+    }
+
+    /// One admission sweep of the Prefill Scheduler (FIFO, chunked).
+    fn admit(
+        &mut self,
+        kv: &mut PagedLayout,
+        mut budget: usize,
+        admit_new: bool,
+        plan: &mut PassPlan,
+    ) {
+        let mut requeue: VecDeque<Sequence> = VecDeque::new();
+        while budget > 0 {
+            let Some(mut seq) = self.queue.pop_front() else { break };
+            let is_repreempt = seq.preemptions > 0;
+            if !admit_new && !is_repreempt {
+                requeue.push_front(seq);
+                break; // FIFO: nothing behind a blocked head may jump it
+            }
+            let chunk = seq.pending_prefill().min(self.cfg.max_chunk).min(budget);
+            debug_assert!(chunk > 0);
+            if self.cfg.atomic_prefill && chunk < seq.pending_prefill() {
+                assert!(
+                    seq.pending_prefill() <= self.cfg.max_chunk,
+                    "sequence {}: prompt+generated ({}) exceeds the compiled \
+                     bucket ({}) — atomic prefill cannot ever schedule it",
+                    seq.id(),
+                    seq.pending_prefill(),
+                    self.cfg.max_chunk
+                );
+                // Not enough budget left this pass; keep FIFO order.
+                requeue.push_front(seq);
+                break;
+            }
+            if !kv.contains(seq.id()) {
+                kv.register(seq.id());
+            }
+            match kv.grow(seq.id(), chunk) {
+                Some(start) => {
+                    seq.phase = SeqPhase::Prefilling;
+                    let completes = seq.prefilled + chunk == seq.full_prompt_len();
+                    plan.prefill.push(PrefillChunk { id: seq.id(), start, len: chunk, completes });
+                    seq.prefilled += chunk;
+                    budget -= chunk;
+                    if completes {
+                        // Hand off to the Decode Scheduler after the pass;
+                        // park in `decoding` now so ids keep age order.
+                        seq.phase = SeqPhase::Decoding;
+                        self.decoding.insert(seq.id(), seq);
+                    } else {
+                        // partially prefilled: stays at the queue front
+                        requeue.push_front(seq);
+                        break; // budget exhausted for it this pass anyway
+                    }
+                }
+                None => {
+                    // No blocks: grow is atomic (nothing to roll back);
+                    // drop an empty registration, requeue, stop admitting.
+                    if kv.contains(seq.id()) && kv.len(seq.id()) == 0 {
+                        kv.release(seq.id());
+                    }
+                    requeue.push_front(seq);
+                    break;
+                }
+            }
+        }
+        while let Some(s) = requeue.pop_front() {
+            self.queue.push_front(s);
+        }
+    }
+
+    /// Apply pass results: `tokens` holds (seq, generated token) for every
+    /// decode row and every completing prefill chunk. Finished sequences'
+    /// blocks are released (the Decode Scheduler's GC).
+    pub fn complete(
+        &mut self,
+        tokens: &[(SeqId, i32)],
+        kv: &mut PagedLayout,
+    ) -> usize {
+        let mut newly_finished = 0;
+        for &(id, tok) in tokens {
+            let seq = self.decoding.get_mut(&id).expect("token for unknown sequence");
+            if seq.push_generated(tok) {
+                let seq = self.decoding.remove(&id).unwrap();
+                kv.release(id);
+                self.finished.push(seq);
+                newly_finished += 1;
+            }
+        }
+        newly_finished
+    }
+
+    /// Look up a live sequence (decode set or queue) — engine helper for
+    /// assembling token batches.
+    pub fn sequence(&self, id: SeqId) -> Option<&Sequence> {
+        self.decoding
+            .get(&id)
+            .or_else(|| self.queue.iter().find(|s| s.id() == id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvLayout;
+    use crate::util::prop;
+
+    fn sched(budget: usize, chunk: usize) -> Scheduler {
+        Scheduler::new(SchedConfig::new(budget, chunk))
+    }
+
+    fn kv(block: usize, n: usize) -> PagedLayout {
+        PagedLayout::new(KvLayout::new(block, n))
+    }
+
+    fn run_all(s: &mut Scheduler, kv: &mut PagedLayout, tok: i32) -> (usize, usize) {
+        // Drive to completion with a constant generated token; returns
+        // (passes, max total tokens in any pass).
+        let mut passes = 0;
+        let mut max_tokens = 0;
+        while !s.is_done() {
+            let plan = s.plan(kv);
+            assert!(!plan.is_empty() || !s.is_done(), "livelock");
+            max_tokens = max_tokens.max(plan.total_tokens());
+            let mut toks = Vec::new();
+            for &(id, _) in &plan.decode {
+                toks.push((id, tok));
+            }
+            for c in plan.prefill.iter().filter(|c| c.completes) {
+                toks.push((c.id, tok));
+            }
+            s.complete(&toks, kv);
+            passes += 1;
+            assert!(passes < 100_000, "runaway");
+        }
+        (passes, max_tokens)
+    }
+
+    #[test]
+    fn single_sequence_lifecycle() {
+        let mut s = sched(64, 64);
+        let mut layout = kv(4, 64);
+        s.submit(Request::new(0, vec![1, 2, 3], 4));
+        // pass 1: prefill completes, yields first token
+        let plan = s.plan(&mut layout);
+        assert_eq!(plan.prefill.len(), 1);
+        assert!(plan.prefill[0].completes);
+        assert_eq!(plan.decode.len(), 0);
+        s.complete(&[(0, 9)], &mut layout);
+        // passes 2..4: decode
+        for step in 0..3 {
+            let plan = s.plan(&mut layout);
+            assert_eq!(plan.decode.len(), 1, "step {step}");
+            assert_eq!(plan.decode[0].1, 3 + step); // KV grows by one
+            s.complete(&[(0, 9)], &mut layout);
+        }
+        assert!(s.is_done());
+        assert_eq!(s.finished()[0].generated, vec![9, 9, 9, 9]);
+        assert_eq!(layout.used_blocks(), 0, "GC must release blocks");
+    }
+
+    #[test]
+    fn prefill_decode_overlap_in_steady_state() {
+        let mut s = sched(8, 8);
+        let mut layout = kv(4, 1000);
+        for i in 0..20 {
+            s.submit(Request::new(i, vec![1; 4], 8));
+        }
+        // after a few passes both lanes are active at once
+        let mut saw_overlap = false;
+        for _ in 0..10 {
+            let plan = s.plan(&mut layout);
+            if plan.decode_tokens() > 0 && plan.prefill_tokens() > 0 {
+                saw_overlap = true;
+            }
+            assert!(plan.total_tokens() <= 8, "token budget respected");
+            let mut toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 1)).collect();
+            toks.extend(plan.prefill.iter().filter(|c| c.completes).map(|c| (c.id, 1)));
+            s.complete(&toks, &mut layout);
+        }
+        assert!(saw_overlap, "prefill and decode must co-schedule");
+    }
+
+    #[test]
+    fn chunked_prefill_spans_passes() {
+        let mut s = sched(4, 4);
+        let mut layout = kv(4, 100);
+        s.submit(Request::new(0, vec![7; 10], 2));
+        let p1 = s.plan(&mut layout);
+        assert_eq!(p1.prefill[0].len, 4);
+        assert!(!p1.prefill[0].completes);
+        s.complete(&[], &mut layout);
+        let p2 = s.plan(&mut layout);
+        assert_eq!(p2.prefill[0].start, 4);
+        assert!(!p2.prefill[0].completes);
+        s.complete(&[], &mut layout);
+        let p3 = s.plan(&mut layout);
+        assert_eq!(p3.prefill[0].len, 2);
+        assert!(p3.prefill[0].completes);
+    }
+
+    #[test]
+    fn preemption_mode_evicts_newest_and_requeues() {
+        let mut s = sched(100, 100);
+        // Tight cache: 6 blocks of 4 slots = 24 token slots.
+        let mut layout = kv(4, 6);
+        // Two sequences, prompts of 8 -> 2 blocks each; gen long enough to
+        // overflow.
+        s.submit(Request::new(0, vec![1; 8], 32));
+        s.submit(Request::new(1, vec![1; 8], 32));
+        let p = s.plan(&mut layout);
+        assert_eq!(p.prefill_tokens(), 16); // both admitted (4 blocks)
+        s.complete(&[(0, 5), (1, 5)], &mut layout);
+        // decode grows each seq: 8->9 needs a 3rd block each; 2 free: fine
+        let mut preempted_seen = false;
+        for _ in 0..30 {
+            let plan = s.plan(&mut layout);
+            if !plan.preempted.is_empty() {
+                preempted_seen = true;
+                // newest (id 1) is the victim
+                assert_eq!(plan.preempted, vec![1]);
+                assert_eq!(plan.mode, Some(SchedMode::Preemption));
+                break;
+            }
+            let mut toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 5)).collect();
+            toks.extend(plan.prefill.iter().filter(|c| c.completes).map(|c| (c.id, 5)));
+            s.complete(&toks, &mut layout);
+        }
+        assert!(preempted_seen, "tight cache must trigger preemption");
+        layout.check_invariants();
+    }
+
+    #[test]
+    fn everything_finishes_even_under_thrashing() {
+        let mut s = sched(16, 16);
+        let mut layout = kv(2, 10); // 20 token slots, very tight
+        for i in 0..6 {
+            s.submit(Request::new(i, vec![2; 3], 5));
+        }
+        let (passes, max_tokens) = run_all(&mut s, &mut layout, 3);
+        assert_eq!(s.finished().len(), 6);
+        assert!(max_tokens <= 16);
+        assert!(passes > 3);
+        assert_eq!(layout.used_blocks(), 0);
+        for f in s.finished() {
+            assert_eq!(f.generated.len(), 5);
+        }
+    }
+
+    #[test]
+    fn eos_finishes_early() {
+        let mut s = sched(32, 32);
+        let mut layout = kv(4, 32);
+        s.submit(Request::new(0, vec![1, 2], 100).with_eos(0));
+        let plan = s.plan(&mut layout);
+        assert!(plan.prefill[0].completes);
+        s.complete(&[(0, 0)], &mut layout); // EOS immediately
+        assert!(s.is_done());
+        assert_eq!(s.finished()[0].generated, vec![0]);
+    }
+
+    #[test]
+    fn prop_scheduler_conserves_sequences_and_blocks() {
+        prop::check("scheduler_conservation", |rng| {
+            let n_req = rng.range(1, 12);
+            let mut s = sched(rng.range(4, 32), rng.range(2, 8));
+            // Feasibility (the paper's standing assumption): one sequence's
+            // full p+g footprint must fit in CPU memory. p+g <= 10 below,
+            // so keep capacity (block * n_blocks) >= 12.
+            let mut layout = kv(rng.range(1, 5), rng.range(14, 40));
+            for i in 0..n_req {
+                let p = rng.range(1, 6);
+                let g = rng.range(1, 6);
+                s.submit(Request::new(i as SeqId, vec![1; p], g));
+            }
+            let mut guard = 0;
+            while !s.is_done() {
+                let plan = s.plan(&mut layout);
+                layout.check_invariants();
+                let mut toks: Vec<_> =
+                    plan.decode.iter().map(|&(id, _)| (id, 1)).collect();
+                toks.extend(
+                    plan.prefill.iter().filter(|c| c.completes).map(|c| (c.id, 1)),
+                );
+                s.complete(&toks, &mut layout);
+                guard += 1;
+                assert!(guard < 10_000, "must terminate");
+            }
+            assert_eq!(s.finished().len(), n_req, "no sequence lost");
+            assert_eq!(layout.used_blocks(), 0, "no block leaked");
+        });
+    }
+}

@@ -1,0 +1,301 @@
+//! Discrete-event hardware simulator (§7's testbed, virtualized).
+//!
+//! The paper's machine (A40 + Xeon-8380 socket + PCIe 4.0) does not exist
+//! on this box, so paper-scale experiments run on an analytic machine
+//! with the *same* scheduler, paged-KV layout, and pipeline policy as the
+//! real engine, but a virtual clock driven by hardware constants
+//! (DESIGN.md §1). Per iteration the three overlapped lanes are costed:
+//!
+//! * IO   — one full weight sweep `δ = model / B_IO`, stretched by memory
+//!          -controller contention when CPU attention is heavy (§8.2);
+//! * GPU  — scheduled tokens × activated FLOPs / C_GPU;
+//! * CPU  — decode-attention KV scan at the kernel's achieved bandwidth.
+//!
+//! With prefill/decode overlap (MoE-Lens) the iteration takes the max of
+//! the lanes; the baselines compose them differently (`baselines`).
+
+use crate::config::{MachineSpec, ModelSpec};
+use crate::kvcache::{KvLayout, PagedLayout};
+use crate::metrics::{PassRecord, RunReport, Trace};
+use crate::model::Request;
+use crate::sched::{SchedConfig, Scheduler};
+
+/// Memory-controller contention coefficient: fraction of IO slowdown per
+/// unit of CPU-attention lane occupancy. Calibrated to §8.2's observation
+/// (weight sweeps stretch ~5 s → ~6 s under heavy attention ⇒ ~0.25).
+pub const CONTENTION_KAPPA: f64 = 0.25;
+
+/// One simulated deployment.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub machine: MachineSpec,
+    pub model: ModelSpec,
+    /// CPU-memory budget for the KV cache, bytes (the paper sweeps
+    /// 70–210 GB).
+    pub kv_bytes: u64,
+    /// Paged-KV block size in token slots (§5.5; 16 in the evaluation).
+    pub block_size: usize,
+    /// Fraction of CPU memory bandwidth the decode-attention kernel
+    /// achieves (1/3.1 for the auto-vectorized baseline, ~0.8 for the
+    /// hand-optimized kernel — Fig. 10).
+    pub cpu_attn_eff: f64,
+    /// Pipeline token budget per pass; `None` derives `n_real`
+    /// analytically from the machine/model (§6.3).
+    pub token_budget: Option<usize>,
+}
+
+impl SimConfig {
+    /// The paper's default MoE-Lens deployment for a (model, kv) pair.
+    pub fn moe_lens(model: ModelSpec, kv_gb: u64) -> Self {
+        SimConfig {
+            machine: MachineSpec::paper_testbed(),
+            model,
+            kv_bytes: kv_gb << 30,
+            block_size: 16,
+            cpu_attn_eff: 0.8,
+            token_budget: None,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        (self.kv_bytes / (self.block_size as u64 * self.model.kv_bytes_per_token()))
+            as usize
+    }
+
+    pub fn kv_layout(&self) -> KvLayout {
+        KvLayout::new(self.block_size, self.n_blocks().max(1))
+    }
+
+    /// Effective token budget (`n_real`).
+    pub fn effective_token_budget(&self) -> usize {
+        self.token_budget.unwrap_or_else(|| {
+            crate::sched::PipelineProfiler::analytic(&self.machine, &self.model).n_real
+        })
+    }
+}
+
+/// Lane costs of one simulated iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneCosts {
+    pub io: f64,
+    pub gpu: f64,
+    pub cpu: f64,
+    /// IO after memory-controller contention.
+    pub io_contended: f64,
+}
+
+/// Cost model shared by the MoE-Lens policy and the baselines.
+pub struct CostModel<'a> {
+    pub machine: &'a MachineSpec,
+    pub model: &'a ModelSpec,
+    pub cpu_attn_eff: f64,
+}
+
+impl<'a> CostModel<'a> {
+    /// Full weight-sweep time δ.
+    pub fn delta(&self) -> f64 {
+        self.machine.transfer_secs(self.model.model_bytes())
+    }
+
+    /// GPU GEMM time for `n` tokens.
+    pub fn gpu_time(&self, n_tokens: usize) -> f64 {
+        n_tokens as f64 * self.model.flops_per_token() / self.machine.gpu.bf16_flops
+    }
+
+    /// CPU decode-attention time for a total of `kv_tokens` context tokens
+    /// scanned this iteration.
+    pub fn cpu_attn_time(&self, kv_tokens: u64) -> f64 {
+        let bytes = kv_tokens as f64 * self.model.kv_bytes_per_token() as f64;
+        bytes / (self.machine.host.mem_bw * self.cpu_attn_eff)
+    }
+
+    /// Compose one overlapped iteration (§8.2 contention included).
+    pub fn overlapped_iter(&self, n_tokens: usize, kv_tokens: u64) -> LaneCosts {
+        let io = self.delta();
+        let gpu = self.gpu_time(n_tokens);
+        let cpu = self.cpu_attn_time(kv_tokens);
+        // CPU attention and the DMA engine contend at the memory
+        // controller: stretch IO by its lane occupancy.
+        let occupancy = (cpu / io.max(1e-12)).min(1.0);
+        let io_contended = io * (1.0 + CONTENTION_KAPPA * occupancy);
+        LaneCosts { io, gpu, cpu, io_contended }
+    }
+}
+
+/// The MoE-Lens policy on the simulated machine: resource-aware scheduler
+/// with prefill/decode overlap, VSLPipe-style lane overlap per iteration.
+pub struct SimMachine {
+    pub cfg: SimConfig,
+    pub sched: Scheduler,
+    pub kv: PagedLayout,
+}
+
+impl SimMachine {
+    pub fn new(cfg: SimConfig) -> Self {
+        let layout = cfg.kv_layout();
+        let budget = cfg.effective_token_budget();
+        let sched = Scheduler::new(SchedConfig::new(budget, budget));
+        SimMachine { cfg, sched, kv: PagedLayout::new(layout) }
+    }
+
+    /// Run a request batch to completion; returns the execution trace.
+    pub fn run(&mut self, requests: Vec<Request>) -> (Trace, RunReport) {
+        let n_req = requests.len();
+        self.sched.submit_all(requests);
+        let mut trace = Trace::new(self.kv.layout().n_blocks);
+        let costs = CostModel {
+            machine: &self.cfg.machine,
+            model: &self.cfg.model,
+            cpu_attn_eff: self.cfg.cpu_attn_eff,
+        };
+
+        let mut now = 0.0f64;
+        let mut pass_id = 0usize;
+        while !self.sched.is_done() {
+            let plan = self.sched.plan(&mut self.kv);
+            // Context tokens scanned by CPU attention: each decode token
+            // attends over its sequence's full cache.
+            let kv_scanned: u64 =
+                plan.decode.iter().map(|&(id, _)| self.kv.len(id) as u64).sum();
+            let lanes = costs.overlapped_iter(plan.total_tokens(), kv_scanned);
+            let dur = lanes.io_contended.max(lanes.gpu).max(lanes.cpu);
+            now += dur;
+
+            // All decode rows + completing prefill chunks yield one token.
+            // Token *values* are immaterial to the simulator: requests
+            // carry their effective generation length in `max_gen`.
+            let mut toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 1i32)).collect();
+            toks.extend(plan.prefill.iter().filter(|c| c.completes).map(|c| (c.id, 1i32)));
+            let generated = toks.len();
+            let finished = self.sched.complete(&toks, &mut self.kv);
+
+            trace.push(PassRecord {
+                pass_id,
+                t_end: now,
+                duration: dur,
+                prefill_tokens: plan.prefill_tokens(),
+                decode_tokens: plan.decode_tokens(),
+                generated,
+                finished,
+                preempted: plan.preempted.len(),
+                io_time: lanes.io_contended,
+                gpu_time: lanes.gpu,
+                cpu_time: lanes.cpu,
+                kv_blocks_used: self.kv.used_blocks(),
+                active_decode: self.sched.active_decode(),
+            });
+            pass_id += 1;
+            assert!(pass_id < 5_000_000, "simulation runaway");
+        }
+        let report = RunReport::from_trace(&trace, n_req);
+        (trace, report)
+    }
+}
+
+/// Convenience: run the MoE-Lens policy for a uniform (p, g) batch.
+pub fn run_uniform(
+    cfg: SimConfig,
+    p: usize,
+    g: usize,
+    k: usize,
+) -> (Trace, RunReport) {
+    let reqs: Vec<Request> =
+        (0..k).map(|i| Request::new(i as u64, vec![1; p], g)).collect();
+    SimMachine::new(cfg).run(reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::Stage2Model;
+
+    fn small_sim(kv_gb: u64) -> SimConfig {
+        SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), kv_gb)
+    }
+
+    #[test]
+    fn completes_and_counts_tokens() {
+        let (trace, report) = run_uniform(small_sim(70), 98, 32, 200);
+        assert_eq!(report.requests, 200);
+        assert_eq!(report.generated_tokens, 200 * 32);
+        assert!(report.wall_secs > 0.0);
+        assert!(trace.passes.len() >= 32, "at least g decode iterations");
+    }
+
+    #[test]
+    fn bigger_kv_cache_is_not_slower() {
+        let (_, r70) = run_uniform(small_sim(70), 98, 128, 400);
+        let (_, r210) = run_uniform(small_sim(210), 98, 128, 400);
+        assert!(
+            r210.generation_throughput >= r70.generation_throughput * 0.95,
+            "210GB {} vs 70GB {}",
+            r210.generation_throughput,
+            r70.generation_throughput
+        );
+    }
+
+    #[test]
+    fn throughput_within_stage2_model_envelope() {
+        // §8.1: the Stage-2 model predicts the simulated system closely
+        // (the sim and model share constants but not mechanisms: the sim
+        // runs the real scheduler with paging, chunking, preemption).
+        // K must oversubscribe the cache so Eq. 10's steady-state pipeline
+        // form applies (the paper's evaluation regime: K = 5gq or larger).
+        let (p, g, kv_gb, k) = (98usize, 64usize, 70u64, 20_000usize);
+        let (_, report) = run_uniform(small_sim(kv_gb), p, g, k);
+        let s2 = Stage2Model::new(
+            MachineSpec::paper_testbed(),
+            ModelSpec::mixtral_8x7b(),
+            16,
+        );
+        let pred = s2.predict(p, g, kv_gb << 30, k as f64);
+        let acc = crate::util::stats::prediction_accuracy(
+            pred.throughput,
+            report.generation_throughput,
+        );
+        assert!(
+            acc > 0.7,
+            "model {} vs sim {} (acc {acc})",
+            pred.throughput,
+            report.generation_throughput
+        );
+    }
+
+    #[test]
+    fn longer_generation_lowers_throughput() {
+        // §8.1: "System throughput decreases with longer generation
+        // lengths for a fixed prompt length" (PME effect).
+        let (_, g32) = run_uniform(small_sim(70), 98, 32, 300);
+        let (_, g256) = run_uniform(small_sim(70), 98, 256, 300);
+        assert!(
+            g32.processed_throughput > g256.processed_throughput,
+            "{} vs {}",
+            g32.processed_throughput,
+            g256.processed_throughput
+        );
+    }
+
+    #[test]
+    fn tight_cache_triggers_preemptions_loose_does_not() {
+        let mut tight = small_sim(70);
+        tight.kv_bytes = 2 << 30; // 2 GB: thrash
+        let (_, r_tight) = run_uniform(tight, 98, 256, 64);
+        let (_, r_loose) = run_uniform(small_sim(210), 98, 32, 64);
+        assert!(r_tight.preemptions > 0);
+        assert_eq!(r_loose.preemptions, 0);
+    }
+
+    #[test]
+    fn contention_stretches_io() {
+        let costs = CostModel {
+            machine: &MachineSpec::paper_testbed(),
+            model: &ModelSpec::mixtral_8x7b(),
+            cpu_attn_eff: 0.8,
+        };
+        let quiet = costs.overlapped_iter(1000, 0);
+        let heavy = costs.overlapped_iter(1000, 3_000_000);
+        assert_eq!(quiet.io_contended, quiet.io);
+        assert!(heavy.io_contended > heavy.io);
+        assert!(heavy.io_contended <= heavy.io * (1.0 + CONTENTION_KAPPA) + 1e-9);
+    }
+}

@@ -1,0 +1,128 @@
+//! The GPU-side weight buffer (§6.5): two layer-sized slots.
+//!
+//! "The size of the weight buffer is two times the model weight size
+//! divided by the number of layers" — double buffering so layer `i+1`
+//! streams in while layer `i` computes. Slots hand out interior
+//! mutability through a mutex per slot (the data mover writes one slot
+//! while the engine reads the other; the stage-boundary sync guarantees
+//! they never alias a slot).
+
+use std::sync::Mutex;
+
+/// One staging slot: a layer-sized f32 buffer + which layer it holds.
+struct Slot {
+    data: Vec<f32>,
+    /// Layer id resident in this slot, or `usize::MAX`.
+    layer: usize,
+}
+
+/// Double-buffered weight staging area.
+pub struct WeightBuffer {
+    slots: [Mutex<Slot>; 2],
+    layer_elems: usize,
+}
+
+impl WeightBuffer {
+    /// `layer_elems`: f32 elements per layer (all layers equal-sized by
+    /// construction of the export order).
+    pub fn new(layer_elems: usize) -> Self {
+        let mk = || Mutex::new(Slot { data: vec![0.0; layer_elems], layer: usize::MAX });
+        WeightBuffer { slots: [mk(), mk()], layer_elems }
+    }
+
+    pub fn layer_elems(&self) -> usize {
+        self.layer_elems
+    }
+
+    /// Total buffer footprint in bytes (the paper's "a few percent of the
+    /// model": 2 × model/n_layers).
+    pub fn footprint_bytes(&self) -> usize {
+        2 * self.layer_elems * 4
+    }
+
+    /// Slot index layer `layer` stages through (even/odd alternation).
+    pub fn slot_for(layer: usize) -> usize {
+        layer % 2
+    }
+
+    /// Write `src` into the slot for `layer` via `write` (the data mover's
+    /// packetized copy loop runs inside the closure).
+    pub fn fill<F>(&self, layer: usize, mut write: F)
+    where
+        F: FnMut(&mut [f32]),
+    {
+        let mut slot = self.slots[Self::slot_for(layer)].lock().unwrap();
+        slot.layer = usize::MAX; // invalid while partially written
+        write(&mut slot.data);
+        slot.layer = layer;
+    }
+
+    /// Read layer `layer`'s staged weights. Panics if the slot holds a
+    /// different layer — a pipeline-ordering bug, not a runtime condition.
+    pub fn read<R, F>(&self, layer: usize, read: F) -> R
+    where
+        F: FnOnce(&[f32]) -> R,
+    {
+        let slot = self.slots[Self::slot_for(layer)].lock().unwrap();
+        assert_eq!(
+            slot.layer, layer,
+            "weight buffer slot {} holds layer {}, wanted {layer} (stage sync bug)",
+            Self::slot_for(layer),
+            slot.layer as i64,
+        );
+        read(&slot.data)
+    }
+
+    /// Which layer a slot currently holds (telemetry).
+    pub fn resident(&self, slot: usize) -> Option<usize> {
+        let l = self.slots[slot].lock().unwrap().layer;
+        (l != usize::MAX).then_some(l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_then_read_roundtrip() {
+        let buf = WeightBuffer::new(8);
+        buf.fill(0, |dst| dst.copy_from_slice(&[1.0; 8]));
+        buf.fill(1, |dst| dst.copy_from_slice(&[2.0; 8]));
+        buf.read(0, |d| assert!(d.iter().all(|&x| x == 1.0)));
+        buf.read(1, |d| assert!(d.iter().all(|&x| x == 2.0)));
+        assert_eq!(buf.resident(0), Some(0));
+        assert_eq!(buf.resident(1), Some(1));
+    }
+
+    #[test]
+    fn slots_alternate_by_layer_parity() {
+        let buf = WeightBuffer::new(4);
+        buf.fill(2, |d| d.fill(2.0));
+        assert_eq!(buf.resident(0), Some(2));
+        buf.fill(5, |d| d.fill(5.0));
+        assert_eq!(buf.resident(1), Some(5));
+        // layer 4 overwrites slot 0 (evicting layer 2)
+        buf.fill(4, |d| d.fill(4.0));
+        buf.read(4, |d| assert!(d.iter().all(|&x| x == 4.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "stage sync bug")]
+    fn reading_wrong_layer_panics() {
+        let buf = WeightBuffer::new(4);
+        buf.fill(0, |d| d.fill(1.0));
+        buf.read(2, |_| ());
+    }
+
+    #[test]
+    fn footprint_is_two_layers() {
+        let buf = WeightBuffer::new(100);
+        assert_eq!(buf.footprint_bytes(), 2 * 100 * 4);
+        // Paper claim ("only a few percent of the original model size"):
+        // Mixtral-8x7B layer ≈ 2.9 GB -> 2 layers ≈ 6% of 94 GB.
+        let spec = crate::config::ModelSpec::mixtral_8x7b();
+        let frac = 2.0 * spec.layer_bytes() as f64 / spec.model_bytes() as f64;
+        assert!(frac < 0.08, "frac={frac}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Weight layout, weight buffer, and the Contiguous Data Mover (§6.5).
+//!
+//! The paper stores all model weights in pinned CPU memory and streams
+//! them to the GPU on demand; the weight buffer on the GPU holds two
+//! layers (double buffering), and a dedicated data-mover thread packetizes
+//! layer-granularity requests into ~100 MB transfers to keep the link
+//! saturated without head-of-line blocking latency-sensitive compute
+//! transfers.
+//!
+//! On this box the "GPU" is the PJRT CPU client, so the H2D copy is a
+//! memcpy through [`PcieLink`] — a bandwidth-throttled byte mover whose
+//! clock can be scaled (or disabled) so the same mechanism serves the real
+//! engine and timing experiments.
+
+mod buffer;
+mod data_mover;
+mod pcie;
+mod weights;
+
+pub use buffer::WeightBuffer;
+pub use data_mover::{DataMover, TransferRequest};
+pub use pcie::{LinkTiming, PcieLink};
+pub use weights::{LayerView, TensorView, WeightFile};

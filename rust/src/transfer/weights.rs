@@ -1,0 +1,233 @@
+//! The pinned host-side weight store: `artifacts/weights_<cfg>.bin` plus
+//! the manifest's tensor table.
+//!
+//! The file is one little-endian f32 stream in *streaming order*:
+//! embedding, per-layer groups (`ln1, wq, wk, wv, wo, ln2, router, w1,
+//! w3, w2`), final norm, LM head — the order the weight manager walks, so
+//! a layer's tensors are contiguous and the data mover can move a whole
+//! layer as one run (the "contiguous" in Contiguous Data Mover).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// One tensor's metadata + position in the host buffer.
+#[derive(Debug, Clone)]
+pub struct TensorView {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements.
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// A layer's weights as manifest-ordered tensor views.
+#[derive(Debug, Clone)]
+pub struct LayerView {
+    pub layer: usize,
+    pub tensors: Vec<TensorView>,
+    /// f32-element span [start, end) in the host buffer.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// The whole weight file resident in (what stands for pinned) host memory.
+pub struct WeightFile {
+    data: Vec<f32>,
+    tensors: Vec<TensorView>,
+    layers: Vec<LayerView>,
+}
+
+impl WeightFile {
+    /// Load from the artifact directory given the manifest's `weights`
+    /// object for one config.
+    pub fn load(dir: &str, weights_manifest: &Json) -> Result<WeightFile> {
+        let file = weights_manifest
+            .req("file")
+            .as_str()
+            .context("weights.file")?
+            .to_string();
+        let nbytes = weights_manifest.req("bytes").as_usize().context("weights.bytes")?;
+        let path = format!("{dir}/{file}");
+        let raw = std::fs::read(&path).with_context(|| format!("reading {path}"))?;
+        if raw.len() != nbytes {
+            bail!("{path}: expected {nbytes} bytes, found {}", raw.len());
+        }
+        if raw.len() % 4 != 0 {
+            bail!("{path}: not a whole number of f32s");
+        }
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut tensors = Vec::new();
+        for t in weights_manifest.req("tensors").as_arr().context("weights.tensors")? {
+            let name = t.req("name").as_str().context("tensor.name")?.to_string();
+            let shape: Vec<usize> = t
+                .req("shape")
+                .as_usize_vec()
+                .context("tensor.shape")?;
+            let offset_bytes = t.req("offset").as_usize().context("tensor.offset")?;
+            let len: usize = shape.iter().product();
+            tensors.push(TensorView { name, shape, offset: offset_bytes / 4, len });
+        }
+
+        // Group per-layer tensors ("layers.<i>.<name>") into LayerViews.
+        let mut layers: Vec<LayerView> = Vec::new();
+        for t in &tensors {
+            if let Some(rest) = t.name.strip_prefix("layers.") {
+                let li: usize = rest
+                    .split('.')
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .with_context(|| format!("bad layer tensor name {}", t.name))?;
+                if layers.len() <= li {
+                    layers.resize_with(li + 1, || LayerView {
+                        layer: 0,
+                        tensors: Vec::new(),
+                        start: usize::MAX,
+                        end: 0,
+                    });
+                }
+                let lv = &mut layers[li];
+                lv.layer = li;
+                lv.start = lv.start.min(t.offset);
+                lv.end = lv.end.max(t.offset + t.len);
+                lv.tensors.push(t.clone());
+            }
+        }
+        for lv in &layers {
+            // streaming order => each layer's span must be contiguous
+            let span: usize = lv.end - lv.start;
+            let sum: usize = lv.tensors.iter().map(|t| t.len).sum();
+            if span != sum {
+                bail!("layer {} tensors are not contiguous ({span} != {sum})", lv.layer);
+            }
+        }
+        Ok(WeightFile { data, tensors, layers })
+    }
+
+    /// Build directly from parts (tests).
+    pub fn from_parts(data: Vec<f32>, tensors: Vec<TensorView>, layers: Vec<LayerView>) -> Self {
+        WeightFile { data, tensors, layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn layer(&self, i: usize) -> &LayerView {
+        &self.layers[i]
+    }
+
+    /// The contiguous f32 run backing layer `i` — the data mover's source.
+    pub fn layer_data(&self, i: usize) -> &[f32] {
+        let lv = &self.layers[i];
+        &self.data[lv.start..lv.end]
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&TensorView> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("tensor '{name}' not in weight file"))
+    }
+
+    /// A named tensor's data (host view).
+    pub fn tensor_data(&self, name: &str) -> Result<&[f32]> {
+        let t = self.tensor(name)?;
+        Ok(&self.data[t.offset..t.offset + t.len])
+    }
+
+    /// A tensor's data within a *layer-local* buffer previously filled from
+    /// [`layer_data`] (i.e., the GPU weight-buffer view of the tensor).
+    pub fn tensor_in_layer<'a>(&self, layer: usize, name: &str, buf: &'a [f32]) -> Result<&'a [f32]> {
+        let lv = &self.layers[layer];
+        let full = format!("layers.{layer}.{name}");
+        let t = lv
+            .tensors
+            .iter()
+            .find(|t| t.name == full)
+            .with_context(|| format!("tensor '{full}' not in layer {layer}"))?;
+        let lo = t.offset - lv.start;
+        Ok(&buf[lo..lo + t.len])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> WeightFile {
+        // 2 layers, each with tensors a (2 elems) and b (3 elems).
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mk = |name: &str, off: usize, len: usize| TensorView {
+            name: name.into(),
+            shape: vec![len],
+            offset: off,
+            len,
+        };
+        let tensors = vec![
+            mk("embedding", 0, 2),
+            mk("layers.0.a", 2, 2),
+            mk("layers.0.b", 4, 3),
+            mk("layers.1.a", 7, 2),
+            mk("layers.1.b", 9, 3),
+        ];
+        let layers = vec![
+            LayerView { layer: 0, tensors: tensors[1..3].to_vec(), start: 2, end: 7 },
+            LayerView { layer: 1, tensors: tensors[3..5].to_vec(), start: 7, end: 12 },
+        ];
+        WeightFile::from_parts(data, tensors, layers)
+    }
+
+    #[test]
+    fn layer_data_is_contiguous_span() {
+        let w = toy();
+        assert_eq!(w.layer_data(0), &[2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(w.layer_data(1), &[7.0, 8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn tensor_lookup() {
+        let w = toy();
+        assert_eq!(w.tensor_data("embedding").unwrap(), &[0.0, 1.0]);
+        assert_eq!(w.tensor_data("layers.1.b").unwrap(), &[9.0, 10.0, 11.0]);
+        assert!(w.tensor_data("nope").is_err());
+    }
+
+    #[test]
+    fn tensor_in_layer_resolves_into_staged_buffer() {
+        let w = toy();
+        let staged: Vec<f32> = w.layer_data(1).to_vec();
+        let b = w.tensor_in_layer(1, "b", &staged).unwrap();
+        assert_eq!(b, &[9.0, 10.0, 11.0]);
+        let a = w.tensor_in_layer(1, "a", &staged).unwrap();
+        assert_eq!(a, &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn loads_real_tiny_artifact() {
+        // Smoke-load the actual AOT output when present (CI always builds
+        // artifacts first; guard anyway to keep unit tests hermetic).
+        let manifest_path = "artifacts/manifest.json";
+        if !std::path::Path::new(manifest_path).exists() {
+            return;
+        }
+        let text = std::fs::read_to_string(manifest_path).unwrap();
+        let manifest = Json::parse(&text).unwrap();
+        let wm = manifest.req("configs").req("tiny").req("weights");
+        let w = WeightFile::load("artifacts", wm).unwrap();
+        assert_eq!(w.n_layers(), 2);
+        // embedding: vocab 512 x d_model 64
+        assert_eq!(w.tensor("embedding").unwrap().shape, vec![512, 64]);
+        // every layer span must match ModelSpec::layer_bytes / 4
+        let spec = crate::config::ModelSpec::tiny();
+        let expect = (spec.layer_bytes() / spec.weight_bytes as u64) as usize;
+        assert_eq!(w.layer_data(0).len(), expect);
+    }
+}

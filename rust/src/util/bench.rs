@@ -1,0 +1,165 @@
+//! Local benchmark harness (no `criterion` offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use this
+//! module: warmup + timed iterations with median/mean/p10/p90 reporting,
+//! plus table/CSV printers so every bench regenerates its paper table or
+//! figure series in a uniform format (consumed by EXPERIMENTS.md).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over per-iteration wall times.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pick = |q: f64| samples[((n - 1) as f64 * q).round() as usize];
+        Stats {
+            iters: n,
+            mean: total / n as u32,
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Time `f` for roughly `budget` (after `warmup` iterations), at least
+/// `min_iters` and at most `max_iters` samples.
+pub fn bench<F: FnMut()>(warmup: usize, budget: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < budget || samples.len() < 3) && samples.len() < 10_000 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    Stats::from_samples(samples)
+}
+
+/// One-shot measurement.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Fixed-width table printer for paper-shaped output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Also emit machine-readable CSV (prefixed so logs stay greppable).
+    pub fn print_csv(&self, tag: &str) {
+        println!("CSV,{tag},{}", self.headers.join(","));
+        for row in &self.rows {
+            println!("CSV,{tag},{}", row.join(","));
+        }
+    }
+}
+
+/// Standard bench banner so bench_output.txt is self-describing.
+pub fn banner(id: &str, what: &str) {
+    println!();
+    println!("=== {id}: {what} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_ordered_stats() {
+        let s = bench(1, Duration::from_millis(5), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.p10 <= s.p90);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+        t.print_csv("test");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_secs(2)).contains("s"));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_duration(Duration::from_nanos(5)).contains("ns"));
+    }
+}

@@ -1,0 +1,108 @@
+//! BF16 storage helpers (no `half` crate offline).
+//!
+//! The paper stores the KV cache in BF16 and up-converts to FP32 for the
+//! CPU attention computation (§5.3). BF16 is the top 16 bits of an f32, so
+//! conversion is a shift; we use round-to-nearest-even on the store path
+//! (what JAX's `astype(bfloat16)` does), which the golden vectors encode.
+
+/// Round an f32 to the nearest BF16 (ties to even), returned as raw bits.
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // quiet NaN, preserve sign
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let guard = (bits >> 15) & 1; // highest dropped bit
+    let sticky = bits & 0x7FFF; // remaining dropped bits
+    let lsb = (bits >> 16) & 1; // lsb of the kept mantissa
+    let mut hi = (bits >> 16) as u16;
+    // Round up when past halfway, or exactly halfway and the kept lsb is
+    // odd (ties-to-even).
+    if guard == 1 && (sticky != 0 || lsb == 1) {
+        hi = hi.wrapping_add(1);
+    }
+    hi
+}
+
+/// Expand BF16 bits to f32 (exact).
+#[inline(always)]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round-trip an f32 through BF16 (the KV-cache store+load numerics).
+#[inline(always)]
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+/// Convert a slice in place to BF16-rounded f32 values.
+pub fn round_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = bf16_round(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 65280.0] {
+            assert_eq!(bf16_round(x), x, "{x} should be bf16-exact");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest() {
+        // bf16 has 7 explicit mantissa bits: at exponent 0 the step is 2^-7.
+        let step = 1.0078125f32; // 1 + 2^-7: exactly representable
+        assert_eq!(bf16_round(step), step);
+        // 1 + 2^-8 is exactly halfway between 1.0 and 1 + 2^-7;
+        // ties-to-even keeps the even mantissa (1.0).
+        assert_eq!(bf16_round(1.00390625), 1.0);
+        // just past halfway rounds up
+        assert_eq!(bf16_round(1.005859375), step); // 1 + 3*2^-9
+        // below halfway rounds down
+        assert_eq!(bf16_round(1.001953125), 1.0); // 1 + 2^-9
+        // halfway above an odd mantissa rounds *up* to the even one
+        assert_eq!(bf16_round(1.01171875), 1.015625); // 1+3*2^-8 -> 1+2^-6
+    }
+
+    #[test]
+    fn rounding_error_bounded() {
+        // relative error of bf16 is <= 2^-8
+        let mut x = 0.001f32;
+        while x < 1e6 {
+            let r = bf16_round(x);
+            assert!(((r - x) / x).abs() <= 1.0 / 256.0, "{x} -> {r}");
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn negative_symmetry() {
+        for i in 0..1000 {
+            let x = (i as f32) * 0.137 + 0.01;
+            assert_eq!(bf16_round(-x), -bf16_round(x));
+        }
+    }
+
+    #[test]
+    fn matches_jax_semantics_examples() {
+        // values checked against jnp.float32(jnp.bfloat16(x))
+        assert_eq!(bf16_round(1.000123), 1.0);
+        assert_eq!(bf16_round(3.14159265), 3.140625);
+        assert_eq!(bf16_round(-2.71828), -2.71875);
+    }
+
+    #[test]
+    fn special_values() {
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert_eq!(bf16_round(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities replacing unavailable third-party crates
+//! (offline environment — see DESIGN.md §3).
+
+pub mod args;
+pub mod bench;
+pub mod bf16;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,99 @@
+//! Small numeric/statistics helpers: least-squares line fit (the pipeline
+//! profiler, paper Fig. 7), means, and prediction-accuracy scoring
+//! (the paper's "94% accuracy" metric, §8.1).
+
+/// Least-squares fit `y = slope * x + intercept`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LineFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+/// Fit a line to (x, y) samples. Panics on fewer than 2 points.
+pub fn line_fit(xs: &[f64], ys: &[f64]) -> LineFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least 2 points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    assert!(sxx > 0.0, "degenerate x values");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (slope * x + intercept);
+            e * e
+        })
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    LineFit { slope, intercept, r2 }
+}
+
+/// The paper's accuracy metric: `1 - |pred - measured| / measured`,
+/// clamped at 0. Averaged over cells it yields the "94% accuracy" claim.
+pub fn prediction_accuracy(predicted: f64, measured: f64) -> f64 {
+    if measured == 0.0 {
+        return if predicted == 0.0 { 1.0 } else { 0.0 };
+    }
+    (1.0 - (predicted - measured).abs() / measured).max(0.0)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean (used for speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0];
+        let f = line_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_r2_below_one() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let ys = [0.1, 0.9, 2.2, 2.8, 4.1];
+        let f = line_fit(&xs, &ys);
+        assert!(f.r2 > 0.97 && f.r2 < 1.0);
+        assert!((f.slope - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn accuracy_metric() {
+        assert!((prediction_accuracy(94.0, 100.0) - 0.94).abs() < 1e-12);
+        assert!((prediction_accuracy(106.0, 100.0) - 0.94).abs() < 1e-12);
+        assert_eq!(prediction_accuracy(300.0, 100.0), 0.0);
+        assert_eq!(prediction_accuracy(0.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,141 @@
+//! Workload generators (§7, Table 3).
+//!
+//! The real datasets (MTBench, RAG-12000, AIME-2024) are offline-
+//! unavailable; the paper's evaluation depends on them only as (prompt
+//! length, generation cap) distributions, so each generator draws prompt
+//! lengths from a clipped lognormal fitted to the dataset's published
+//! (avg, max) and fills prompts with seeded random token ids
+//! (DESIGN.md §1).
+
+use crate::config::WorkloadSpec;
+use crate::kvcache::SeqId;
+use crate::model::Request;
+use crate::util::rng::Rng;
+
+/// Generator over one workload family.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    pub spec: &'static WorkloadSpec,
+    /// Generation cap for this run (one of `spec.gen_lengths`).
+    pub max_gen: usize,
+    /// Vocabulary to draw token ids from.
+    pub vocab: usize,
+    /// lognormal parameters fitted to (avg, max).
+    mu: f64,
+    sigma: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(spec: &'static WorkloadSpec, max_gen: usize, vocab: usize) -> Self {
+        assert!(
+            spec.gen_lengths.contains(&max_gen) || max_gen > 0,
+            "unusual generation cap {max_gen}"
+        );
+        // Fit: mean = exp(mu + sigma^2/2); put the max at ~3 sigma.
+        // sigma from the max/avg ratio keeps the clipped tail small.
+        let ratio = spec.max_prefill as f64 / spec.avg_prefill as f64;
+        let sigma = (ratio.ln() / 3.0).clamp(0.1, 1.5);
+        let mu = (spec.avg_prefill as f64).ln() - sigma * sigma / 2.0;
+        WorkloadGen { spec, max_gen, vocab, mu, sigma }
+    }
+
+    /// One prompt length: clipped lognormal in [1, max_prefill].
+    pub fn prompt_len(&self, rng: &mut Rng) -> usize {
+        let l = rng.lognormal(self.mu, self.sigma).round() as usize;
+        l.clamp(1, self.spec.max_prefill)
+    }
+
+    /// Generate a batch of `k` requests with ids starting at `base_id`.
+    pub fn batch(&self, k: usize, base_id: SeqId, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed ^ 0xB417C0DE);
+        (0..k)
+            .map(|i| {
+                let p = self.prompt_len(&mut rng);
+                let prompt: Vec<i32> =
+                    (0..p).map(|_| rng.range(1, self.vocab - 1) as i32).collect();
+                Request::new(base_id + i as SeqId, prompt, self.max_gen)
+            })
+            .collect()
+    }
+
+    /// Average prompt length of the generator (should track `spec.avg`).
+    pub fn empirical_avg(&self, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let total: usize = (0..n).map(|_| self.prompt_len(&mut rng)).sum();
+        total as f64 / n as f64
+    }
+}
+
+/// Draw per-request *actual* generation lengths under EOS termination:
+/// geometric with mean ~`mean_frac * max_gen`, capped at `max_gen`
+/// (models §8.1's EOS mode; the paper reports an extra 5.3x-vs-baseline
+/// when enabled).
+pub fn eos_gen_len(max_gen: usize, mean_frac: f64, rng: &mut Rng) -> usize {
+    assert!((0.0..=1.0).contains(&mean_frac));
+    if mean_frac >= 1.0 {
+        return max_gen;
+    }
+    let mean = (max_gen as f64 * mean_frac).max(1.0);
+    let p = 1.0 / mean;
+    let mut len = 1;
+    while len < max_gen && !rng.chance(p) {
+        len += 1;
+    }
+    len
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AIME, MTBENCH, RAG};
+
+    #[test]
+    fn mtbench_lengths_track_table3() {
+        let g = WorkloadGen::new(&MTBENCH, 32, 2048);
+        let avg = g.empirical_avg(20_000, 1);
+        assert!(
+            (avg - 98.0).abs() / 98.0 < 0.15,
+            "avg {avg} should be near Table 3's 98"
+        );
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let l = g.prompt_len(&mut rng);
+            assert!((1..=450).contains(&l));
+        }
+    }
+
+    #[test]
+    fn rag_is_prefill_heavy_and_aime_is_not() {
+        let rag = WorkloadGen::new(&RAG, 128, 2048);
+        let aime = WorkloadGen::new(&AIME, 512, 2048);
+        assert!(rag.empirical_avg(5000, 3) > 5.0 * aime.empirical_avg(5000, 3));
+    }
+
+    #[test]
+    fn batches_are_deterministic_and_valid() {
+        let g = WorkloadGen::new(&MTBENCH, 64, 512);
+        let a = g.batch(50, 100, 7);
+        let b = g.batch(50, 100, 7);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.id, y.id);
+        }
+        assert_eq!(a[0].id, 100);
+        assert_eq!(a[49].id, 149);
+        for r in &a {
+            assert!(r.prompt.iter().all(|&t| t >= 1 && (t as usize) < 512));
+            assert_eq!(r.max_gen, 64);
+        }
+    }
+
+    #[test]
+    fn eos_mode_shortens_mean_generation() {
+        let mut rng = Rng::new(5);
+        let n = 5000;
+        let total: usize = (0..n).map(|_| eos_gen_len(256, 0.5, &mut rng)).sum();
+        let mean = total as f64 / n as f64;
+        assert!(mean > 64.0 && mean < 160.0, "mean={mean}");
+        assert_eq!(eos_gen_len(256, 1.0, &mut rng), 256);
+    }
+}

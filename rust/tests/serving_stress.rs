@@ -1,0 +1,117 @@
+//! Stress/soak integration for the real engine: mixed request shapes,
+//! EOS termination, determinism, and resource-conservation invariants
+//! under KV pressure. (Skipped when artifacts are absent, as elsewhere.)
+
+use moe_lens::engine::{EngineConfig, ServingEngine};
+use moe_lens::model::{Request, SeqPhase};
+use moe_lens::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn mixed_requests(n: usize, n_tok: usize, vocab: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let p = rng.range(1, n_tok / 2);
+            let g = rng.range(1, n_tok - p);
+            let prompt: Vec<i32> = (0..p).map(|_| rng.range(1, vocab - 1) as i32).collect();
+            Request::new(i as u64, prompt, g)
+        })
+        .collect()
+}
+
+#[test]
+fn mixed_batch_all_finish_with_exact_budgets() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = ServingEngine::load(EngineConfig::for_model("tiny")).unwrap();
+    let reqs = mixed_requests(24, eng.n_tok(), eng.pjrt.config.vocab, 11);
+    let budgets: Vec<usize> = reqs.iter().map(|r| r.max_gen).collect();
+    let (_, report) = eng.run(reqs).unwrap();
+    assert_eq!(report.requests, 24);
+    let mut fin = eng.sched.take_finished();
+    assert_eq!(fin.len(), 24, "every sequence must finish");
+    fin.sort_by_key(|s| s.id());
+    for (seq, budget) in fin.iter().zip(&budgets) {
+        assert_eq!(seq.phase, SeqPhase::Finished);
+        assert_eq!(seq.generated.len(), *budget, "no EOS -> exact budget");
+        let vocab = eng.pjrt.config.vocab as i32;
+        assert!(seq.generated.iter().all(|&t| (0..vocab).contains(&t)));
+    }
+    assert_eq!(
+        report.generated_tokens,
+        budgets.iter().sum::<usize>(),
+        "generated-token accounting"
+    );
+}
+
+#[test]
+fn runs_are_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let out: Vec<Vec<Vec<i32>>> = (0..2)
+        .map(|_| {
+            let mut eng = ServingEngine::load(EngineConfig::for_model("tiny")).unwrap();
+            let reqs = mixed_requests(10, eng.n_tok(), eng.pjrt.config.vocab, 77);
+            eng.run(reqs).unwrap();
+            let mut fin = eng.sched.take_finished();
+            fin.sort_by_key(|s| s.id());
+            fin.into_iter().map(|s| s.generated).collect()
+        })
+        .collect();
+    assert_eq!(out[0], out[1], "same requests, same engine, same tokens");
+}
+
+#[test]
+fn kv_pressure_soak_conserves_blocks() {
+    if !have_artifacts() {
+        return;
+    }
+    // Cache sized so only a fraction of the batch fits at once: forces
+    // queueing, overlap, and (depending on shapes) preemption; everything
+    // must still finish and release every block.
+    let mut cfg = EngineConfig::for_model("tiny");
+    cfg.block_size = 4;
+    cfg.kv_blocks = 12; // 48 token slots
+    let mut eng = ServingEngine::load(cfg).unwrap();
+    let reqs = mixed_requests(20, eng.n_tok(), eng.pjrt.config.vocab, 5);
+    let (trace, report) = eng.run(reqs).unwrap();
+    assert_eq!(eng.sched.finished().len(), 20);
+    let last = trace.passes.last().unwrap();
+    assert_eq!(last.kv_blocks_used, 0, "all blocks released at the end");
+    assert!(report.passes >= 20 / 2, "tight cache cannot do it in few passes");
+}
+
+#[test]
+fn eos_mixed_with_budget_termination() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = ServingEngine::load(EngineConfig::for_model("tiny")).unwrap();
+    let vocab = eng.pjrt.config.vocab as i32;
+    // Half the requests treat *every* token as EOS-eligible by setting an
+    // impossible EOS (never fires); the rest use token 0 (may fire).
+    let mut reqs = mixed_requests(12, eng.n_tok(), eng.pjrt.config.vocab, 3);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            r.eos = Some(0);
+        } else {
+            r.eos = Some(vocab); // out of range: never generated
+        }
+    }
+    let budgets: Vec<(usize, Option<i32>)> =
+        reqs.iter().map(|r| (r.max_gen, r.eos)).collect();
+    eng.run(reqs).unwrap();
+    let mut fin = eng.sched.take_finished();
+    fin.sort_by_key(|s| s.id());
+    for (seq, (budget, eos)) in fin.iter().zip(&budgets) {
+        assert!(seq.generated.len() <= *budget);
+        if seq.generated.len() < *budget {
+            assert_eq!(seq.generated.last().copied(), eos.as_ref().copied().map(|e| e));
+        }
+    }
+}

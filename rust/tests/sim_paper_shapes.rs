@@ -1,0 +1,106 @@
+//! Paper-shape integration over the simulated testbed: claims from §5/§8
+//! asserted end to end through the scheduler + simulator (not just the
+//! analytic models), including workload-generator-driven batches and the
+//! EOS mode.
+
+use moe_lens::config::{ModelSpec, AIME, MTBENCH, RAG};
+use moe_lens::model::Request;
+use moe_lens::simhw::{run_uniform, SimConfig, SimMachine};
+use moe_lens::util::rng::Rng;
+use moe_lens::workload::{eos_gen_len, WorkloadGen};
+
+#[test]
+fn generated_lengths_drive_simulated_time() {
+    // EOS mode (§8.1): shorter effective generations must reduce wall
+    // time for the same request count.
+    let cfg = SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 70);
+    let mut rng = Rng::new(9);
+    let full: Vec<Request> =
+        (0..800).map(|i| Request::new(i, vec![1; 98], 128)).collect();
+    let eos: Vec<Request> = (0..800)
+        .map(|i| Request::new(i, vec![1; 98], eos_gen_len(128, 0.5, &mut rng)))
+        .collect();
+    let (_, r_full) = SimMachine::new(cfg.clone()).run(full);
+    let (_, r_eos) = SimMachine::new(cfg).run(eos);
+    assert!(
+        r_eos.wall_secs < r_full.wall_secs,
+        "EOS {} vs full {}",
+        r_eos.wall_secs,
+        r_full.wall_secs
+    );
+    assert!(r_eos.generated_tokens < r_full.generated_tokens);
+}
+
+#[test]
+fn workload_generators_run_through_the_simulator() {
+    // Table-3-shaped batches (lognormal prompt lengths) through the full
+    // scheduler+simulator path; all requests finish, counts conserve.
+    for (wl, g) in [(&MTBENCH, 64usize), (&RAG, 128), (&AIME, 512)] {
+        let gen = WorkloadGen::new(wl, g, 32_000);
+        let reqs = gen.batch(300, 0, 123);
+        let budget: usize = reqs.iter().map(|r| r.max_gen).sum();
+        let cfg = SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 210);
+        let (_, report) = SimMachine::new(cfg).run(reqs);
+        assert_eq!(report.requests, 300, "{}", wl.name);
+        assert_eq!(report.generated_tokens, budget, "{}", wl.name);
+        assert_eq!(report.preemptions, 0, "{}: 210 GB is ample for K=300", wl.name);
+    }
+}
+
+#[test]
+fn prefill_heavy_workloads_have_higher_processed_throughput() {
+    // The PME ordering (Eq. 3) must survive the full system: RAG-shaped
+    // batches convert memory into parallel tokens better than AIME-shaped.
+    let (_, rag) = run_uniform(
+        SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 70),
+        926,
+        128,
+        600,
+    );
+    let (_, aime) = run_uniform(
+        SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 70),
+        128,
+        512,
+        600,
+    );
+    assert!(
+        rag.processed_throughput > aime.processed_throughput,
+        "rag {} vs aime {}",
+        rag.processed_throughput,
+        aime.processed_throughput
+    );
+}
+
+#[test]
+fn per_model_throughput_ordering_follows_model_size() {
+    // Bigger weights -> longer δ -> lower throughput at the same KV (the
+    // Fig. 11 cross-model ordering: 8x7B > DBRX ≈ 8x22B).
+    let t = |m: ModelSpec| {
+        run_uniform(SimConfig::moe_lens(m, 70), 98, 64, 1500).1.generation_throughput
+    };
+    let small = t(ModelSpec::mixtral_8x7b());
+    let dbrx = t(ModelSpec::dbrx());
+    let big = t(ModelSpec::mixtral_8x22b());
+    assert!(small > dbrx && small > big, "{small} {dbrx} {big}");
+}
+
+#[test]
+fn gpu_utilization_high_when_cache_ample_mtbench_g32() {
+    // §8.2: "GPU utilization approaches around 90%" for g=32 with ample
+    // cache. Our sim measures GPU-busy share of overlapped iterations.
+    // K must oversubscribe so admission keeps the pipeline at its token
+    // budget (the paper's 25k-request regime).
+    let (trace, report) = run_uniform(
+        SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 210),
+        98,
+        32,
+        30_000,
+    );
+    assert_eq!(report.preemptions, 0);
+    // Middle-of-run passes (steady state) should be GPU-busy.
+    let n = trace.passes.len();
+    let mid = &trace.passes[n / 3..2 * n / 3];
+    let util: f64 =
+        mid.iter().map(|p| p.gpu_time / p.duration).sum::<f64>() / mid.len() as f64;
+    assert!(util > 0.5, "steady-state GPU utilization {util} too low");
+}
