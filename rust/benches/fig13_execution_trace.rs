@@ -32,7 +32,7 @@ fn main() {
             );
             let mut t = Table::new(&[
                 "t_s", "prefill_tok", "decode_tok", "gpu_util", "io_s", "gpu_s", "cpu_s",
-                "kv_used",
+                "ovl_s", "kv_used",
             ]);
             let n = trace.passes.len();
             for idx in [0, n / 8, n / 4, n / 2, 3 * n / 4, n - 1] {
@@ -41,10 +41,11 @@ fn main() {
                     format!("{:.0}", pr.t_end),
                     pr.prefill_tokens.to_string(),
                     pr.decode_tokens.to_string(),
-                    format!("{:.2}", pr.gpu_time / pr.duration),
+                    format!("{:.2}", pr.gpu_busy() / pr.duration),
                     format!("{:.1}", pr.io_time),
                     format!("{:.1}", pr.gpu_time),
                     format!("{:.1}", pr.cpu_time),
+                    format!("{:.1}", pr.overlap_time),
                     pr.kv_blocks_used.to_string(),
                 ]);
             }

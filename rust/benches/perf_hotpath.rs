@@ -49,10 +49,11 @@ fn main() -> anyhow::Result<()> {
     t.row(&["steady passes".into(), steady.len().to_string()]);
     t.row(&["mean pass".into(), format!("{:.1} ms", mean(&|p| p.duration) * 1e3)]);
     t.row(&["  gpu (PJRT)".into(), format!("{:.1} ms", mean(&|p| p.gpu_time) * 1e3)]);
-    t.row(&["  cpu attn".into(), format!("{:.1} ms", mean(&|p| p.cpu_time) * 1e3)]);
+    t.row(&["  cpu (attn/KV/merge)".into(), format!("{:.1} ms", mean(&|p| p.cpu_time) * 1e3)]);
+    t.row(&["  overlap (gpu+cpu)".into(), format!("{:.1} ms", mean(&|p| p.overlap_time) * 1e3)]);
     t.row(&["  io wait".into(), format!("{:.1} ms", mean(&|p| p.io_time) * 1e3)]);
-    let overhead = mean(&|p| p.duration - p.gpu_time - p.io_time);
-    t.row(&["  other (sched/KV/merge)".into(), format!("{:.1} ms", overhead * 1e3)]);
+    let overhead = mean(&|p| p.duration - p.lanes_total());
+    t.row(&["  other (bookkeeping)".into(), format!("{:.1} ms", overhead * 1e3)]);
     t.row(&[
         "overhead share".into(),
         format!("{:.1} %", 100.0 * overhead / mean(&|p| p.duration)),

@@ -22,7 +22,10 @@ fn main() {
     ]);
     for (p, g, paper) in rows {
         let plan = hrm.artifact_plan(p, g).expect("table-1 config");
-        let ours = hrm.kv_region_utilization(&plan, cap) * 100.0;
+        let ours = hrm
+            .kv_region_utilization(&plan, cap)
+            .expect("265 GB testbed has a KV region")
+            * 100.0;
         // MoE-Lens fills the KV region and overlap amplifies it (Eq. 7):
         // effective utilization of the same physical bytes.
         let lens = 100.0 * (p + g) as f64 / (p as f64 + g as f64 / 2.0);

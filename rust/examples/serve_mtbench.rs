@@ -60,17 +60,21 @@ fn main() -> anyhow::Result<()> {
     // --- Per-pass breakdown (Fig. 13's bottom rows, real clock).
     let n = trace.passes.len();
     let show = [0, n / 4, n / 2, 3 * n / 4, n - 1];
-    println!("  pass   prefill decode  io_wait    gpu      cpu_attn  kv_blocks");
+    // gpu/cpu columns are total busy time per lane: the exclusive span
+    // plus the GPU+CPU-overlapped window (PassRecord's lanes are
+    // exclusive since the attribution fix).
+    println!("  pass   prefill decode  io_wait    gpu      cpu_attn  overlap  kv_blocks");
     for &i in &show {
         let p = &trace.passes[i];
         println!(
-            "  {:>4}   {:>7} {:>6}  {:>7.1}ms {:>7.1}ms {:>7.1}ms  {:>6}",
+            "  {:>4}   {:>7} {:>6}  {:>7.1}ms {:>7.1}ms {:>7.1}ms {:>7.1}ms  {:>6}",
             p.pass_id,
             p.prefill_tokens,
             p.decode_tokens,
             p.io_time * 1e3,
-            p.gpu_time * 1e3,
-            p.cpu_time * 1e3,
+            p.gpu_busy() * 1e3,
+            p.cpu_busy() * 1e3,
+            p.overlap_time * 1e3,
             p.kv_blocks_used,
         );
     }

@@ -20,4 +20,4 @@ mod batch;
 mod vslpipe;
 
 pub use batch::{pack_plan, Bucket, Row, RowKind};
-pub use vslpipe::{EngineConfig, ServingEngine};
+pub use vslpipe::{EngineConfig, ServingEngine, StepResult};

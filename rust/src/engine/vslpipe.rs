@@ -1,16 +1,25 @@
 //! The serving engine: scheduler + VSLPipe pipeline over the PJRT
 //! executables, the paged KV cache, the CPU attention pool, and the
 //! weight-streaming path.
+//!
+//! The engine is *incremental*: [`ServingEngine::step`] executes exactly
+//! one pass (plan → pack → run_pass → complete) and returns its
+//! [`PassRecord`] plus the tokens it yielded. [`ServingEngine::run`]
+//! drains a closed batch by looping `step`, and
+//! [`ServingEngine::run_online`] feeds the scheduler from a timed arrival
+//! stream, tracking per-request TTFT / TPOT / end-to-end latency.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use super::batch::{pack_plan, Bucket, RowKind};
 use crate::cpuattn::{AttnShape, DecodeQuery, ThreadPool};
 use crate::kvcache::{KvLayout, PagedKvCache, SeqId};
-use crate::metrics::{PassRecord, RunReport, Stopwatch, Trace};
+use crate::metrics::{LatencyStats, PassRecord, RequestTracker, RunReport, Stopwatch, Trace};
 use crate::model::Request;
 use crate::runtime::{to_f32, to_i32, Arg, Manifest, PjrtEngine};
 use crate::sched::{SchedConfig, Scheduler};
@@ -58,12 +67,28 @@ impl EngineConfig {
     }
 }
 
-/// Per-pass lane timings (wall clock).
+/// Per-pass lane timings (wall clock, mutually exclusive): `io_wait +
+/// gpu + cpu + overlap` decomposes the pass body. `overlap` is the window
+/// where GPU flash attention and CPU decode attention run concurrently
+/// (§6.4's phase overlap); total GPU busy time is `gpu + overlap`.
 #[derive(Debug, Clone, Copy, Default)]
 struct PassTimes {
     io_wait: f64,
     gpu: f64,
-    cpu_attn: f64,
+    cpu: f64,
+    overlap: f64,
+}
+
+/// The outcome of one engine pass.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    /// Telemetry for the pass (also what `run` pushes onto the trace).
+    pub record: PassRecord,
+    /// `(sequence, token)` pairs yielded this pass: every decode row plus
+    /// the last row of every completing prefill chunk.
+    pub yielded: Vec<(SeqId, i32)>,
+    /// Sequences that finished this pass.
+    pub finished: Vec<SeqId>,
 }
 
 /// The end-to-end serving engine.
@@ -82,6 +107,11 @@ pub struct ServingEngine {
     embedding: Vec<f32>,
     final_norm: Vec<f32>,
     lm_head: Vec<f32>,
+    /// Run-relative clock stamping `PassRecord::t_end` (reset by
+    /// [`ServingEngine::begin_run`]).
+    run_clock: Stopwatch,
+    /// Pass counter within the current run.
+    next_pass: usize,
 }
 
 impl ServingEngine {
@@ -140,6 +170,8 @@ impl ServingEngine {
             embedding,
             final_norm,
             lm_head,
+            run_clock: Stopwatch::start(),
+            next_pass: 0,
         })
     }
 
@@ -151,59 +183,164 @@ impl ServingEngine {
         &self.link
     }
 
+    /// Check a request against the compiled shapes.
+    fn validate(&self, r: &Request) -> Result<()> {
+        anyhow::ensure!(
+            r.prompt.len() + r.max_gen <= self.n_tok(),
+            "request {}: prompt({}) + max_gen({}) must fit the compiled \
+             bucket ({}) so preemption replay stays atomic",
+            r.id,
+            r.prompt.len(),
+            r.max_gen,
+            self.n_tok()
+        );
+        anyhow::ensure!(
+            r.prompt.len() + r.max_gen <= self.pjrt.config.max_ctx,
+            "request {} exceeds max_ctx",
+            r.id
+        );
+        Ok(())
+    }
+
+    /// Validate and enqueue one request — online admission. The request
+    /// joins the Prefill Scheduler's queue and is picked up by the next
+    /// [`step`](Self::step).
+    pub fn submit(&mut self, r: Request) -> Result<()> {
+        self.validate(&r)?;
+        self.sched.submit(r);
+        Ok(())
+    }
+
+    /// Start a new run: reset the pass counter and the run-relative clock,
+    /// and hand back an empty trace sized to the KV geometry.
+    pub fn begin_run(&mut self) -> Trace {
+        self.next_pass = 0;
+        self.run_clock = Stopwatch::start();
+        Trace::new(self.cache.layout().layout().n_blocks)
+    }
+
+    /// Execute exactly one pass: plan → pack → run_pass → complete.
+    /// Generated tokens land in the scheduler (`self.sched.finished()` for
+    /// completed sequences); the returned [`StepResult`] carries the pass
+    /// telemetry and the yielded `(seq, token)` pairs.
+    ///
+    /// `PassRecord::t_end` and `pass_id` are relative to the last
+    /// [`begin_run`](Self::begin_run) — `run`/`run_online` call it for
+    /// you; a manual `submit` + `step` loop should call it once up front,
+    /// otherwise timestamps count from engine load (or from the previous
+    /// run's clock) and pass ids continue the previous run's numbering.
+    pub fn step(&mut self) -> Result<StepResult> {
+        let plan = self.sched.plan(self.cache.layout_mut());
+        let buckets = pack_plan(&plan, &self.sched, self.n_tok());
+        let pass_clock = Stopwatch::start();
+        let (tokens, times) = self.run_pass(&buckets)?;
+        let duration = pass_clock.elapsed().as_secs_f64();
+        let generated = tokens.len();
+        let finished = self.sched.complete(&tokens, self.cache.layout_mut());
+
+        let record = PassRecord {
+            pass_id: self.next_pass,
+            t_end: self.run_clock.elapsed().as_secs_f64(),
+            duration,
+            prefill_tokens: plan.prefill_tokens(),
+            decode_tokens: plan.decode_tokens(),
+            generated,
+            finished: finished.len(),
+            preempted: plan.preempted.len(),
+            io_time: times.io_wait,
+            gpu_time: times.gpu,
+            cpu_time: times.cpu,
+            overlap_time: times.overlap,
+            kv_blocks_used: self.cache.layout().used_blocks(),
+            active_decode: self.sched.active_decode(),
+        };
+        self.next_pass += 1;
+        Ok(StepResult { record, yielded: tokens, finished })
+    }
+
     /// Serve a batch of requests to completion. Returns the trace and the
     /// run report; generated tokens live in `self.sched.finished()`.
+    ///
+    /// This is the closed-batch special case of the incremental engine:
+    /// every request is admitted up front, then [`step`](Self::step) loops
+    /// until the scheduler drains.
     pub fn run(&mut self, requests: Vec<Request>) -> Result<(Trace, RunReport)> {
         let n_req = requests.len();
         for r in &requests {
-            anyhow::ensure!(
-                r.prompt.len() + r.max_gen <= self.n_tok(),
-                "request {}: prompt({}) + max_gen({}) must fit the compiled \
-                 bucket ({}) so preemption replay stays atomic",
-                r.id,
-                r.prompt.len(),
-                r.max_gen,
-                self.n_tok()
-            );
-            anyhow::ensure!(
-                r.prompt.len() + r.max_gen <= self.pjrt.config.max_ctx,
-                "request {} exceeds max_ctx",
-                r.id
-            );
+            self.validate(r)?;
         }
         self.sched.submit_all(requests);
 
-        let mut trace = Trace::new(self.cache.layout().layout().n_blocks);
-        let run_clock = Stopwatch::start();
-        let mut pass_id = 0usize;
+        let mut trace = self.begin_run();
         while !self.sched.is_done() {
-            let plan = self.sched.plan(self.cache.layout_mut());
-            let buckets = pack_plan(&plan, &self.sched, self.n_tok());
-            let pass_clock = Stopwatch::start();
-            let (tokens, times) = self.run_pass(&buckets)?;
-            let duration = pass_clock.elapsed().as_secs_f64();
-            let generated = tokens.len();
-            let finished = self.sched.complete(&tokens, self.cache.layout_mut());
-
-            trace.push(PassRecord {
-                pass_id,
-                t_end: run_clock.elapsed().as_secs_f64(),
-                duration,
-                prefill_tokens: plan.prefill_tokens(),
-                decode_tokens: plan.decode_tokens(),
-                generated,
-                finished,
-                preempted: plan.preempted.len(),
-                io_time: times.io_wait,
-                gpu_time: times.gpu,
-                cpu_time: times.cpu_attn,
-                kv_blocks_used: self.cache.layout().used_blocks(),
-                active_decode: self.sched.active_decode(),
-            });
-            pass_id += 1;
+            let step = self.step()?;
+            trace.push(step.record);
         }
         let report = RunReport::from_trace(&trace, n_req);
         Ok((trace, report))
+    }
+
+    /// Serve a timed arrival stream: `(arrival_secs, request)` pairs on
+    /// the run clock (0 = run start). Requests are admitted when their
+    /// arrival time passes; when the system drains before the next
+    /// arrival, the engine sleeps until it. Returns the trace, the run
+    /// report, and per-request latency stats; `slo_e2e` is the end-to-end
+    /// deadline goodput is measured against (`f64::INFINITY` for plain
+    /// completed-requests-per-second).
+    pub fn run_online(
+        &mut self,
+        mut arrivals: Vec<(f64, Request)>,
+        slo_e2e: f64,
+    ) -> Result<(Trace, RunReport, LatencyStats)> {
+        anyhow::ensure!(
+            self.sched.is_done(),
+            "run_online requires a drained scheduler: sequences submitted \
+             outside the arrival stream would yield tokens the latency \
+             tracker has no arrival record for"
+        );
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("non-NaN arrival times"));
+        for (_, r) in &arrivals {
+            self.validate(r)?;
+        }
+        let n_req = arrivals.len();
+        let mut pending: VecDeque<(f64, Request)> = arrivals.into();
+        let mut tracker = RequestTracker::new();
+        let mut trace = self.begin_run();
+
+        loop {
+            let now = self.run_clock.elapsed().as_secs_f64();
+            while pending.front().is_some_and(|(t, _)| *t <= now) {
+                let (t, r) = pending.pop_front().unwrap();
+                tracker.arrived(r.id, t);
+                self.sched.submit(r);
+            }
+            if self.sched.is_done() {
+                match pending.front() {
+                    Some(&(t, _)) => {
+                        // Idle: nothing to serve until the next arrival.
+                        let wait = t - self.run_clock.elapsed().as_secs_f64();
+                        if wait > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(wait));
+                        }
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            let step = self.step()?;
+            let t_end = step.record.t_end;
+            for &(id, _) in &step.yielded {
+                tracker.token(id, t_end);
+            }
+            for &id in &step.finished {
+                tracker.finished(id, t_end);
+            }
+            trace.push(step.record);
+        }
+
+        let report = RunReport::from_trace(&trace, n_req);
+        let stats = tracker.stats(trace.wall_secs(), slo_e2e);
+        Ok((trace, report, stats))
     }
 
     /// One VSLPipe pass over the packed buckets.
@@ -280,6 +417,7 @@ impl ServingEngine {
             }
             times.gpu += clock.lap().as_secs_f64();
 
+            // Host-side KV stores + decode-query assembly (CPU lane).
             for (bi, b) in buckets.iter().enumerate() {
                 for (ri, row) in b.rows.iter().enumerate() {
                     self.cache.write(
@@ -291,9 +429,6 @@ impl ServingEngine {
                     );
                 }
             }
-
-            // --- Phase overlap: CPU decode attention (pool) runs while the
-            // GPU computes packed flash attention for the prefill rows.
             let mut decode_refs: Vec<(usize, usize)> = Vec::new(); // (bucket, row)
             let mut queries: Vec<DecodeQuery> = Vec::new();
             for (bi, b) in buckets.iter().enumerate() {
@@ -307,10 +442,21 @@ impl ServingEngine {
                     }
                 }
             }
+            times.cpu += clock.lap().as_secs_f64();
+
+            // --- Phase overlap: CPU decode attention (pool) runs while the
+            // GPU computes packed flash attention for the prefill rows.
+            // The phase is booked as three exclusive spans so the trace
+            // lanes decompose the pass: GPU-only, both-busy (overlap), and
+            // the CPU tail the engine spends waiting on the attention
+            // thread. (The seed booked the whole phase to the GPU lane,
+            // double-counting the CPU lane in the Fig.-13 series.)
             let mut cpu_out = vec![0f32; queries.len() * q_dim];
             let cpu_nanos = AtomicU64::new(0);
             let mut prefill_attn: Vec<Vec<f32>> = Vec::with_capacity(buckets.len());
+            let mut gpu_lane = 0f64;
 
+            let phase_clock = Stopwatch::start();
             std::thread::scope(|s| -> Result<()> {
                 let cache = &self.cache;
                 let pool = &self.pool;
@@ -323,8 +469,18 @@ impl ServingEngine {
                     pool.decode_attention(cache, layer, shape, queries_ref, cpu_out_ref);
                     cpu_nanos.store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 });
-                // GPU lane: packed flash attention per bucket.
+                // GPU lane: packed flash attention per bucket. Pure-decode
+                // buckets skip the kernel outright — every one of their
+                // rows takes the CPU lane's result in the merge below, so
+                // the packed output would be computed and then fully
+                // overwritten (padding rows get zeros; task_b and the head
+                // are row-independent, so real rows are unaffected).
+                let gpu_clock = Stopwatch::start();
                 for (bi, b) in buckets.iter().enumerate() {
+                    if b.n_prefill() == 0 {
+                        prefill_attn.push(vec![0f32; n_tok * q_dim]);
+                        continue;
+                    }
                     let outs = self
                         .pjrt
                         .prefill_attn
@@ -337,17 +493,24 @@ impl ServingEngine {
                         .context("prefill_attn")?;
                     prefill_attn.push(to_f32(&outs[0])?);
                 }
+                gpu_lane = gpu_clock.elapsed().as_secs_f64();
                 handle.join().expect("attention thread");
                 Ok(())
             })?;
-            times.gpu += clock.lap().as_secs_f64();
-            times.cpu_attn += cpu_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+            let phase_wall = phase_clock.elapsed().as_secs_f64();
+            clock.lap(); // resync: the phase is accounted below
+            let cpu_busy = cpu_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+            let both_busy = gpu_lane.min(cpu_busy);
+            times.overlap += both_busy;
+            times.gpu += gpu_lane - both_busy;
+            times.cpu += (phase_wall - gpu_lane).max(0.0);
 
             // Merge: decode rows take the CPU result.
             for (qi, &(bi, ri)) in decode_refs.iter().enumerate() {
                 prefill_attn[bi][ri * q_dim..(ri + 1) * q_dim]
                     .copy_from_slice(&cpu_out[qi * q_dim..(qi + 1) * q_dim]);
             }
+            times.cpu += clock.lap().as_secs_f64();
 
             // --- GPU Task B per bucket (weights pre-staged once above).
             for (bi, _b) in buckets.iter().enumerate() {
@@ -369,10 +532,16 @@ impl ServingEngine {
             }
         }
 
-        // Head: greedy next-token ids; collect yielding rows.
+        // Head: greedy next-token ids; collect yielding rows. Buckets with
+        // no yielding row (pure partial-prefill buckets) skip the LM-head
+        // execution entirely — their logits would be discarded.
         debug_assert_eq!(self.embedding.len(), rc.vocab * rc.d_model);
         let mut tokens: Vec<(SeqId, i32)> = Vec::new();
+        clock.lap();
         for (bi, b) in buckets.iter().enumerate() {
+            if !b.rows.iter().any(|r| r.yields) {
+                continue;
+            }
             let outs = self
                 .pjrt
                 .head

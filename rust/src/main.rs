@@ -13,7 +13,7 @@ use moe_lens::sched::PipelineProfiler;
 use moe_lens::simhw::{SimConfig, SimMachine};
 use moe_lens::transfer::LinkTiming;
 use moe_lens::util::args::Args;
-use moe_lens::workload::WorkloadGen;
+use moe_lens::workload::{ArrivalProcess, WorkloadGen};
 
 fn usage() -> ! {
     eprintln!(
@@ -22,10 +22,14 @@ fn usage() -> ! {
 USAGE: moe-lens <COMMAND> [OPTIONS]
 
 COMMANDS:
-  serve      serve a batch through the real PJRT engine
+  serve      serve requests through the real PJRT engine
              --model tiny|small  --requests N  --prompt N  --gen N
              --kv-blocks N  --block-size N  --attn-threads N
              [--link-gbps F] [--trace-csv PATH]
+             online mode (reports TTFT/TPOT/e2e p50+p99 and goodput):
+             [--arrival poisson|burst|trace] [--arrival-rate F]
+             [--burst-size N] [--arrival-trace PATH] [--arrival-seed N]
+             [--slo-e2e SECS]
   plan       print Stage-1/Stage-2 performance-model analysis
              --model <name> --gpu <name> --kv-gb N --p N --g N [--batch K]
   simulate   run the paper-scale hardware simulator
@@ -181,6 +185,14 @@ fn cmd_simulate(args: &Args) {
         std::process::exit(2);
     });
     let g = args.usize_or("gen", wl.gen_lengths[0]);
+    let max_gen = wl.gen_lengths.iter().copied().max().unwrap_or(0);
+    if g == 0 || g > max_gen {
+        eprintln!(
+            "--gen {g} is outside workload '{}' published caps {:?} (max {max_gen})",
+            wl.name, wl.gen_lengths
+        );
+        std::process::exit(2);
+    }
     let kv_gb = args.u64_or("kv-gb", 70);
     let policy = args.str_or("policy", "moe-lens").to_string();
     let p = wl.avg_prefill;
@@ -260,12 +272,77 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         })
         .collect();
 
-    println!(
-        "serving {n} requests (p={p}, g={g}) on '{model}' via PJRT {}...",
-        engine.pjrt.platform()
-    );
-    let (trace, report) = engine.run(reqs)?;
-    report.print("real engine");
+    let trace = if args.has("arrival") || args.has("arrival-rate") {
+        // --- Online mode: feed the scheduler from an arrival process and
+        // report request-level latency (TTFT / TPOT / e2e / goodput).
+        let mode = args.str_or("arrival", "poisson");
+        let rate = args.f64_or("arrival-rate", 4.0);
+        let mut arng = moe_lens::util::rng::Rng::new(args.u64_or("arrival-seed", 11));
+        let times: Vec<f64> = match mode {
+            "poisson" => ArrivalProcess::Poisson { rate }.times(n, &mut arng),
+            "burst" => ArrivalProcess::Burst { rate, size: args.usize_or("burst-size", 4) }
+                .times(n, &mut arng),
+            "trace" => {
+                let path = args.get("arrival-trace").unwrap_or_else(|| {
+                    eprintln!("--arrival trace requires --arrival-trace PATH");
+                    std::process::exit(2);
+                });
+                let text = std::fs::read_to_string(path)?;
+                let times: Vec<f64> = text
+                    .lines()
+                    .map(str::trim)
+                    .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                    .map(|l| {
+                        // Reject non-finite values too: "nan"/"inf" parse
+                        // as f64 but would poison the arrival sort.
+                        match l.parse::<f64>() {
+                            Ok(t) if t.is_finite() => t,
+                            _ => {
+                                eprintln!("bad arrival timestamp '{l}' in {path}");
+                                std::process::exit(2);
+                            }
+                        }
+                    })
+                    .collect();
+                // Run-relative seconds, same semantics as
+                // `WorkloadGen::trace_arrivals` (non-finite values were
+                // rejected above, so the helper's assert cannot fire).
+                let mut times = moe_lens::workload::sort_and_rebase(times);
+                times.truncate(n);
+                times
+            }
+            other => {
+                eprintln!("unknown arrival process '{other}' (poisson|burst|trace)");
+                std::process::exit(2);
+            }
+        };
+        let n_eff = times.len().min(reqs.len());
+        let arrivals: Vec<(f64, moe_lens::model::Request)> =
+            times.into_iter().zip(reqs).take(n_eff).collect();
+        let slo = args.f64_or("slo-e2e", f64::INFINITY);
+        let process = if mode == "trace" {
+            format!("trace {}", args.str_or("arrival-trace", "?"))
+        } else {
+            format!("{mode}, {rate} req/s")
+        };
+        println!(
+            "serving {n_eff} online requests ({process}, p={p}, g={g}) \
+             on '{model}' via PJRT {}...",
+            engine.pjrt.platform()
+        );
+        let (trace, report, latency) = engine.run_online(arrivals, slo)?;
+        report.print("real engine (online)");
+        latency.print();
+        trace
+    } else {
+        println!(
+            "serving {n} requests (p={p}, g={g}) on '{model}' via PJRT {}...",
+            engine.pjrt.platform()
+        );
+        let (trace, report) = engine.run(reqs)?;
+        report.print("real engine");
+        trace
+    };
     println!(
         "  link: {:.1} MB moved, achieved {:.2} GB/s (link clock)",
         engine.link().total_bytes() as f64 / 1e6,

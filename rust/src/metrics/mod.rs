@@ -6,7 +6,11 @@
 //! these as the paper's throughput / utilization / per-pass IO-GPU-CPU
 //! series.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
+
+use crate::kvcache::SeqId;
+use crate::util::stats::percentile;
 
 /// One inference pass (forward iteration) of the pipeline.
 #[derive(Debug, Clone, Default)]
@@ -29,14 +33,43 @@ pub struct PassRecord {
     pub preempted: usize,
     /// Weight-transfer (IO) time within the pass (seconds).
     pub io_time: f64,
-    /// GPU compute time within the pass (seconds).
+    /// GPU-exclusive compute time within the pass (seconds): GPU busy
+    /// while the CPU attention lane is idle.
     pub gpu_time: f64,
-    /// CPU attention time within the pass (seconds).
+    /// CPU-exclusive time within the pass (seconds): host-side work (KV
+    /// stores, merges, attention tail) while the GPU lane is idle.
     pub cpu_time: f64,
+    /// Overlapped time within the pass (seconds): GPU flash attention and
+    /// CPU decode attention both busy (§6.4's phase overlap). Total GPU
+    /// busy is `gpu_time + overlap_time`; likewise for the CPU lane — the
+    /// seed booked this window to the GPU lane alone, double-counting the
+    /// CPU lane and inflating the Fig.-13 utilization series.
+    pub overlap_time: f64,
     /// KV blocks in use at pass end.
     pub kv_blocks_used: usize,
     /// Active decode sequences at pass end.
     pub active_decode: usize,
+}
+
+impl PassRecord {
+    /// Sum of the exclusive lane times. For engine-recorded passes this
+    /// decomposes `duration` (up to unattributed bookkeeping slack): the
+    /// io, gpu, cpu, and overlap lanes partition the pass wall clock.
+    pub fn lanes_total(&self) -> f64 {
+        self.io_time + self.gpu_time + self.cpu_time + self.overlap_time
+    }
+
+    /// Total GPU busy time: the GPU-exclusive lane plus the overlapped
+    /// window. The single source of truth for utilization figures.
+    pub fn gpu_busy(&self) -> f64 {
+        self.gpu_time + self.overlap_time
+    }
+
+    /// Total CPU busy time: the CPU-exclusive lane plus the overlapped
+    /// window.
+    pub fn cpu_busy(&self) -> f64 {
+        self.cpu_time + self.overlap_time
+    }
 }
 
 /// A whole run's trace + derived summaries.
@@ -98,12 +131,13 @@ impl Trace {
         }
     }
 
-    /// Mean GPU busy fraction (Fig. 13 row 3: gpu_time / pass duration).
+    /// Mean GPU busy fraction (Fig. 13 row 3): GPU-exclusive plus
+    /// overlapped time over pass duration.
     pub fn mean_gpu_utilization(&self) -> f64 {
         if self.passes.is_empty() {
             return 0.0;
         }
-        let busy: f64 = self.passes.iter().map(|p| p.gpu_time).sum();
+        let busy: f64 = self.passes.iter().map(|p| p.gpu_busy()).sum();
         let total: f64 = self.passes.iter().map(|p| p.duration).sum();
         if total == 0.0 {
             0.0
@@ -129,11 +163,11 @@ impl Trace {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "pass,t_end,duration,prefill_tokens,decode_tokens,finished,preempted,\
-             io_time,gpu_time,cpu_time,kv_blocks_used,active_decode\n",
+             io_time,gpu_time,cpu_time,overlap_time,kv_blocks_used,active_decode\n",
         );
         for p in &self.passes {
             s.push_str(&format!(
-                "{},{:.6},{:.6},{},{},{},{},{:.6},{:.6},{:.6},{},{}\n",
+                "{},{:.6},{:.6},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{}\n",
                 p.pass_id,
                 p.t_end,
                 p.duration,
@@ -144,6 +178,7 @@ impl Trace {
                 p.io_time,
                 p.gpu_time,
                 p.cpu_time,
+                p.overlap_time,
                 p.kv_blocks_used,
                 p.active_decode,
             ));
@@ -189,6 +224,156 @@ impl RunReport {
         println!("  mean GPU util     : {:.1} %", self.mean_gpu_utilization * 100.0);
         println!("  preemptions       : {}", self.preemptions);
         println!("  passes            : {}", self.passes);
+    }
+}
+
+/// Per-request lifecycle timestamps for online serving. Both clocks feed
+/// the same records: the engine stamps wall-clock seconds, the simulator
+/// virtual seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTiming {
+    /// When the request entered the system (arrival-process time, so TTFT
+    /// includes queueing delay).
+    pub arrival: f64,
+    /// When its first generated token was produced.
+    pub first_token: Option<f64>,
+    /// When its last token was produced (request completion).
+    pub finish: Option<f64>,
+    /// Tokens generated so far.
+    pub generated: usize,
+}
+
+/// Tracks per-request latency through an online serving run and derives
+/// the TTFT / TPOT / end-to-end / goodput summary.
+#[derive(Debug, Clone, Default)]
+pub struct RequestTracker {
+    timings: BTreeMap<SeqId, RequestTiming>,
+}
+
+impl RequestTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a request entering the system at time `t`.
+    pub fn arrived(&mut self, id: SeqId, t: f64) {
+        let prev = self.timings.insert(
+            id,
+            RequestTiming { arrival: t, first_token: None, finish: None, generated: 0 },
+        );
+        debug_assert!(prev.is_none(), "request {id} arrived twice");
+    }
+
+    /// Record one generated token for `id` at time `t` (the first call
+    /// stamps TTFT).
+    pub fn token(&mut self, id: SeqId, t: f64) {
+        let r = self.timings.get_mut(&id).expect("token for untracked request");
+        r.generated += 1;
+        if r.first_token.is_none() {
+            r.first_token = Some(t);
+        }
+    }
+
+    /// Record request completion at time `t`.
+    pub fn finished(&mut self, id: SeqId, t: f64) {
+        let r = self.timings.get_mut(&id).expect("finish for untracked request");
+        debug_assert!(r.finish.is_none(), "request {id} finished twice");
+        r.finish = Some(t);
+    }
+
+    pub fn timing(&self, id: SeqId) -> Option<&RequestTiming> {
+        self.timings.get(&id)
+    }
+
+    pub fn completed(&self) -> usize {
+        self.timings.values().filter(|r| r.finish.is_some()).count()
+    }
+
+    /// Summarize the run. `wall_secs` is the run's total span; `slo_e2e`
+    /// is the end-to-end deadline goodput counts against (pass
+    /// `f64::INFINITY` for plain completed-requests-per-second).
+    pub fn stats(&self, wall_secs: f64, slo_e2e: f64) -> LatencyStats {
+        let mut ttft = Vec::new();
+        let mut tpot = Vec::new();
+        let mut e2e = Vec::new();
+        let mut within_slo = 0usize;
+        for r in self.timings.values() {
+            let (Some(first), Some(fin)) = (r.first_token, r.finish) else {
+                continue;
+            };
+            ttft.push(first - r.arrival);
+            let e = fin - r.arrival;
+            e2e.push(e);
+            // TPOT is defined over the decode gaps, so it needs >= 2 tokens.
+            if r.generated >= 2 {
+                tpot.push((fin - first) / (r.generated - 1) as f64);
+            }
+            if e <= slo_e2e {
+                within_slo += 1;
+            }
+        }
+        LatencyStats {
+            requests: self.timings.len(),
+            completed: e2e.len(),
+            ttft_p50: percentile(&ttft, 0.50),
+            ttft_p99: percentile(&ttft, 0.99),
+            tpot_p50: percentile(&tpot, 0.50),
+            tpot_p99: percentile(&tpot, 0.99),
+            e2e_p50: percentile(&e2e, 0.50),
+            e2e_p99: percentile(&e2e, 0.99),
+            goodput_rps: if wall_secs > 0.0 { within_slo as f64 / wall_secs } else { 0.0 },
+            slo_e2e,
+        }
+    }
+}
+
+/// Request-level latency summary of an online serving run (the
+/// MoE-Lightning-style request-latency comparison, arXiv:2411.11217).
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    /// Requests that entered the system.
+    pub requests: usize,
+    /// Requests that finished.
+    pub completed: usize,
+    /// Time-to-first-token percentiles (seconds).
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    /// Time-per-output-token percentiles (seconds/token).
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+    /// End-to-end latency percentiles (seconds).
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    /// Completed requests per second meeting the end-to-end SLO.
+    pub goodput_rps: f64,
+    /// The SLO `goodput_rps` was measured against (infinite = none).
+    pub slo_e2e: f64,
+}
+
+impl LatencyStats {
+    pub fn print(&self) {
+        println!("  completed         : {}/{}", self.completed, self.requests);
+        println!(
+            "  TTFT p50/p99      : {:.3} s / {:.3} s",
+            self.ttft_p50, self.ttft_p99
+        );
+        println!(
+            "  TPOT p50/p99      : {:.1} ms / {:.1} ms",
+            self.tpot_p50 * 1e3,
+            self.tpot_p99 * 1e3
+        );
+        println!(
+            "  e2e  p50/p99      : {:.3} s / {:.3} s",
+            self.e2e_p50, self.e2e_p99
+        );
+        if self.slo_e2e.is_finite() {
+            println!(
+                "  goodput (e2e<{:.1}s): {:.2} req/s",
+                self.slo_e2e, self.goodput_rps
+            );
+        } else {
+            println!("  goodput           : {:.2} req/s", self.goodput_rps);
+        }
     }
 }
 
@@ -268,6 +453,57 @@ mod tests {
         let s = tr.series(10, |p| p.decode_tokens as f64);
         assert!(s.len() >= 10 && s.len() <= 11);
         assert_eq!(s[0], (0.0, 0.0));
+    }
+
+    #[test]
+    fn csv_includes_overlap_lane() {
+        let mut tr = Trace::new(10);
+        let mut p = pass(0, 1.0, 0, 4, 0.2, 1.0);
+        p.overlap_time = 0.3;
+        p.io_time = 0.4;
+        p.cpu_time = 0.1;
+        tr.push(p.clone());
+        assert!(tr.to_csv().lines().next().unwrap().contains("overlap_time"));
+        assert!((p.lanes_total() - 1.0).abs() < 1e-12);
+        // GPU busy = exclusive + overlapped.
+        assert!((tr.mean_gpu_utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_tracker_latency_stats() {
+        let mut t = RequestTracker::new();
+        // Request 0: arrives at 0, first token at 1, 5 tokens, done at 5.
+        t.arrived(0, 0.0);
+        for i in 1..=5 {
+            t.token(0, i as f64);
+        }
+        t.finished(0, 5.0);
+        // Request 1: arrives at 2, single token at 8 (TTFT 6, no TPOT).
+        t.arrived(1, 2.0);
+        t.token(1, 8.0);
+        t.finished(1, 8.0);
+        // Request 2: still in flight — excluded from latency percentiles.
+        t.arrived(2, 3.0);
+        assert_eq!(t.completed(), 2);
+        let s = t.stats(10.0, 7.0);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.completed, 2);
+        // TTFTs: [1, 6]; nearest-rank p50 of two samples is the upper one.
+        assert_eq!(s.ttft_p50, 6.0);
+        assert_eq!(s.ttft_p99, 6.0);
+        // TPOT: only request 0 qualifies: (5-1)/4 = 1.
+        assert_eq!(s.tpot_p50, 1.0);
+        // e2e: [5, 6]; only request 0 (e2e 5) meets the 7s... both do:
+        // request 1's e2e is 8-2 = 6 <= 7. Goodput = 2 / 10 s.
+        assert_eq!(s.e2e_p99, 6.0);
+        assert!((s.goodput_rps - 0.2).abs() < 1e-12);
+        // Tight SLO drops request 1.
+        let tight = t.stats(10.0, 5.5);
+        assert!((tight.goodput_rps - 0.1).abs() < 1e-12);
+        // Infinite SLO counts every completion.
+        let open = t.stats(10.0, f64::INFINITY);
+        assert!((open.goodput_rps - 0.2).abs() < 1e-12);
+        open.print();
     }
 
     #[test]

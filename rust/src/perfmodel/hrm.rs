@@ -25,7 +25,8 @@ pub struct HrmModel {
 /// An HRM-planned execution configuration (the baseline's "policy").
 #[derive(Debug, Clone)]
 pub struct HrmPlan {
-    /// Decode-stage concurrent sequences the plan admits.
+    /// Decode-stage concurrent sequences the plan admits (always ≥ 1; see
+    /// [`HrmPlan::fits_in`] for whether the plan is actually runnable).
     pub decode_seqs: usize,
     /// Tokens per prefill micro-batch.
     pub prefill_tokens: usize,
@@ -33,6 +34,15 @@ pub struct HrmPlan {
     pub decode_iter_secs: f64,
     /// CPU memory the plan actually commits (weights + peak KV), bytes.
     pub cpu_mem_used: u64,
+}
+
+impl HrmPlan {
+    /// Whether the plan's committed memory fits a machine. `plan` clamps
+    /// the batch to capacity but never below one sequence, so on machines
+    /// whose weights alone exceed host memory this reports `false`.
+    pub fn fits_in(&self, cpu_mem_bytes: u64) -> bool {
+        self.cpu_mem_used <= cpu_mem_bytes
+    }
 }
 
 impl HrmModel {
@@ -90,11 +100,16 @@ impl HrmModel {
             best = t;
         }
         // Capacity clamp — HRM ignores it in the objective, but a plan
-        // that literally overflows host memory cannot run at all.
+        // that literally overflows host memory cannot run at all. Clamp to
+        // the largest batch that fits, never below one sequence: a machine
+        // whose weights alone exceed `cpu_mem_bytes` still gets a defined
+        // 1-sequence plan (so `decode_throughput` stays finite and nonzero
+        // downstream), with the infeasibility visible via
+        // [`HrmPlan::fits_in`].
         let kv_per_seq = ctx_peak as u64 * self.model.kv_bytes_per_token();
         let weights = self.model.model_bytes();
         if weights + n as u64 * kv_per_seq > cpu_mem_bytes {
-            n = ((cpu_mem_bytes.saturating_sub(weights)) / kv_per_seq) as usize;
+            n = (cpu_mem_bytes.saturating_sub(weights) / kv_per_seq).max(1) as usize;
         }
 
         // Prefill micro-batch: compute-bound, sized to cover the per-layer
@@ -146,11 +161,21 @@ impl HrmModel {
     /// Table 1's utilization metric over the *KV region*: the paper charges
     /// plans against the memory available for KV (total minus weights minus
     /// the ~30 GB execution overhead its §7 CPU-memory profile reserves).
-    pub fn kv_region_utilization(&self, plan: &HrmPlan, cpu_mem_bytes: u64) -> f64 {
+    ///
+    /// Returns `None` when the machine has no KV region at all — capacity
+    /// at or below weights + overhead. (The unchecked subtraction used to
+    /// panic in debug builds and wrap to a huge u64 in release for such
+    /// machines, silently corrupting the Table-1 metric.)
+    pub fn kv_region_utilization(&self, plan: &HrmPlan, cpu_mem_bytes: u64) -> Option<f64> {
         let overhead = 30u64 << 30;
-        let kv_capacity = cpu_mem_bytes - self.model.model_bytes() - overhead;
-        let kv_used = plan.cpu_mem_used - self.model.model_bytes();
-        kv_used as f64 / kv_capacity as f64
+        let kv_capacity = cpu_mem_bytes
+            .checked_sub(self.model.model_bytes())?
+            .checked_sub(overhead)?;
+        if kv_capacity == 0 {
+            return None;
+        }
+        let kv_used = plan.cpu_mem_used.saturating_sub(self.model.model_bytes());
+        Some(kv_used as f64 / kv_capacity as f64)
     }
 
     /// End-to-end generation throughput of the *two-phase* (no-overlap)
@@ -188,9 +213,9 @@ mod tests {
         // being the worst (paper: 52.0% / 56.2% / 35.0%).
         let h = hrm();
         let cap = 265u64 << 30;
-        let u32 = h.kv_region_utilization(&h.artifact_plan(98, 32).unwrap(), cap);
-        let u64_ = h.kv_region_utilization(&h.artifact_plan(98, 64).unwrap(), cap);
-        let u128 = h.kv_region_utilization(&h.artifact_plan(926, 128).unwrap(), cap);
+        let u32 = h.kv_region_utilization(&h.artifact_plan(98, 32).unwrap(), cap).unwrap();
+        let u64_ = h.kv_region_utilization(&h.artifact_plan(98, 64).unwrap(), cap).unwrap();
+        let u128 = h.kv_region_utilization(&h.artifact_plan(926, 128).unwrap(), cap).unwrap();
         assert!((u32 - 0.52).abs() < 0.03, "row1: {u32}");
         assert!((u64_ - 0.562).abs() < 0.03, "row2: {u64_}");
         assert!((u128 - 0.35).abs() < 0.03, "row3: {u128}");
@@ -238,5 +263,47 @@ mod tests {
         let h = hrm();
         let plan = h.plan(98, 32, 265 << 30);
         assert!(plan.prefill_tokens > 100 && plan.prefill_tokens < 1_000_000);
+    }
+
+    #[test]
+    fn kv_region_utilization_is_none_for_machines_without_a_kv_region() {
+        // Regression: capacity < weights + 30 GB overhead used to panic in
+        // debug builds (u64 underflow) and wrap in release. Mixtral-8x7B
+        // weighs ~94 GB, so a 64 GB machine cannot even hold the weights
+        // and a 100 GB machine has no room left after the overhead.
+        let h = hrm();
+        let plan = h.plan(98, 32, 64 << 30);
+        assert!(h.kv_region_utilization(&plan, 64 << 30).is_none());
+        assert!(h.kv_region_utilization(&plan, 100 << 30).is_none());
+        // Exactly weights + overhead: zero-byte KV region, still None.
+        let edge = h.model.model_bytes() + (30u64 << 30);
+        assert!(h.kv_region_utilization(&plan, edge).is_none());
+        // A machine with a real KV region reports a finite ratio.
+        let u = h.kv_region_utilization(&plan, 265 << 30).unwrap();
+        assert!(u.is_finite() && u >= 0.0);
+    }
+
+    #[test]
+    fn infeasible_machines_get_a_minimal_but_defined_plan() {
+        // Regression: when weights nearly (or fully) exhaust host memory
+        // the capacity clamp used to return decode_seqs == 0, which turned
+        // downstream `decode_throughput(0, ·)` into 0/NaN rows. The plan
+        // must clamp to ≥ 1 and surface infeasibility via `fits_in`.
+        let h = hrm();
+        for &cap_gb in &[16u64, 64, 80] {
+            let cap = cap_gb << 30;
+            let plan = h.plan(926, 128, cap);
+            assert_eq!(plan.decode_seqs, 1, "{cap_gb} GB");
+            assert!(!plan.fits_in(cap), "{cap_gb} GB cannot hold the weights");
+            assert!(plan.decode_iter_secs.is_finite() && plan.decode_iter_secs > 0.0);
+            let tput = h.decode_throughput(plan.decode_seqs, 926 + 128);
+            assert!(tput.is_finite() && tput > 0.0, "throughput {tput}");
+            let two_phase = h.two_phase_generation_throughput(926, 128, cap);
+            assert!(two_phase.is_finite() && two_phase > 0.0);
+        }
+        // Feasible machines keep fitting plans.
+        let plan = h.plan(98, 32, 265 << 30);
+        assert!(plan.fits_in(265 << 30));
+        assert!(plan.decode_seqs >= 1);
     }
 }

@@ -287,20 +287,22 @@ impl Scheduler {
 
     /// Apply pass results: `tokens` holds (seq, generated token) for every
     /// decode row and every completing prefill chunk. Finished sequences'
-    /// blocks are released (the Decode Scheduler's GC).
+    /// blocks are released (the Decode Scheduler's GC). Returns the ids of
+    /// the sequences that finished this pass, in token order — the online
+    /// serving loop stamps completion timestamps from these.
     pub fn complete(
         &mut self,
         tokens: &[(SeqId, i32)],
         kv: &mut PagedLayout,
-    ) -> usize {
-        let mut newly_finished = 0;
+    ) -> Vec<SeqId> {
+        let mut newly_finished = Vec::new();
         for &(id, tok) in tokens {
             let seq = self.decoding.get_mut(&id).expect("token for unknown sequence");
             if seq.push_generated(tok) {
                 let seq = self.decoding.remove(&id).unwrap();
                 kv.release(id);
                 self.finished.push(seq);
-                newly_finished += 1;
+                newly_finished.push(id);
             }
         }
         newly_finished

@@ -83,6 +83,14 @@ impl Rng {
         (mu + sigma * self.normal()).exp()
     }
 
+    /// Exponential sample with the given rate (mean `1/rate`) — the
+    /// inter-arrival gap of a Poisson process.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0, "exponential rate must be positive");
+        // 1 - f64() ∈ (0, 1]: ln is finite, result is ≥ 0.
+        -(1.0 - self.f64()).ln() / rate
+    }
+
     /// Bernoulli trial.
     pub fn chance(&mut self, p: f64) -> bool {
         self.f64() < p
@@ -154,6 +162,17 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Rng::new(13);
+        let n = 50_000;
+        let rate = 4.0;
+        let xs: Vec<f64> = (0..n).map(|_| r.exponential(rate)).collect();
+        assert!(xs.iter().all(|&x| x >= 0.0 && x.is_finite()));
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean {mean}");
     }
 
     #[test]

@@ -45,6 +45,21 @@ pub fn prediction_accuracy(predicted: f64, measured: f64) -> f64 {
     (1.0 - (predicted - measured).abs() / measured).max(0.0)
 }
 
+/// q-quantile (q in [0, 1]) over an unsorted slice by *rounded linear
+/// rank*: the sample at index `round((n-1)·q)` of the sorted copy — no
+/// interpolation, and an even-sized p50 takes the upper of the two middle
+/// samples (round-half-up). 0 for an empty slice. Used for the
+/// online-serving TTFT/TPOT/e2e percentiles.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN samples"));
+    let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    v[idx]
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -95,5 +110,16 @@ mod tests {
     fn geomean_of_speedups() {
         let g = geomean(&[2.0, 8.0]);
         assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.99), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
     }
 }

@@ -27,9 +27,16 @@ pub struct WorkloadGen {
 
 impl WorkloadGen {
     pub fn new(spec: &'static WorkloadSpec, max_gen: usize, vocab: usize) -> Self {
+        // Guard against caps outside the dataset's published range. (The
+        // seed predicate `contains(..) || max_gen > 0` was a tautology for
+        // every positive cap, so this never fired.)
+        let max_published = spec.gen_lengths.iter().copied().max().unwrap_or(0);
         assert!(
-            spec.gen_lengths.contains(&max_gen) || max_gen > 0,
-            "unusual generation cap {max_gen}"
+            max_gen > 0 && max_gen <= max_published,
+            "unusual generation cap {max_gen} for workload '{}' \
+             (published caps: {:?})",
+            spec.name,
+            spec.gen_lengths
         );
         // Fit: mean = exp(mu + sigma^2/2); put the max at ~3 sigma.
         // sigma from the max/avg ratio keeps the clipped tail small.
@@ -63,6 +70,104 @@ impl WorkloadGen {
         let mut rng = Rng::new(seed);
         let total: usize = (0..n).map(|_| self.prompt_len(&mut rng)).sum();
         total as f64 / n as f64
+    }
+}
+
+/// An arrival process for online serving: how request timestamps are
+/// spaced. Rates are *average requests per second* in every variant, so
+/// sweeping `rate` compares like with like across processes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson process: i.i.d. exponential inter-arrival gaps.
+    Poisson { rate: f64 },
+    /// Bursty arrivals: groups of `size` back-to-back requests, with
+    /// exponential gaps between bursts sized so the long-run request rate
+    /// is still `rate`.
+    Burst { rate: f64, size: usize },
+}
+
+impl ArrivalProcess {
+    /// Draw `k` arrival timestamps (seconds since run start, ascending).
+    pub fn times(&self, k: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::with_capacity(k);
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                assert!(rate > 0.0, "arrival rate must be positive");
+                let mut t = 0.0;
+                for _ in 0..k {
+                    t += rng.exponential(rate);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::Burst { rate, size } => {
+                assert!(rate > 0.0, "arrival rate must be positive");
+                assert!(size >= 1, "burst size must be >= 1");
+                let burst_rate = rate / size as f64;
+                let mut t = 0.0;
+                while out.len() < k {
+                    t += rng.exponential(burst_rate);
+                    for _ in 0..size.min(k - out.len()) {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Sort a timestamp trace ascending and rebase so the first arrival is
+/// t = 0 — production logs carry absolute clocks, and an un-rebased
+/// offset would make the serving loop idle until it. Panics on
+/// non-finite timestamps (CLI callers validate with a friendly error
+/// first). Shared by [`WorkloadGen::trace_arrivals`] and the
+/// `serve --arrival trace` CLI path so the two cannot drift.
+pub fn sort_and_rebase(mut times: Vec<f64>) -> Vec<f64> {
+    assert!(
+        times.iter().all(|t| t.is_finite()),
+        "arrival trace contains a non-finite timestamp"
+    );
+    times.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN arrival times"));
+    if let Some(&t0) = times.first() {
+        for t in &mut times {
+            *t -= t0;
+        }
+    }
+    times
+}
+
+impl WorkloadGen {
+    /// Generate `k` requests with arrival timestamps from `process` — the
+    /// online-serving companion of [`WorkloadGen::batch`]. Deterministic
+    /// in `seed`; request ids ascend in arrival order (the scheduler's
+    /// preemption policy treats larger ids as younger).
+    pub fn arrivals(
+        &self,
+        process: &ArrivalProcess,
+        k: usize,
+        base_id: SeqId,
+        seed: u64,
+    ) -> Vec<(f64, Request)> {
+        let reqs = self.batch(k, base_id, seed);
+        let mut rng = Rng::new(seed ^ 0xA881_0B5E);
+        process.times(k, &mut rng).into_iter().zip(reqs).collect()
+    }
+
+    /// Trace-driven arrivals: pair an explicit timestamp trace (e.g.
+    /// replayed from a production log) with generated requests. Timestamps
+    /// are sorted ascending and rebased so the first arrival is t = 0 —
+    /// production logs carry absolute clocks, and an un-rebased offset
+    /// would make the serving loop idle until it. Ids ascend in arrival
+    /// order. Non-finite timestamps panic.
+    pub fn trace_arrivals(
+        &self,
+        times: &[f64],
+        base_id: SeqId,
+        seed: u64,
+    ) -> Vec<(f64, Request)> {
+        let rebased = sort_and_rebase(times.to_vec());
+        let reqs = self.batch(rebased.len(), base_id, seed);
+        rebased.into_iter().zip(reqs).collect()
     }
 }
 
@@ -127,6 +232,83 @@ mod tests {
             assert!(r.prompt.iter().all(|&t| t >= 1 && (t as usize) < 512));
             assert_eq!(r.max_gen, 64);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "unusual generation cap")]
+    fn zero_generation_cap_panics() {
+        WorkloadGen::new(&MTBENCH, 0, 2048);
+    }
+
+    #[test]
+    #[should_panic(expected = "unusual generation cap")]
+    fn oversized_generation_cap_panics() {
+        // MTBench's largest published cap is 256; 10k is "unusual".
+        WorkloadGen::new(&MTBENCH, 10_000, 2048);
+    }
+
+    #[test]
+    fn in_range_caps_are_accepted() {
+        // Published caps and anything below the largest published cap.
+        for &g in MTBENCH.gen_lengths {
+            WorkloadGen::new(&MTBENCH, g, 2048);
+        }
+        WorkloadGen::new(&MTBENCH, 100, 2048);
+        WorkloadGen::new(&AIME, 1, 2048);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_ascending_and_rate_accurate() {
+        let g = WorkloadGen::new(&MTBENCH, 32, 2048);
+        let k = 4000;
+        let arrivals = g.arrivals(&ArrivalProcess::Poisson { rate: 50.0 }, k, 0, 9);
+        assert_eq!(arrivals.len(), k);
+        for w in arrivals.windows(2) {
+            assert!(w[0].0 <= w[1].0, "timestamps ascend");
+            assert!(w[0].1.id < w[1].1.id, "ids ascend in arrival order");
+        }
+        // Mean inter-arrival ~ 1/50 s => last timestamp ~ k/50 = 80 s.
+        let span = arrivals.last().unwrap().0;
+        assert!((span - 80.0).abs() / 80.0 < 0.15, "span {span}");
+        // Deterministic in the seed.
+        let again = g.arrivals(&ArrivalProcess::Poisson { rate: 50.0 }, k, 0, 9);
+        assert_eq!(arrivals.len(), again.len());
+        assert!(arrivals.iter().zip(&again).all(|(a, b)| a.0 == b.0 && a.1.id == b.1.id));
+    }
+
+    #[test]
+    fn burst_arrivals_share_timestamps_within_a_burst() {
+        let g = WorkloadGen::new(&MTBENCH, 32, 2048);
+        let arrivals = g.arrivals(&ArrivalProcess::Burst { rate: 40.0, size: 4 }, 401, 0, 3);
+        assert_eq!(arrivals.len(), 401);
+        // Full bursts: groups of 4 share one timestamp.
+        for chunk in arrivals.chunks(4).take(100) {
+            assert!(chunk.iter().all(|(t, _)| *t == chunk[0].0));
+        }
+        // Long-run request rate still ~40 req/s: 401 requests ~ 10 s.
+        let span = arrivals.last().unwrap().0;
+        assert!((span - 10.0).abs() / 10.0 < 0.35, "span {span}");
+    }
+
+    #[test]
+    fn trace_arrivals_sort_pair_and_rebase() {
+        let g = WorkloadGen::new(&MTBENCH, 32, 2048);
+        let arrivals = g.trace_arrivals(&[3.0, 1.0, 2.0], 100, 5);
+        let times: Vec<f64> = arrivals.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![0.0, 1.0, 2.0]);
+        assert_eq!(arrivals[0].1.id, 100);
+        assert_eq!(arrivals[2].1.id, 102);
+        // Absolute (epoch-style) clocks rebase to run-relative seconds.
+        let epoch = g.trace_arrivals(&[1_753_660_001.0, 1_753_660_000.0], 0, 5);
+        assert_eq!(epoch[0].0, 0.0);
+        assert_eq!(epoch[1].0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite timestamp")]
+    fn trace_arrivals_reject_nan() {
+        let g = WorkloadGen::new(&MTBENCH, 32, 2048);
+        g.trace_arrivals(&[1.0, f64::NAN], 0, 5);
     }
 
     #[test]

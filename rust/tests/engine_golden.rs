@@ -114,6 +114,82 @@ fn preemption_under_tight_cache_preserves_results() {
 }
 
 #[test]
+fn run_is_reproduced_by_manual_step_loop() {
+    let Some(g) = golden() else { return };
+    // The tentpole invariant: `run()` is exactly a step() loop over a
+    // closed batch — same generated tokens, same pass structure.
+    let reqs = |_: ()| -> Vec<Request> {
+        g.generation
+            .prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request::new(i as u64, p.clone(), g.generation.steps))
+            .collect()
+    };
+
+    let mut eng_run = engine();
+    let (trace_run, _) = eng_run.run(reqs(())).unwrap();
+    let mut run_fin = eng_run.sched.take_finished();
+    run_fin.sort_by_key(|s| s.id());
+
+    let mut eng_step = engine();
+    for r in reqs(()) {
+        eng_step.submit(r).unwrap();
+    }
+    let mut trace_step = eng_step.begin_run();
+    while !eng_step.sched.is_done() {
+        let step = eng_step.step().unwrap();
+        assert_eq!(step.yielded.len(), step.record.generated);
+        trace_step.push(step.record);
+    }
+    let mut step_fin = eng_step.sched.take_finished();
+    step_fin.sort_by_key(|s| s.id());
+
+    assert_eq!(trace_run.passes.len(), trace_step.passes.len());
+    for (a, b) in trace_run.passes.iter().zip(&trace_step.passes) {
+        assert_eq!(a.prefill_tokens, b.prefill_tokens, "pass {}", a.pass_id);
+        assert_eq!(a.decode_tokens, b.decode_tokens, "pass {}", a.pass_id);
+        assert_eq!(a.generated, b.generated, "pass {}", a.pass_id);
+        assert_eq!(a.finished, b.finished, "pass {}", a.pass_id);
+        assert_eq!(a.preempted, b.preempted, "pass {}", a.pass_id);
+    }
+    assert_eq!(run_fin.len(), step_fin.len());
+    for (a, b) in run_fin.iter().zip(&step_fin) {
+        assert_eq!(a.generated, b.generated, "sequence {}", a.id());
+    }
+    // And both match the JAX oracle.
+    for (i, seq) in step_fin.iter().enumerate() {
+        assert_eq!(seq.generated, g.generation.tokens[i], "sequence {i}");
+    }
+}
+
+#[test]
+fn online_with_zero_arrivals_matches_closed_batch() {
+    let Some(g) = golden() else { return };
+    let reqs: Vec<Request> = g
+        .generation
+        .prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p.clone(), g.generation.steps))
+        .collect();
+    let mut eng = engine();
+    let arrivals: Vec<(f64, Request)> =
+        reqs.into_iter().map(|r| (0.0, r)).collect();
+    let (_, report, latency) = eng.run_online(arrivals, f64::INFINITY).unwrap();
+    assert_eq!(report.requests, 3);
+    assert_eq!(latency.completed, 3);
+    let mut fin = eng.sched.take_finished();
+    fin.sort_by_key(|s| s.id());
+    for (i, seq) in fin.iter().enumerate() {
+        assert_eq!(seq.generated, g.generation.tokens[i], "sequence {i}");
+    }
+    // Latency sanity on the wall clock.
+    assert!(latency.ttft_p50 > 0.0);
+    assert!(latency.e2e_p99 >= latency.ttft_p50);
+}
+
+#[test]
 fn eos_termination_stops_early() {
     let Some(g) = golden() else { return };
     // Use the oracle's first generated token as a synthetic EOS: the

@@ -97,10 +97,11 @@ fn gpu_utilization_high_when_cache_ample_mtbench_g32() {
         30_000,
     );
     assert_eq!(report.preemptions, 0);
-    // Middle-of-run passes (steady state) should be GPU-busy.
+    // Middle-of-run passes (steady state) should be GPU-busy. GPU busy =
+    // exclusive GPU time plus the GPU/CPU-overlapped window.
     let n = trace.passes.len();
     let mid = &trace.passes[n / 3..2 * n / 3];
     let util: f64 =
-        mid.iter().map(|p| p.gpu_time / p.duration).sum::<f64>() / mid.len() as f64;
+        mid.iter().map(|p| p.gpu_busy() / p.duration).sum::<f64>() / mid.len() as f64;
     assert!(util > 0.5, "steady-state GPU utilization {util} too low");
 }
