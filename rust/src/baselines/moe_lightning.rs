@@ -71,16 +71,18 @@ impl MoeLightningSim {
             let gpu = costs.gpu_time(prefill_tokens);
             // Every full-model pass needs one δ sweep; a compute-saturated
             // prefill amortizes it entirely, a small batch pays δ.
-            let io = costs.delta().max(gpu);
-            let dur = io;
+            let dur = costs.delta().max(gpu);
             now += dur;
+            // Exclusive lanes (they partition `dur`): the IO lane books
+            // only the sweep time *exposed* past the GPU compute it
+            // pipelines with; the CPU-attention lane idles all phase.
             trace.push(PassRecord {
                 pass_id,
                 t_end: now,
                 duration: dur,
                 prefill_tokens,
                 decode_tokens: 0,
-                io_time: costs.delta(),
+                io_time: (costs.delta() - gpu).max(0.0),
                 gpu_time: gpu,
                 cpu_time: 0.0,
                 active_decode: 0,
@@ -104,6 +106,11 @@ impl MoeLightningSim {
                 let dur = lanes.io_contended.max(lanes.gpu) + lanes.cpu;
                 now += dur;
                 let finished = if step + 1 == g { batch } else { 0 };
+                // Exclusive lanes partitioning `dur`: IO books only the
+                // contended sweep exposed past the GPU GEMMs it pipelines
+                // with; the serialized CPU attention is its own span (it
+                // sits on the critical path, so overlap_time stays 0 —
+                // exactly the §6.4 overlap this baseline lacks).
                 trace.push(PassRecord {
                     pass_id,
                     t_end: now,
@@ -112,7 +119,7 @@ impl MoeLightningSim {
                     decode_tokens: batch,
                     generated: batch,
                     finished,
-                    io_time: lanes.io_contended,
+                    io_time: (lanes.io_contended - lanes.gpu).max(0.0),
                     gpu_time: lanes.gpu,
                     cpu_time: lanes.cpu,
                     active_decode: batch,
@@ -138,9 +145,19 @@ mod tests {
 
     #[test]
     fn completes_all_requests() {
-        let (_, report) = sim(70).run_uniform(98, 32, 5000);
+        let (trace, report) = sim(70).run_uniform(98, 32, 5000);
         assert_eq!(report.requests, 5000);
         assert_eq!(report.generated_tokens, 5000 * 32);
+        // The exclusive-lane contract holds for baseline traces too.
+        for p in &trace.passes {
+            assert!(
+                (p.lanes_total() - p.duration).abs() < 1e-9,
+                "pass {}: lanes {} vs duration {}",
+                p.pass_id,
+                p.lanes_total(),
+                p.duration
+            );
+        }
     }
 
     #[test]

@@ -62,12 +62,14 @@ impl VllmSim {
             let gpu = costs.gpu_time(prefill_tokens);
             let dur = io.max(gpu);
             now += dur;
+            // Exclusive lanes partitioning `dur`: IO books only the link
+            // time exposed past the GPU compute it overlaps.
             trace.push(PassRecord {
                 pass_id,
                 t_end: now,
                 duration: dur,
                 prefill_tokens,
-                io_time: io,
+                io_time: (io - gpu).max(0.0),
                 gpu_time: gpu,
                 ..Default::default()
             });
@@ -89,7 +91,7 @@ impl VllmSim {
                     decode_tokens: b,
                     generated: b,
                     finished: if step + 1 == g { b } else { 0 },
-                    io_time: io,
+                    io_time: (io - gpu).max(0.0),
                     gpu_time: gpu,
                     active_decode: b,
                     ..Default::default()
@@ -110,9 +112,19 @@ mod tests {
 
     #[test]
     fn completes_all_requests() {
-        let (_, r) = VllmSim::new(ModelSpec::mixtral_8x7b(), 70).run_uniform(98, 32, 500);
+        let (trace, r) = VllmSim::new(ModelSpec::mixtral_8x7b(), 70).run_uniform(98, 32, 500);
         assert_eq!(r.requests, 500);
         assert_eq!(r.generated_tokens, 500 * 32);
+        // The exclusive-lane contract holds for baseline traces too.
+        for p in &trace.passes {
+            assert!(
+                (p.lanes_total() - p.duration).abs() < 1e-9,
+                "pass {}: lanes {} vs duration {}",
+                p.pass_id,
+                p.lanes_total(),
+                p.duration
+            );
+        }
     }
 
     #[test]
@@ -131,10 +143,17 @@ mod tests {
 
     #[test]
     fn io_dominates_every_decode_pass() {
+        // With exclusive lanes, "IO binds" means the pass has exposed IO:
+        // the link time sticks out past the GPU compute it overlaps.
         let (trace, _) =
             VllmSim::new(ModelSpec::mixtral_8x7b(), 70).run_uniform(98, 32, 200);
         for p in trace.passes.iter().filter(|p| p.decode_tokens > 0) {
-            assert!(p.io_time >= p.gpu_time, "pass {}: IO must bind", p.pass_id);
+            assert!(p.io_time > 0.0, "pass {}: IO must bind", p.pass_id);
+            assert!(
+                (p.io_time + p.gpu_time - p.duration).abs() < 1e-9,
+                "pass {}: duration is the IO sweep",
+                p.pass_id
+            );
         }
     }
 }

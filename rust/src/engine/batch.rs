@@ -244,12 +244,16 @@ mod tests {
         s.submit(Request::new(1, vec![2; 6], 8));
         let p2 = s.plan(&mut kv);
         assert_eq!(p2.decode_tokens(), 1);
-        assert_eq!(p2.prefill_tokens(), 4); // chunked at max_chunk
+        // The head sequence chunks at max_chunk granularity (4 + 2) until
+        // its prompt is exhausted — budget permits the whole prompt.
+        assert_eq!(p2.prefill_tokens(), 6);
+        assert_eq!(p2.prefill.len(), 2);
         let buckets = pack_plan(&p2, &s, 8);
         let b = &buckets[0];
-        // chunk rows contiguous with one segment id; decode row seg -1
-        let segs: Vec<_> = b.seg_ids[..5].to_vec();
-        assert_eq!(segs[..4], [1, 1, 1, 1]);
-        assert_eq!(segs[4], -1);
+        // Back-to-back chunks of one sequence are position-contiguous, so
+        // they share a segment id; the decode row is masked with -1.
+        let segs: Vec<_> = b.seg_ids[..7].to_vec();
+        assert_eq!(segs[..6], [1, 1, 1, 1, 1, 1]);
+        assert_eq!(segs[6], -1);
     }
 }

@@ -22,8 +22,11 @@ use crate::kvcache::{KvLayout, PagedKvCache, SeqId};
 use crate::metrics::{LatencyStats, PassRecord, RequestTracker, RunReport, Stopwatch, Trace};
 use crate::model::Request;
 use crate::runtime::{to_f32, to_i32, Arg, Manifest, PjrtEngine};
-use crate::sched::{SchedConfig, Scheduler};
+use crate::sched::{
+    AdmissionPolicy, DropReason, SchedConfig, Scheduler, ServiceModel, VictimPolicy,
+};
 use crate::transfer::{DataMover, LinkTiming, PcieLink, WeightBuffer, WeightFile};
+use crate::workload::duplicate_id;
 
 /// Engine deployment configuration.
 #[derive(Debug, Clone)]
@@ -45,6 +48,14 @@ pub struct EngineConfig {
     /// Scheduler token budget per pass (buckets of `n_tok` are opened as
     /// needed up to this).
     pub token_budget: usize,
+    /// Queue admission policy (default FIFO — PR-1 behavior).
+    pub admission: AdmissionPolicy,
+    /// Preemption victim policy (default newest-first — PR-1 behavior).
+    pub victim: VictimPolicy,
+    /// Service-time estimates for the SLO/weighted policies. The default
+    /// (instant) makes SLO admission shed only requests whose deadline
+    /// has already passed — conservative until the engine is profiled.
+    pub service: ServiceModel,
 }
 
 impl EngineConfig {
@@ -63,6 +74,9 @@ impl EngineConfig {
             packet_bytes: 8 << 20,
             attn_threads: 2,
             token_budget: 0, // 0 => 2 buckets (set at load)
+            admission: AdmissionPolicy::default(),
+            victim: VictimPolicy::default(),
+            service: ServiceModel::default(),
         }
     }
 }
@@ -89,6 +103,9 @@ pub struct StepResult {
     pub yielded: Vec<(SeqId, i32)>,
     /// Sequences that finished this pass.
     pub finished: Vec<SeqId>,
+    /// Requests the SLO admission policy shed while planning this pass
+    /// (empty under the FIFO default).
+    pub dropped: Vec<(SeqId, DropReason)>,
 }
 
 /// The end-to-end serving engine.
@@ -150,8 +167,13 @@ impl ServingEngine {
         );
 
         let token_budget = if cfg.token_budget == 0 { 2 * rc.n_tok } else { cfg.token_budget };
-        let sched =
-            Scheduler::new(SchedConfig::new(token_budget, rc.n_tok).atomic());
+        let sched = Scheduler::new(
+            SchedConfig::new(token_budget, rc.n_tok)
+                .atomic()
+                .with_admission(cfg.admission)
+                .with_victim(cfg.victim)
+                .with_service(cfg.service),
+        );
 
         let embedding = weights.tensor_data("embedding")?.to_vec();
         let final_norm = weights.tensor_data("final_norm")?.to_vec();
@@ -230,7 +252,28 @@ impl ServingEngine {
     /// otherwise timestamps count from engine load (or from the previous
     /// run's clock) and pass ids continue the previous run's numbering.
     pub fn step(&mut self) -> Result<StepResult> {
-        let plan = self.sched.plan(self.cache.layout_mut());
+        let now = self.run_clock.elapsed().as_secs_f64();
+        let plan = self.sched.plan_at(self.cache.layout_mut(), now);
+        let dropped = plan.dropped.clone();
+        if plan.is_empty() {
+            // Planning only shed requests (SLO admission) — there is no
+            // pass body to execute. Record a zero-duration pass so the
+            // drop accounting still lands on the trace.
+            let record = PassRecord {
+                pass_id: self.next_pass,
+                t_end: self.run_clock.elapsed().as_secs_f64(),
+                kv_blocks_used: self.cache.layout().used_blocks(),
+                active_decode: self.sched.active_decode(),
+                ..Default::default()
+            };
+            self.next_pass += 1;
+            return Ok(StepResult {
+                record,
+                yielded: Vec::new(),
+                finished: Vec::new(),
+                dropped,
+            });
+        }
         let buckets = pack_plan(&plan, &self.sched, self.n_tok());
         let pass_clock = Stopwatch::start();
         let (tokens, times) = self.run_pass(&buckets)?;
@@ -255,7 +298,7 @@ impl ServingEngine {
             active_decode: self.sched.active_decode(),
         };
         self.next_pass += 1;
-        Ok(StepResult { record, yielded: tokens, finished })
+        Ok(StepResult { record, yielded: tokens, finished, dropped })
     }
 
     /// Serve a batch of requests to completion. Returns the trace and the
@@ -302,6 +345,12 @@ impl ServingEngine {
         for (_, r) in &arrivals {
             self.validate(r)?;
         }
+        if let Some(dup) = duplicate_id(&arrivals) {
+            anyhow::bail!(
+                "duplicate request id {dup} in arrival stream — per-request \
+                 latency tracking requires unique ids"
+            );
+        }
         let n_req = arrivals.len();
         let mut pending: VecDeque<(f64, Request)> = arrivals.into();
         let mut tracker = RequestTracker::new();
@@ -312,7 +361,7 @@ impl ServingEngine {
             while pending.front().is_some_and(|(t, _)| *t <= now) {
                 let (t, r) = pending.pop_front().unwrap();
                 tracker.arrived(r.id, t);
-                self.sched.submit(r);
+                self.sched.submit_at(r, t);
             }
             if self.sched.is_done() {
                 match pending.front() {
@@ -334,6 +383,9 @@ impl ServingEngine {
             }
             for &id in &step.finished {
                 tracker.finished(id, t_end);
+            }
+            for &(id, reason) in &step.dropped {
+                tracker.dropped(id, t_end, reason);
             }
             trace.push(step.record);
         }

@@ -9,7 +9,7 @@ use moe_lens::config::{GpuSpec, MachineSpec, ModelSpec, WorkloadSpec};
 use moe_lens::engine::{EngineConfig, ServingEngine};
 use moe_lens::metrics::RunReport;
 use moe_lens::perfmodel::{Stage1Model, Stage2Model};
-use moe_lens::sched::PipelineProfiler;
+use moe_lens::sched::{AdmissionPolicy, PipelineProfiler, VictimPolicy};
 use moe_lens::simhw::{SimConfig, SimMachine};
 use moe_lens::transfer::LinkTiming;
 use moe_lens::util::args::Args;
@@ -30,6 +30,12 @@ COMMANDS:
              [--arrival poisson|burst|trace] [--arrival-rate F]
              [--burst-size N] [--arrival-trace PATH] [--arrival-seed N]
              [--slo-e2e SECS]
+             scheduling policies (defaults reproduce FIFO/newest-first):
+             [--admission fifo|slo] [--victim newest|weighted]
+             (--admission slo drops requests past their deadline =
+              arrival + --slo-e2e; the engine's default service model
+              predicts instant service, so shedding is reactive until a
+              profiled estimate is wired into EngineConfig::service)
   plan       print Stage-1/Stage-2 performance-model analysis
              --model <name> --gpu <name> --kv-gb N --p N --g N [--batch K]
   simulate   run the paper-scale hardware simulator
@@ -258,6 +264,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(gbps) = args.get("link-gbps") {
         cfg.timing = LinkTiming::Throttle(gbps.parse::<f64>().unwrap() * 1e9);
     }
+    let admission_name = args.str_or("admission", "fifo");
+    cfg.admission = AdmissionPolicy::parse(admission_name).unwrap_or_else(|| {
+        eprintln!("unknown admission policy '{admission_name}' (fifo|slo)");
+        std::process::exit(2);
+    });
+    let victim_name = args.str_or("victim", "newest");
+    cfg.victim = VictimPolicy::parse(victim_name).unwrap_or_else(|| {
+        eprintln!("unknown victim policy '{victim_name}' (newest|weighted)");
+        std::process::exit(2);
+    });
+    // SLO admission sheds against per-request deadlines, which the CLI
+    // derives from --slo-e2e in online mode. Without them the flag would
+    // silently behave exactly like FIFO — reject the combination instead.
+    let slo_admission = matches!(cfg.admission, AdmissionPolicy::Slo { .. });
+    let online = args.has("arrival") || args.has("arrival-rate");
+    if slo_admission && (!online || !args.f64_or("slo-e2e", f64::INFINITY).is_finite()) {
+        eprintln!(
+            "--admission slo requires online mode with a finite --slo-e2e \
+             (deadlines are set to arrival + --slo-e2e; without them nothing \
+             can be shed and the policy degenerates to fifo)"
+        );
+        std::process::exit(2);
+    }
     let mut engine = ServingEngine::load(cfg)?;
 
     let n = args.usize_or("requests", 16);
@@ -317,16 +346,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
         };
         let n_eff = times.len().min(reqs.len());
-        let arrivals: Vec<(f64, moe_lens::model::Request)> =
-            times.into_iter().zip(reqs).take(n_eff).collect();
         let slo = args.f64_or("slo-e2e", f64::INFINITY);
+        // Deadlines = arrival + SLO; the FIFO default ignores them, the
+        // SLO admission policy sheds requests that cannot meet them.
+        let arrivals: Vec<(f64, moe_lens::model::Request)> = moe_lens::workload::with_deadlines(
+            times.into_iter().zip(reqs).take(n_eff).collect(),
+            slo,
+        );
         let process = if mode == "trace" {
             format!("trace {}", args.str_or("arrival-trace", "?"))
         } else {
             format!("{mode}, {rate} req/s")
         };
         println!(
-            "serving {n_eff} online requests ({process}, p={p}, g={g}) \
+            "serving {n_eff} online requests ({process}, p={p}, g={g}, \
+             admission={admission_name}, victim={victim_name}) \
              on '{model}' via PJRT {}...",
             engine.pjrt.platform()
         );

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::kvcache::SeqId;
+use crate::sched::DropReason;
 use crate::util::stats::percentile;
 
 /// One inference pass (forward iteration) of the pipeline.
@@ -31,7 +32,12 @@ pub struct PassRecord {
     pub finished: usize,
     /// Sequences preempted this pass (§6.2 preemption mode).
     pub preempted: usize,
-    /// Weight-transfer (IO) time within the pass (seconds).
+    /// *Exposed* weight-transfer (IO) time within the pass (seconds):
+    /// the window the pass spends only waiting on the link. The engine
+    /// stamps its stage-boundary waits; the simulator books the
+    /// contended sweep minus the compute it overlaps. IO that hides
+    /// under compute is *not* in this lane — the four lanes partition
+    /// the pass.
     pub io_time: f64,
     /// GPU-exclusive compute time within the pass (seconds): GPU busy
     /// while the CPU attention lane is idle.
@@ -146,16 +152,33 @@ impl Trace {
         }
     }
 
-    /// Downsample to `n` points for the Fig.-13 time-series plots.
+    /// Downsample to at most `n` points for the Fig.-13 time-series
+    /// plots. The final pass is always included — the end state (e.g. KV
+    /// blocks draining back to 0) is exactly what the plots are read for
+    /// — and the output never exceeds `n` points. (The seed's
+    /// `step_by(len / n)` stride dropped the last pass unless aligned and
+    /// could return up to 2n-1 points.)
     pub fn series<F: Fn(&PassRecord) -> f64>(&self, n: usize, f: F) -> Vec<(f64, f64)> {
-        if self.passes.is_empty() {
+        let len = self.passes.len();
+        if len == 0 || n == 0 {
             return Vec::new();
         }
-        let stride = (self.passes.len() / n.max(1)).max(1);
-        self.passes
-            .iter()
-            .step_by(stride)
-            .map(|p| (p.t_end, f(p)))
+        if len <= n {
+            return self.passes.iter().map(|p| (p.t_end, f(p))).collect();
+        }
+        if n == 1 {
+            let p = self.passes.last().unwrap();
+            return vec![(p.t_end, f(p))];
+        }
+        // n evenly spaced samples, pinned to the first and last pass.
+        // len > n ⇒ the stride ratio exceeds 1, so rounded indices are
+        // strictly increasing (no duplicates).
+        let ratio = (len - 1) as f64 / (n - 1) as f64;
+        (0..n)
+            .map(|i| {
+                let p = &self.passes[(i as f64 * ratio).round() as usize];
+                (p.t_end, f(p))
+            })
             .collect()
     }
 
@@ -239,6 +262,9 @@ pub struct RequestTiming {
     pub first_token: Option<f64>,
     /// When its last token was produced (request completion).
     pub finish: Option<f64>,
+    /// When (and why) the SLO admission policy dropped it, if it was
+    /// shed instead of served.
+    pub dropped: Option<(f64, DropReason)>,
     /// Tokens generated so far.
     pub generated: usize,
 }
@@ -255,13 +281,24 @@ impl RequestTracker {
         Self::default()
     }
 
-    /// Record a request entering the system at time `t`.
+    /// Record a request entering the system at time `t`. Panics on a
+    /// duplicate id: a second arrival would silently overwrite the first
+    /// one's timings (the seed only `debug_assert`ed, so release-mode
+    /// traces with duplicate ids corrupted every latency stat). The
+    /// serving loops validate id uniqueness up front and surface a
+    /// proper error; this is the last-resort guard.
     pub fn arrived(&mut self, id: SeqId, t: f64) {
         let prev = self.timings.insert(
             id,
-            RequestTiming { arrival: t, first_token: None, finish: None, generated: 0 },
+            RequestTiming {
+                arrival: t,
+                first_token: None,
+                finish: None,
+                dropped: None,
+                generated: 0,
+            },
         );
-        debug_assert!(prev.is_none(), "request {id} arrived twice");
+        assert!(prev.is_none(), "request {id} arrived twice");
     }
 
     /// Record one generated token for `id` at time `t` (the first call
@@ -281,6 +318,15 @@ impl RequestTracker {
         r.finish = Some(t);
     }
 
+    /// Record the request being shed by the SLO admission policy at time
+    /// `t` (it will never finish).
+    pub fn dropped(&mut self, id: SeqId, t: f64, reason: DropReason) {
+        let r = self.timings.get_mut(&id).expect("drop for untracked request");
+        debug_assert!(r.finish.is_none(), "request {id} dropped after finishing");
+        debug_assert!(r.dropped.is_none(), "request {id} dropped twice");
+        r.dropped = Some((t, reason));
+    }
+
     pub fn timing(&self, id: SeqId) -> Option<&RequestTiming> {
         self.timings.get(&id)
     }
@@ -297,7 +343,14 @@ impl RequestTracker {
         let mut tpot = Vec::new();
         let mut e2e = Vec::new();
         let mut within_slo = 0usize;
+        let mut rejected = 0usize;
+        let mut expired = 0usize;
         for r in self.timings.values() {
+            match r.dropped {
+                Some((_, DropReason::Rejected)) => rejected += 1,
+                Some((_, DropReason::Expired)) => expired += 1,
+                None => {}
+            }
             let (Some(first), Some(fin)) = (r.first_token, r.finish) else {
                 continue;
             };
@@ -315,6 +368,8 @@ impl RequestTracker {
         LatencyStats {
             requests: self.timings.len(),
             completed: e2e.len(),
+            rejected,
+            expired,
             ttft_p50: percentile(&ttft, 0.50),
             ttft_p99: percentile(&ttft, 0.99),
             tpot_p50: percentile(&tpot, 0.50),
@@ -335,6 +390,10 @@ pub struct LatencyStats {
     pub requests: usize,
     /// Requests that finished.
     pub completed: usize,
+    /// Requests shed by SLO admission before any work was done.
+    pub rejected: usize,
+    /// Requests dropped mid-flight (deadline slack ran out).
+    pub expired: usize,
     /// Time-to-first-token percentiles (seconds).
     pub ttft_p50: f64,
     pub ttft_p99: f64,
@@ -353,6 +412,12 @@ pub struct LatencyStats {
 impl LatencyStats {
     pub fn print(&self) {
         println!("  completed         : {}/{}", self.completed, self.requests);
+        if self.rejected + self.expired > 0 {
+            println!(
+                "  shed (SLO)        : {} rejected, {} expired",
+                self.rejected, self.expired
+            );
+        }
         println!(
             "  TTFT p50/p99      : {:.3} s / {:.3} s",
             self.ttft_p50, self.ttft_p99
@@ -451,8 +516,64 @@ mod tests {
             tr.push(pass(i, i as f64, 0, i, 0.0, 1.0));
         }
         let s = tr.series(10, |p| p.decode_tokens as f64);
-        assert!(s.len() >= 10 && s.len() <= 11);
+        assert_eq!(s.len(), 10);
         assert_eq!(s[0], (0.0, 0.0));
+    }
+
+    #[test]
+    fn series_always_includes_the_final_pass_and_bounds_length() {
+        // The seed's step_by stride dropped the final pass on unaligned
+        // lengths (19 % 10 != 0) and returned up to 2n-1 points.
+        let mut tr = Trace::new(10);
+        for i in 0..19 {
+            tr.push(pass(i, i as f64, 0, i, 0.0, 1.0));
+        }
+        for n in 1..=25 {
+            let s = tr.series(n, |p| p.decode_tokens as f64);
+            assert!(s.len() <= n, "n={n}: {} points", s.len());
+            assert_eq!(s.len(), n.min(19));
+            assert_eq!(
+                *s.last().unwrap(),
+                (18.0, 18.0),
+                "n={n}: final pass must be included"
+            );
+            if n >= 2 {
+                assert_eq!(s[0], (0.0, 0.0), "n={n}: first pass pinned");
+            }
+            // Strictly increasing timestamps: no duplicate samples.
+            for w in s.windows(2) {
+                assert!(w[0].0 < w[1].0, "n={n}");
+            }
+        }
+        assert!(tr.series(0, |p| p.duration).is_empty());
+    }
+
+    #[test]
+    fn request_tracker_drop_accounting() {
+        let mut t = RequestTracker::new();
+        t.arrived(0, 0.0);
+        t.token(0, 1.0);
+        t.finished(0, 1.0);
+        t.arrived(1, 0.5);
+        t.dropped(1, 2.0, DropReason::Rejected);
+        t.arrived(2, 0.7);
+        t.dropped(2, 3.0, DropReason::Expired);
+        let s = t.stats(10.0, f64::INFINITY);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.expired, 1);
+        assert!((s.goodput_rps - 0.1).abs() < 1e-12);
+        assert_eq!(t.timing(1).unwrap().dropped, Some((2.0, DropReason::Rejected)));
+        s.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "arrived twice")]
+    fn duplicate_arrival_panics_in_release_too() {
+        let mut t = RequestTracker::new();
+        t.arrived(7, 0.0);
+        t.arrived(7, 1.0);
     }
 
     #[test]

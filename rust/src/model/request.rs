@@ -12,16 +12,29 @@ pub struct Request {
     /// Optional EOS token: generation stops early when produced (§8.1's
     /// "terminate generation when the EOS token is reached" mode).
     pub eos: Option<i32>,
+    /// Optional end-to-end deadline, in seconds on the run clock (the
+    /// same clock arrival timestamps use). `None` = no SLO: the request
+    /// is never shed and carries no preemption-slack information. The
+    /// SLO-aware admission and weighted victim policies read this; the
+    /// FIFO/newest defaults ignore it.
+    pub deadline: Option<f64>,
 }
 
 impl Request {
     pub fn new(id: SeqId, prompt: Vec<i32>, max_gen: usize) -> Self {
         assert!(!prompt.is_empty() && max_gen > 0);
-        Request { id, prompt, max_gen, eos: None }
+        Request { id, prompt, max_gen, eos: None, deadline: None }
     }
 
     pub fn with_eos(mut self, eos: i32) -> Self {
         self.eos = Some(eos);
+        self
+    }
+
+    /// Attach an absolute end-to-end deadline (run-clock seconds).
+    pub fn with_deadline(mut self, deadline: f64) -> Self {
+        assert!(deadline.is_finite(), "deadline must be finite (omit it for none)");
+        self.deadline = Some(deadline);
         self
     }
 }
@@ -50,11 +63,27 @@ pub struct Sequence {
     pub generated: Vec<i32>,
     /// Times this sequence was preempted (telemetry + §6.2 re-prefill).
     pub preemptions: usize,
+    /// When the request entered the scheduler (run-clock seconds; 0 for
+    /// closed batches). The weighted victim policy breaks score ties
+    /// youngest-first on this.
+    pub arrival: f64,
 }
 
 impl Sequence {
     pub fn new(req: Request) -> Self {
-        Sequence { req, phase: SeqPhase::Queued, prefilled: 0, generated: Vec::new(), preemptions: 0 }
+        Sequence::new_at(req, 0.0)
+    }
+
+    /// A sequence arriving at run-clock time `arrival`.
+    pub fn new_at(req: Request, arrival: f64) -> Self {
+        Sequence {
+            req,
+            phase: SeqPhase::Queued,
+            prefilled: 0,
+            generated: Vec::new(),
+            preemptions: 0,
+            arrival,
+        }
     }
 
     pub fn id(&self) -> SeqId {
@@ -111,6 +140,13 @@ impl Sequence {
         self.prefilled = 0;
         self.preemptions += 1;
     }
+
+    /// Whether the system has done any work for this sequence yet — the
+    /// rejected (shed untouched) vs. expired (dropped mid-flight)
+    /// distinction the drop accounting reports.
+    pub fn started(&self) -> bool {
+        self.prefilled > 0 || !self.generated.is_empty() || self.preemptions > 0
+    }
 }
 
 #[cfg(test)]
@@ -136,6 +172,36 @@ mod tests {
         assert!(!s.push_generated(5));
         assert!(s.push_generated(0));
         assert_eq!(s.generated.len(), 2);
+    }
+
+    #[test]
+    fn deadline_and_arrival_plumbing() {
+        let r = Request::new(3, vec![1, 2], 8).with_deadline(42.5);
+        assert_eq!(r.deadline, Some(42.5));
+        assert_eq!(Request::new(3, vec![1, 2], 8).deadline, None);
+        let s = Sequence::new_at(r, 7.25);
+        assert_eq!(s.arrival, 7.25);
+        assert_eq!(Sequence::new(Request::new(0, vec![1], 1)).arrival, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadline must be finite")]
+    fn non_finite_deadline_panics() {
+        Request::new(0, vec![1], 1).with_deadline(f64::NAN);
+    }
+
+    #[test]
+    fn started_tracks_any_progress() {
+        let mut s = Sequence::new(Request::new(1, vec![1, 2], 4));
+        assert!(!s.started());
+        s.prefilled = 1;
+        assert!(s.started());
+        s.prefilled = 0;
+        s.preemptions = 1;
+        assert!(s.started());
+        s.preemptions = 0;
+        s.generated.push(9);
+        assert!(s.started());
     }
 
     #[test]

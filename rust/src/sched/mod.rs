@@ -1,14 +1,24 @@
-//! The Resource-Aware Scheduler (§6.2) and Pipeline Profiler (§6.3).
+//! The Resource-Aware Scheduler (§6.2), Pipeline Profiler (§6.3), and
+//! the pluggable scheduling policies (admission + preemption victim).
 //!
 //! The scheduler overlaps prefill and decode in one pass plan per
 //! iteration, switching between *Normal Inference Mode* (both schedulers
-//! issue concurrently) and *Preemption Mode* (newest decode sequences are
-//! evicted and re-queued as prefill, old sequences are prioritized). It
-//! is engine-agnostic: the real VSLPipe engine and the `simhw` simulator
-//! drive the same planner against a [`PagedLayout`].
+//! issue concurrently) and *Preemption Mode* (decode sequences are
+//! evicted by the configured [`VictimPolicy`] and re-queued as prefill).
+//! Queue admission follows the configured [`AdmissionPolicy`]: FIFO, or
+//! SLO-aware shedding against per-request deadlines using the
+//! [`ServiceModel`] cost estimates. It is engine-agnostic: the real
+//! VSLPipe engine and the `simhw` simulator drive the same planner
+//! against a [`PagedLayout`].
+//!
+//! [`PagedLayout`]: crate::kvcache::PagedLayout
 
+mod policy;
 mod profiler;
 mod resource_aware;
 
+pub use policy::{
+    AdmissionPolicy, DropReason, ServiceModel, VictimPolicy, DEFAULT_SLO_HEADROOM,
+};
 pub use profiler::{PipelineProfiler, ProfileFit};
 pub use resource_aware::{PassPlan, SchedConfig, SchedMode, Scheduler};

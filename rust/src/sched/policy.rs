@@ -1,0 +1,249 @@
+//! Pluggable scheduling policies: SLO-aware admission control and
+//! preemption victim selection.
+//!
+//! The paper's thesis (§6.2–§6.3) is that throughput limits come from
+//! resource-aware scheduling; under *overload* the binding resource is
+//! the request queue itself. FIFO admission lets the queue grow without
+//! bound, so every request eventually blows through its deadline and
+//! goodput collapses. [`AdmissionPolicy::Slo`] sheds requests whose
+//! remaining deadline slack cannot cover their predicted service time
+//! (from the same analytic cost model the simulator runs on), keeping
+//! the admitted set feasible and goodput pinned near the hardware limit.
+//!
+//! [`VictimPolicy`] generalizes §6.2's newest-first preemption: the
+//! weighted variant victimizes the decoding sequence with the most
+//! deadline slack net of its replay cost, which rotates preemption pain
+//! across the batch instead of starving the newest sequences
+//! (MoE-Lightning-style request-latency fairness, arXiv:2411.11217).
+
+use crate::config::{MachineSpec, ModelSpec};
+use crate::model::{Request, Sequence};
+
+/// Safety margin applied to the predicted service time before admitting
+/// against a deadline. The analytic estimate ignores memory-controller
+/// contention (§8.2, bounded by `simhw::CONTENTION_KAPPA` = 25%) and
+/// prefill pass quantization; admitting at exactly zero predicted slack
+/// would let every steady-state admission finish *just* past its
+/// deadline.
+pub const DEFAULT_SLO_HEADROOM: f64 = 1.15;
+
+/// Virtual deadline offset for deadline-free sequences in the weighted
+/// victim score: they are treated as `deadline = arrival + PATIENCE`.
+/// Large enough (~31 years) that any real deadline sorts as more urgent,
+/// small enough that f64 keeps sub-microsecond resolution when run-clock
+/// seconds are subtracted — the *relative* slack between two patient
+/// sequences (who has been delayed more, who is closer to finishing)
+/// still drives rotation.
+pub const NO_DEADLINE_PATIENCE: f64 = 1e9;
+
+/// How the Prefill Scheduler treats the waiting queue.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum AdmissionPolicy {
+    /// Admit strictly in arrival order and never shed — PR-1 behavior.
+    #[default]
+    Fifo,
+    /// Deadline-aware: at every planning step, drop queued requests whose
+    /// deadline cannot cover `headroom ×` their predicted remaining
+    /// service time. Requests without a deadline are never shed.
+    Slo {
+        /// Multiplier on the predicted service time (≥ 1.0); see
+        /// [`DEFAULT_SLO_HEADROOM`].
+        headroom: f64,
+    },
+}
+
+impl AdmissionPolicy {
+    /// The SLO policy with the default safety headroom.
+    pub fn slo() -> Self {
+        AdmissionPolicy::Slo { headroom: DEFAULT_SLO_HEADROOM }
+    }
+
+    /// Parse a CLI name (`fifo` | `slo`).
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "fifo" => Some(AdmissionPolicy::Fifo),
+            "slo" => Some(AdmissionPolicy::slo()),
+            _ => None,
+        }
+    }
+}
+
+/// How the Decode Scheduler picks preemption victims (§6.2's preemption
+/// mode evicts until the surviving working set fits the KV cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VictimPolicy {
+    /// Evict the most recently admitted sequence (largest id) — PR-1
+    /// behavior. Under sustained cache pressure the newest sequences are
+    /// starved: each re-prefill re-enters the decode set still newest,
+    /// so the same sequences absorb every eviction.
+    #[default]
+    Newest,
+    /// Evict the sequence with the highest deadline slack net of its
+    /// re-prefill cost. Progress feeds back into the score (a sequence
+    /// closer to finishing has less predicted work left, hence more
+    /// slack), so victims rotate across the batch and the
+    /// preemption-induced latency tail collapses. Sequences without
+    /// deadlines fall back to cheapest-replay, youngest-first.
+    Weighted,
+}
+
+impl VictimPolicy {
+    /// Parse a CLI name (`newest` | `weighted`).
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "newest" => Some(VictimPolicy::Newest),
+            "weighted" => Some(VictimPolicy::Weighted),
+            _ => None,
+        }
+    }
+}
+
+/// Linear per-request service-time estimate used by the SLO admission
+/// and weighted victim policies. Derived from the same constants the
+/// HRM/Stage-2 cost model runs on: a pass moves the full weight set
+/// (δ seconds) and processes up to `n_real` tokens, so prefill costs
+/// `δ / n_real` per token and each generated token costs one δ-long
+/// decode iteration.
+///
+/// The default (all zeros) predicts instant service: SLO admission then
+/// sheds only requests whose deadline has already passed — the right
+/// conservative default for the real engine, whose wall-clock pass times
+/// are not known until profiled.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ServiceModel {
+    /// Predicted seconds per prefill (prompt) token.
+    pub prefill_secs_per_token: f64,
+    /// Predicted seconds per decode iteration (one generated token).
+    pub decode_secs_per_iter: f64,
+}
+
+impl ServiceModel {
+    pub fn new(prefill_secs_per_token: f64, decode_secs_per_iter: f64) -> Self {
+        ServiceModel { prefill_secs_per_token, decode_secs_per_iter }
+    }
+
+    /// The zero model: every request predicted to finish instantly.
+    pub fn instant() -> Self {
+        ServiceModel::default()
+    }
+
+    /// From a full weight-sweep time δ and the pipeline token budget
+    /// (`n_real`) — the §6.3 identity the simulator's clock runs on.
+    pub fn from_costs(delta_secs: f64, token_budget: usize) -> Self {
+        ServiceModel {
+            prefill_secs_per_token: delta_secs / token_budget.max(1) as f64,
+            decode_secs_per_iter: delta_secs,
+        }
+    }
+
+    /// Analytic estimate from hardware constants (Eq. 2's `n_real` and
+    /// the weight-sweep δ).
+    pub fn analytic(machine: &MachineSpec, model: &ModelSpec) -> Self {
+        let delta = machine.transfer_secs(model.model_bytes());
+        let fit = super::PipelineProfiler::analytic(machine, model);
+        ServiceModel::from_costs(delta, fit.n_real)
+    }
+
+    /// Predicted service time for a fresh (unstarted) request.
+    pub fn predicted_service(&self, req: &Request) -> f64 {
+        req.prompt.len() as f64 * self.prefill_secs_per_token
+            + req.max_gen as f64 * self.decode_secs_per_iter
+    }
+
+    /// Predicted time to finish a live sequence from its current state:
+    /// remaining (re-)prefill plus remaining decode iterations.
+    pub fn predicted_remaining(&self, seq: &Sequence) -> f64 {
+        seq.pending_prefill() as f64 * self.prefill_secs_per_token
+            + seq.remaining_gen() as f64 * self.decode_secs_per_iter
+    }
+
+    /// Predicted cost of replaying a sequence's full context after a
+    /// preemption (the §6.2 re-prefill).
+    pub fn replay_cost(&self, seq: &Sequence) -> f64 {
+        seq.full_prompt_len() as f64 * self.prefill_secs_per_token
+    }
+}
+
+/// Why the scheduler removed a request without finishing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// Shed before any work was done: the deadline could never be met.
+    Rejected,
+    /// Dropped after it had started (partial prefill or a preemption
+    /// replay): the remaining slack no longer covers the remaining work.
+    Expired,
+}
+
+impl DropReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DropReason::Rejected => "rejected",
+            DropReason::Expired => "expired",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(AdmissionPolicy::parse("fifo"), Some(AdmissionPolicy::Fifo));
+        assert_eq!(
+            AdmissionPolicy::parse("slo"),
+            Some(AdmissionPolicy::Slo { headroom: DEFAULT_SLO_HEADROOM })
+        );
+        assert_eq!(AdmissionPolicy::parse("nope"), None);
+        assert_eq!(VictimPolicy::parse("newest"), Some(VictimPolicy::Newest));
+        assert_eq!(VictimPolicy::parse("weighted"), Some(VictimPolicy::Weighted));
+        assert_eq!(VictimPolicy::parse(""), None);
+    }
+
+    #[test]
+    fn defaults_are_pr1_policies() {
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::Fifo);
+        assert_eq!(VictimPolicy::default(), VictimPolicy::Newest);
+        assert_eq!(ServiceModel::default(), ServiceModel::instant());
+    }
+
+    #[test]
+    fn service_prediction_math() {
+        let m = ServiceModel::from_costs(5.0, 1000);
+        let req = Request::new(1, vec![7; 200], 32);
+        // prefill: 200 * 5ms = 1 s; decode: 32 * 5 s = 160 s.
+        let p = m.predicted_service(&req);
+        assert!((p - 161.0).abs() < 1e-9, "{p}");
+
+        let mut seq = Sequence::new(req);
+        assert!((m.predicted_remaining(&seq) - 161.0).abs() < 1e-9);
+        // Half-prefilled: 100 tokens left, still 32 decodes.
+        seq.prefilled = 100;
+        assert!((m.predicted_remaining(&seq) - 160.5).abs() < 1e-9);
+        // 10 tokens generated: replay covers prompt + generated.
+        for _ in 0..10 {
+            seq.push_generated(1);
+        }
+        assert!((m.predicted_remaining(&seq) - (110.0 * 0.005 + 22.0 * 5.0)).abs() < 1e-9);
+        assert!((m.replay_cost(&seq) - 210.0 * 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn instant_model_predicts_zero() {
+        let m = ServiceModel::instant();
+        let req = Request::new(1, vec![1; 50], 10);
+        assert_eq!(m.predicted_service(&req), 0.0);
+        assert_eq!(m.predicted_remaining(&Sequence::new(req)), 0.0);
+    }
+
+    #[test]
+    fn analytic_model_matches_profiler_constants() {
+        let machine = MachineSpec::paper_testbed();
+        let model = ModelSpec::mixtral_8x7b();
+        let m = ServiceModel::analytic(&machine, &model);
+        let delta = machine.transfer_secs(model.model_bytes());
+        assert!((m.decode_secs_per_iter - delta).abs() < 1e-12);
+        assert!(m.prefill_secs_per_token > 0.0);
+        assert!(m.prefill_secs_per_token < m.decode_secs_per_iter);
+    }
+}

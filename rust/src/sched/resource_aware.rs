@@ -2,6 +2,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
+use super::policy::{AdmissionPolicy, DropReason, ServiceModel, VictimPolicy};
 use crate::kvcache::{PagedLayout, SeqId};
 use crate::model::{Request, SeqPhase, Sequence};
 
@@ -20,15 +21,44 @@ pub struct SchedConfig {
     /// attend to its own earlier tokens. The simulator (no numerics)
     /// chunks freely.
     pub atomic_prefill: bool,
+    /// Queue admission policy (default FIFO — PR-1 behavior).
+    pub admission: AdmissionPolicy,
+    /// Preemption victim policy (default newest-first — PR-1 behavior).
+    pub victim: VictimPolicy,
+    /// Service-time estimates backing the SLO admission and weighted
+    /// victim policies (default: instant — policies degrade gracefully).
+    pub service: ServiceModel,
 }
 
 impl SchedConfig {
     pub fn new(token_budget: usize, max_chunk: usize) -> Self {
-        SchedConfig { token_budget, max_chunk, atomic_prefill: false }
+        SchedConfig {
+            token_budget,
+            max_chunk,
+            atomic_prefill: false,
+            admission: AdmissionPolicy::default(),
+            victim: VictimPolicy::default(),
+            service: ServiceModel::default(),
+        }
     }
 
     pub fn atomic(mut self) -> Self {
         self.atomic_prefill = true;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_victim(mut self, victim: VictimPolicy) -> Self {
+        self.victim = victim;
+        self
+    }
+
+    pub fn with_service(mut self, service: ServiceModel) -> Self {
+        self.service = service;
         self
     }
 }
@@ -59,6 +89,9 @@ pub struct PassPlan {
     pub decode: Vec<(SeqId, usize)>,
     pub prefill: Vec<PrefillChunk>,
     pub preempted: Vec<SeqId>,
+    /// Requests the SLO admission policy shed while planning this pass
+    /// (their KV blocks are already released). Empty under FIFO.
+    pub dropped: Vec<(SeqId, DropReason)>,
     pub mode: Option<SchedMode>,
 }
 
@@ -91,6 +124,10 @@ pub struct Scheduler {
     decoding: BTreeMap<SeqId, Sequence>,
     finished: Vec<Sequence>,
     preemptions: usize,
+    /// Requests shed before any work (SLO admission).
+    rejected: usize,
+    /// Requests dropped after starting (slack ran out mid-flight).
+    expired: usize,
 }
 
 impl Scheduler {
@@ -102,11 +139,19 @@ impl Scheduler {
             decoding: BTreeMap::new(),
             finished: Vec::new(),
             preemptions: 0,
+            rejected: 0,
+            expired: 0,
         }
     }
 
     pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(Sequence::new(req));
+        self.submit_at(req, 0.0);
+    }
+
+    /// Enqueue a request arriving at run-clock time `now` (the weighted
+    /// victim policy tie-breaks on arrival age).
+    pub fn submit_at(&mut self, req: Request, now: f64) {
+        self.queue.push_back(Sequence::new_at(req, now));
     }
 
     pub fn submit_all(&mut self, reqs: impl IntoIterator<Item = Request>) {
@@ -135,17 +180,41 @@ impl Scheduler {
         self.preemptions
     }
 
+    /// Requests shed by SLO admission before any work was done.
+    pub fn total_rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Requests dropped after starting (deadline slack ran out).
+    pub fn total_expired(&self) -> usize {
+        self.expired
+    }
+
     pub fn is_done(&self) -> bool {
         self.queue.is_empty() && self.decoding.is_empty()
     }
 
-    /// Plan one pass. Reserves KV slots in `kv` for everything scheduled;
-    /// releases the blocks of preempted sequences.
+    /// Plan one pass at run-clock time 0 — closed-batch entry point.
     pub fn plan(&mut self, kv: &mut PagedLayout) -> PassPlan {
+        self.plan_at(kv, 0.0)
+    }
+
+    /// Plan one pass at run-clock time `now`. Reserves KV slots in `kv`
+    /// for everything scheduled; releases the blocks of preempted and
+    /// SLO-shed sequences.
+    pub fn plan_at(&mut self, kv: &mut PagedLayout, now: f64) -> PassPlan {
         let mut plan = PassPlan::default();
 
+        // --- SLO admission: shed queued requests whose deadline cannot
+        // cover their predicted remaining service, releasing any blocks
+        // held by partial prefills before the decode feasibility check.
+        if let AdmissionPolicy::Slo { headroom } = self.cfg.admission {
+            self.shed_infeasible(kv, now, headroom, &mut plan);
+        }
+
         // --- Decode Scheduler: estimate blocks for all active sequences,
-        // preempt (newest first) until the rest fit.
+        // preempt (victim policy; newest first by default) until the rest
+        // fit.
         let mut mode = SchedMode::Normal;
         loop {
             let need: usize = self
@@ -160,8 +229,7 @@ impl Scheduler {
                 break;
             }
             mode = SchedMode::Preemption;
-            // Newest = largest id (ids are assigned in admission order).
-            let victim = *self.decoding.keys().next_back().expect("need>0 => non-empty");
+            let victim = self.select_victim(now);
             let mut seq = self.decoding.remove(&victim).unwrap();
             kv.release(victim);
             seq.preempt();
@@ -217,6 +285,86 @@ impl Scheduler {
         plan
     }
 
+    /// Pick the decode sequence to evict in preemption mode.
+    fn select_victim(&self, now: f64) -> SeqId {
+        match self.cfg.victim {
+            // Newest = largest id (ids are assigned in admission order).
+            VictimPolicy::Newest => {
+                *self.decoding.keys().next_back().expect("need>0 => non-empty")
+            }
+            // Highest deadline slack net of replay cost. A sequence that
+            // progresses on schedule keeps constant slack (the clock and
+            // its remaining work shrink together); one that was delayed
+            // or preempted loses slack and is protected next time, so
+            // victims rotate and preemption delay is equalized instead of
+            // concentrated on the newest sequences. Deadline-free
+            // sequences score against a virtual `arrival + PATIENCE`
+            // deadline: they always evict before deadline-carrying ones,
+            // and the same slack feedback rotates within them. Ties fall
+            // to youngest (largest arrival, then largest id), which
+            // reduces to newest-first for identical closed-batch
+            // sequences.
+            VictimPolicy::Weighted => {
+                let service = self.cfg.service;
+                let mut best_key = (f64::NEG_INFINITY, f64::NEG_INFINITY, 0);
+                let mut best_id: Option<SeqId> = None;
+                for (&id, seq) in self.decoding.iter() {
+                    let deadline = seq
+                        .req
+                        .deadline
+                        .unwrap_or(seq.arrival + super::policy::NO_DEADLINE_PATIENCE);
+                    let score = deadline
+                        - now
+                        - service.predicted_remaining(seq)
+                        - service.replay_cost(seq);
+                    let key = (score, seq.arrival, id);
+                    if best_id.is_none() || key > best_key {
+                        best_key = key;
+                        best_id = Some(id);
+                    }
+                }
+                best_id.expect("need>0 => non-empty")
+            }
+        }
+    }
+
+    /// The SLO admission sweep: drop every queued sequence whose deadline
+    /// cannot cover `headroom ×` its predicted remaining service time,
+    /// releasing any KV blocks it held. Never-started requests count as
+    /// rejected; partially served ones (chunked prefill in flight or a
+    /// preemption replay) as expired.
+    fn shed_infeasible(
+        &mut self,
+        kv: &mut PagedLayout,
+        now: f64,
+        headroom: f64,
+        plan: &mut PassPlan,
+    ) {
+        let service = self.cfg.service;
+        let mut kept: VecDeque<Sequence> = VecDeque::with_capacity(self.queue.len());
+        while let Some(seq) = self.queue.pop_front() {
+            let infeasible = seq
+                .req
+                .deadline
+                .is_some_and(|d| now + headroom * service.predicted_remaining(&seq) > d);
+            if !infeasible {
+                kept.push_back(seq);
+                continue;
+            }
+            if kv.contains(seq.id()) {
+                kv.release(seq.id());
+            }
+            let reason =
+                if seq.started() { DropReason::Expired } else { DropReason::Rejected };
+            match reason {
+                DropReason::Rejected => self.rejected += 1,
+                DropReason::Expired => self.expired += 1,
+            }
+            plan.dropped.push((seq.id(), reason));
+        }
+        self.queue = kept;
+    }
+
     /// One admission sweep of the Prefill Scheduler (FIFO, chunked).
     fn admit(
         &mut self,
@@ -264,9 +412,15 @@ impl Scheduler {
                         seq.phase = SeqPhase::Decoding;
                         self.decoding.insert(seq.id(), seq);
                     } else {
-                        // partially prefilled: stays at the queue front
-                        requeue.push_front(seq);
-                        break; // budget exhausted for it this pass anyway
+                        // Partially prefilled: back to the queue front. The
+                        // loop pops it right back up, so the head sequence
+                        // keeps chunking until the pass budget or its
+                        // prompt is exhausted. (The seed `break`-ed here —
+                        // correct only when the chunk was capped by the
+                        // budget; a `max_chunk`-capped chunk stranded the
+                        // rest of the pass budget, under-filling `n_real`
+                        // whenever max_chunk < token_budget.)
+                        self.queue.push_front(seq);
                     }
                 }
                 None => {
@@ -475,6 +629,147 @@ mod tests {
         s.complete(&[(0, 0)], &mut layout); // EOS immediately
         assert!(s.is_done());
         assert_eq!(s.finished()[0].generated, vec![0]);
+    }
+
+    #[test]
+    fn head_sequence_chunks_fill_the_pass_budget() {
+        // Non-atomic mode with max_chunk < token_budget: the seed stopped
+        // after one chunk of the head sequence ("budget exhausted for it
+        // this pass anyway"), stranding budget whenever the chunk was
+        // capped by max_chunk instead. The head must keep chunking.
+        let mut s = sched(10, 4);
+        let mut layout = kv(4, 100);
+        s.submit(Request::new(0, vec![7; 10], 2));
+        let p1 = s.plan(&mut layout);
+        assert_eq!(p1.prefill_tokens(), 10, "whole prompt fits the budget");
+        let lens: Vec<usize> = p1.prefill.iter().map(|c| c.len).collect();
+        assert_eq!(lens, vec![4, 4, 2]);
+        assert_eq!(p1.prefill[0].start, 0);
+        assert_eq!(p1.prefill[1].start, 4);
+        assert_eq!(p1.prefill[2].start, 8);
+        assert!(p1.prefill[2].completes && !p1.prefill[0].completes);
+        s.complete(&[(0, 1)], &mut layout);
+        assert_eq!(s.active_decode(), 1);
+    }
+
+    #[test]
+    fn budget_left_after_head_flows_to_next_sequence() {
+        let mut s = sched(10, 4);
+        let mut layout = kv(4, 100);
+        s.submit(Request::new(0, vec![7; 6], 2));
+        s.submit(Request::new(1, vec![7; 6], 2));
+        let p1 = s.plan(&mut layout);
+        // Head chunks 4 + 2 (completes), then the next sequence gets the
+        // remaining 4 budget tokens.
+        assert_eq!(p1.prefill_tokens(), 10);
+        let per_seq: Vec<(SeqId, usize)> =
+            p1.prefill.iter().map(|c| (c.id, c.len)).collect();
+        assert_eq!(per_seq, vec![(0, 4), (0, 2), (1, 4)]);
+    }
+
+    #[test]
+    fn slo_admission_sheds_infeasible_requests() {
+        let cfg = SchedConfig::new(100, 100)
+            .with_admission(AdmissionPolicy::Slo { headroom: 1.0 })
+            .with_service(ServiceModel::from_costs(1.0, 10));
+        let mut s = Scheduler::new(cfg);
+        let mut layout = kv(4, 64);
+        // Predicted service: 5 * 0.1 + 2 * 1.0 = 2.5 s.
+        s.submit(Request::new(0, vec![1; 5], 2).with_deadline(2.0)); // hopeless
+        s.submit(Request::new(1, vec![1; 5], 2).with_deadline(10.0)); // fine
+        s.submit(Request::new(2, vec![1; 5], 2)); // no deadline: never shed
+        let plan = s.plan_at(&mut layout, 0.0);
+        assert_eq!(plan.dropped, vec![(0, DropReason::Rejected)]);
+        assert_eq!(s.total_rejected(), 1);
+        assert_eq!(s.total_expired(), 0);
+        assert_eq!(plan.prefill.len(), 2, "survivors admitted this pass");
+        run_all(&mut s, &mut layout, 1);
+        assert_eq!(s.finished().len(), 2);
+        assert_eq!(layout.used_blocks(), 0);
+    }
+
+    #[test]
+    fn slo_admission_expires_started_sequences_and_releases_blocks() {
+        let cfg = SchedConfig::new(4, 4)
+            .with_admission(AdmissionPolicy::Slo { headroom: 1.0 })
+            .with_service(ServiceModel::from_costs(1.0, 10));
+        let mut s = Scheduler::new(cfg);
+        let mut layout = kv(4, 64);
+        s.submit(Request::new(0, vec![1; 8], 1).with_deadline(100.0));
+        let p1 = s.plan_at(&mut layout, 0.0);
+        assert_eq!(p1.prefill_tokens(), 4, "partial prefill in flight");
+        assert!(layout.used_blocks() > 0);
+        s.complete(&[], &mut layout);
+        // The clock jumps past the last instant the deadline is coverable.
+        let p2 = s.plan_at(&mut layout, 1000.0);
+        assert_eq!(p2.dropped, vec![(0, DropReason::Expired)]);
+        assert!(p2.is_empty());
+        assert_eq!(s.total_expired(), 1);
+        assert!(s.is_done());
+        assert_eq!(layout.used_blocks(), 0, "shed partial prefill must release blocks");
+    }
+
+    #[test]
+    fn fifo_admission_never_sheds_even_with_deadlines() {
+        let mut s = sched(100, 100);
+        let mut layout = kv(4, 64);
+        s.submit(Request::new(0, vec![1; 5], 2).with_deadline(0.0));
+        let plan = s.plan_at(&mut layout, 1e9);
+        assert!(plan.dropped.is_empty());
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(s.total_rejected() + s.total_expired(), 0);
+    }
+
+    #[test]
+    fn weighted_victim_evicts_the_most_slack() {
+        let cfg = SchedConfig::new(100, 100)
+            .with_victim(VictimPolicy::Weighted)
+            .with_service(ServiceModel::from_costs(1.0, 100));
+        let mut s = Scheduler::new(cfg);
+        let mut layout = kv(4, 6); // 24 token slots: tight
+        s.submit(Request::new(0, vec![1; 8], 32).with_deadline(10_000.0)); // loose
+        s.submit(Request::new(1, vec![1; 8], 32).with_deadline(50.0)); // tight
+        let p = s.plan(&mut layout);
+        assert_eq!(p.prefill_tokens(), 16);
+        s.complete(&[(0, 5), (1, 5)], &mut layout);
+        for _ in 0..30 {
+            let plan = s.plan(&mut layout);
+            if !plan.preempted.is_empty() {
+                // Newest-first would evict id 1; weighted protects the
+                // tight deadline and evicts the loose sequence instead.
+                assert_eq!(plan.preempted, vec![0]);
+                return;
+            }
+            let toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 5)).collect();
+            s.complete(&toks, &mut layout);
+        }
+        panic!("tight cache must trigger preemption");
+    }
+
+    #[test]
+    fn weighted_victim_without_deadlines_matches_newest_first() {
+        // No deadlines and equal arrivals: the weighted tie-break (largest
+        // arrival, then largest id) reduces to newest-first, keeping the
+        // default behavior reachable from the weighted policy.
+        let cfg = SchedConfig::new(100, 100)
+            .with_victim(VictimPolicy::Weighted)
+            .with_service(ServiceModel::from_costs(1.0, 100));
+        let mut s = Scheduler::new(cfg);
+        let mut layout = kv(4, 6);
+        s.submit(Request::new(0, vec![1; 8], 32));
+        s.submit(Request::new(1, vec![1; 8], 32));
+        s.plan(&mut layout);
+        s.complete(&[(0, 5), (1, 5)], &mut layout);
+        for _ in 0..30 {
+            let plan = s.plan(&mut layout);
+            if !plan.preempted.is_empty() {
+                assert_eq!(plan.preempted, vec![1], "newest id is the victim");
+                return;
+            }
+            let toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 5)).collect();
+            s.complete(&toks, &mut layout);
+        }
+        panic!("tight cache must trigger preemption");
     }
 
     #[test]

@@ -20,7 +20,8 @@ use crate::config::{MachineSpec, ModelSpec};
 use crate::kvcache::{KvLayout, PagedLayout};
 use crate::metrics::{LatencyStats, PassRecord, RequestTracker, RunReport, Trace};
 use crate::model::Request;
-use crate::sched::{SchedConfig, Scheduler};
+use crate::sched::{AdmissionPolicy, SchedConfig, Scheduler, ServiceModel, VictimPolicy};
+use crate::workload::duplicate_id;
 
 /// Memory-controller contention coefficient: fraction of IO slowdown per
 /// unit of CPU-attention lane occupancy. Calibrated to §8.2's observation
@@ -44,6 +45,10 @@ pub struct SimConfig {
     /// Pipeline token budget per pass; `None` derives `n_real`
     /// analytically from the machine/model (§6.3).
     pub token_budget: Option<usize>,
+    /// Queue admission policy (default FIFO — PR-1 behavior).
+    pub admission: AdmissionPolicy,
+    /// Preemption victim policy (default newest-first — PR-1 behavior).
+    pub victim: VictimPolicy,
 }
 
 impl SimConfig {
@@ -56,6 +61,8 @@ impl SimConfig {
             block_size: 16,
             cpu_attn_eff: 0.8,
             token_budget: None,
+            admission: AdmissionPolicy::default(),
+            victim: VictimPolicy::default(),
         }
     }
 
@@ -136,7 +143,16 @@ impl SimMachine {
     pub fn new(cfg: SimConfig) -> Self {
         let layout = cfg.kv_layout();
         let budget = cfg.effective_token_budget();
-        let sched = Scheduler::new(SchedConfig::new(budget, budget));
+        // Service-time estimates for the SLO/weighted policies, from the
+        // same constants the virtual clock runs on: a pass sweeps the
+        // weights once (δ) and carries up to `budget` tokens.
+        let delta = cfg.machine.transfer_secs(cfg.model.model_bytes());
+        let sched = Scheduler::new(
+            SchedConfig::new(budget, budget)
+                .with_admission(cfg.admission)
+                .with_victim(cfg.victim)
+                .with_service(ServiceModel::from_costs(delta, budget)),
+        );
         SimMachine { cfg, sched, kv: PagedLayout::new(layout) }
     }
 
@@ -180,6 +196,12 @@ impl SimMachine {
             "serving requires a drained scheduler: sequences submitted \
              outside the arrival stream have no arrival record to track"
         );
+        if let Some(dup) = duplicate_id(&arrivals) {
+            panic!(
+                "duplicate request id {dup} in arrival stream — per-request \
+                 latency tracking requires unique ids"
+            );
+        }
         arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("non-NaN arrival times"));
         let n_req = arrivals.len();
         let mut pending: VecDeque<(f64, Request)> = arrivals.into();
@@ -198,7 +220,7 @@ impl SimMachine {
                 if let Some(tr) = tracker.as_deref_mut() {
                     tr.arrived(r.id, t);
                 }
-                self.sched.submit(r);
+                self.sched.submit_at(r, t);
             }
             if self.sched.is_done() {
                 match pending.front() {
@@ -211,7 +233,19 @@ impl SimMachine {
                 }
             }
 
-            let plan = self.sched.plan(&mut self.kv);
+            let plan = self.sched.plan_at(&mut self.kv, now);
+            if let Some(tr) = tracker.as_deref_mut() {
+                for &(id, reason) in &plan.dropped {
+                    tr.dropped(id, now, reason);
+                }
+            }
+            if plan.is_empty() {
+                // Everything queued was shed while planning — nothing to
+                // execute; no pass, no virtual time. The scheduler is now
+                // drained (an empty plan implies an empty queue), so the
+                // next iteration idles to the next arrival or exits.
+                continue;
+            }
             // Context tokens scanned by CPU attention: each decode token
             // attends over its sequence's full cache.
             let kv_scanned: u64 =
@@ -241,8 +275,15 @@ impl SimMachine {
             // Lane accounting mirrors the engine's exclusive decomposition:
             // `overlap` is the window where GPU GEMMs and CPU attention are
             // both busy; gpu/cpu report the exclusive remainders (total GPU
-            // busy = gpu_time + overlap_time).
+            // busy = gpu_time + overlap_time). The IO lane books only the
+            // *exposed* part of the contended sweep — the tail sticking
+            // out past the compute it overlaps — so the four lanes
+            // partition `dur = max(io, gpu, cpu)` exactly. (The seed
+            // booked the full contended sweep, so `lanes_total()`
+            // exceeded `duration` on every overlapped pass and the
+            // stacked Fig.-13 lane plots over-filled the bar.)
             let both_busy = lanes.gpu.min(lanes.cpu);
+            let compute = lanes.gpu.max(lanes.cpu);
             trace.push(PassRecord {
                 pass_id,
                 t_end: now,
@@ -252,7 +293,7 @@ impl SimMachine {
                 generated,
                 finished: finished.len(),
                 preempted: plan.preempted.len(),
-                io_time: lanes.io_contended,
+                io_time: (lanes.io_contended - compute).max(0.0),
                 gpu_time: lanes.gpu - both_busy,
                 cpu_time: lanes.cpu - both_busy,
                 overlap_time: both_busy,
@@ -453,6 +494,44 @@ mod tests {
         let (_, r_loose) = run_uniform(small_sim(210), 98, 32, 64);
         assert!(r_tight.preemptions > 0);
         assert_eq!(r_loose.preemptions, 0);
+    }
+
+    #[test]
+    fn lanes_partition_pass_duration_exactly() {
+        // Satellite regression: io/gpu/cpu/overlap are documented as
+        // mutually exclusive spans partitioning the pass. The seed booked
+        // the full contended IO sweep while duration took the lane max,
+        // so lanes_total() > duration on every overlapped pass.
+        let mut cfg = small_sim(70);
+        cfg.kv_bytes = 2 << 30; // tight: cover preemption passes too
+        let arrivals = poisson_arrivals(20.0, 64, 98, 128, 4);
+        let (trace, _, _) =
+            SimMachine::new(cfg).run_online(arrivals, f64::INFINITY);
+        assert!(trace.passes.len() > 50);
+        for p in &trace.passes {
+            assert!(
+                (p.lanes_total() - p.duration).abs() < 1e-9,
+                "pass {}: lanes_total {} vs duration {}",
+                p.pass_id,
+                p.lanes_total(),
+                p.duration
+            );
+            assert!(p.io_time >= 0.0 && p.gpu_time >= 0.0);
+            assert!(p.cpu_time >= 0.0 && p.overlap_time >= 0.0);
+            // GPU/CPU busy never exceed the pass wall clock.
+            assert!(p.gpu_busy() <= p.duration + 1e-12);
+            assert!(p.cpu_busy() <= p.duration + 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate request id")]
+    fn duplicate_request_ids_are_rejected() {
+        let arrivals = vec![
+            (0.0, Request::new(1, vec![1; 4], 2)),
+            (0.5, Request::new(1, vec![1; 4], 2)),
+        ];
+        SimMachine::new(small_sim(70)).run_online(arrivals, f64::INFINITY);
     }
 
     #[test]

@@ -12,6 +12,10 @@ use crate::kvcache::SeqId;
 use crate::model::Request;
 use crate::util::rng::Rng;
 
+// The workload families live in `config`; re-export them here so callers
+// generating Table-3 traffic (benches, examples) need only one import.
+pub use crate::config::{AIME, MTBENCH, RAG};
+
 /// Generator over one workload family.
 #[derive(Debug, Clone)]
 pub struct WorkloadGen {
@@ -171,6 +175,38 @@ impl WorkloadGen {
     }
 }
 
+/// First duplicated request id in an arrival stream, if any. Online
+/// serving requires unique ids: the per-request latency tracker keys on
+/// them, and a duplicate would silently overwrite the first request's
+/// timings. The engine surfaces this as an error and the simulator
+/// panics; both check through this one helper.
+pub fn duplicate_id(arrivals: &[(f64, Request)]) -> Option<SeqId> {
+    let mut ids: Vec<SeqId> = arrivals.iter().map(|(_, r)| r.id).collect();
+    ids.sort_unstable();
+    ids.windows(2).find(|w| w[0] == w[1]).map(|w| w[0])
+}
+
+/// Attach a relative end-to-end SLO to every request of an arrival
+/// stream: `deadline = arrival + slo_e2e` on the run clock. The
+/// SLO-aware admission policy sheds requests that can no longer meet
+/// their deadline; the FIFO default ignores it. An infinite (or
+/// non-finite) SLO leaves the stream deadline-free.
+pub fn with_deadlines(
+    arrivals: Vec<(f64, Request)>,
+    slo_e2e: f64,
+) -> Vec<(f64, Request)> {
+    if !slo_e2e.is_finite() {
+        return arrivals;
+    }
+    arrivals
+        .into_iter()
+        .map(|(t, r)| {
+            let deadline = t + slo_e2e;
+            (t, r.with_deadline(deadline))
+        })
+        .collect()
+}
+
 /// Draw per-request *actual* generation lengths under EOS termination:
 /// geometric with mean ~`mean_frac * max_gen`, capped at `max_gen`
 /// (models §8.1's EOS mode; the paper reports an extra 5.3x-vs-baseline
@@ -309,6 +345,30 @@ mod tests {
     fn trace_arrivals_reject_nan() {
         let g = WorkloadGen::new(&MTBENCH, 32, 2048);
         g.trace_arrivals(&[1.0, f64::NAN], 0, 5);
+    }
+
+    #[test]
+    fn duplicate_id_detection() {
+        let mk = |id: SeqId| Request::new(id, vec![1], 1);
+        assert_eq!(duplicate_id(&[]), None);
+        assert_eq!(duplicate_id(&[(0.0, mk(1)), (1.0, mk(2))]), None);
+        assert_eq!(
+            duplicate_id(&[(0.0, mk(3)), (1.0, mk(1)), (2.0, mk(3))]),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn with_deadlines_offsets_from_arrival() {
+        let arrivals =
+            vec![(0.0, Request::new(0, vec![1], 1)), (2.5, Request::new(1, vec![1], 1))];
+        let with = with_deadlines(arrivals.clone(), 10.0);
+        assert_eq!(with[0].1.deadline, Some(10.0));
+        assert_eq!(with[1].1.deadline, Some(12.5));
+        // Infinite SLO = no deadlines.
+        let open = with_deadlines(arrivals, f64::INFINITY);
+        assert_eq!(open[0].1.deadline, None);
+        assert_eq!(open[1].1.deadline, None);
     }
 
     #[test]
