@@ -61,6 +61,106 @@ fn main() -> anyhow::Result<()> {
     t.print();
     t.print_csv("perf_engine");
 
+    // --- 1b. Double-buffered pass pipeline: exposed (non-overlapped)
+    // host time per run, pipelining on vs off on the same workload.
+    // Measured identically for both modes as the step wall clock *not*
+    // covered by the hardware lanes (io + gpu + cpu + overlap): for the
+    // synchronous engine that is the inter-pass plan/pack/complete gap;
+    // for the pipelined engine it is the booked host lane (snapshot,
+    // replans, worker join tail, commit patching) plus bookkeeping slack.
+    let pipeline_run = |depth: usize| -> anyhow::Result<(f64, f64, usize, usize)> {
+        let mut cfg = EngineConfig::for_model("small");
+        cfg.kv_blocks = 512;
+        cfg.pipeline_depth = depth;
+        let mut engine = ServingEngine::load(cfg)?;
+        let n_tok = engine.n_tok();
+        let vocab = engine.pjrt.config.vocab;
+        let mut rng = Rng::new(1);
+        for i in 0..16 {
+            let p = n_tok / 2;
+            let prompt: Vec<i32> =
+                (0..p).map(|_| rng.range(1, vocab - 1) as i32).collect();
+            engine.submit(Request::new(i as u64, prompt, n_tok / 4))?;
+        }
+        let mut trace = engine.begin_run();
+        let mut step_wall = 0.0f64;
+        while !engine.sched.is_done() {
+            let t0 = std::time::Instant::now();
+            let step = engine.step()?;
+            step_wall += t0.elapsed().as_secs_f64();
+            trace.push(step.record);
+        }
+        // One definition for both modes: wall clock the hardware lanes
+        // don't cover. (Comparing sync's step-minus-body against pipe's
+        // booked host lane would measure two different things.)
+        let hw: f64 = trace
+            .passes
+            .iter()
+            .map(|p| p.io_time + p.gpu_time + p.cpu_time + p.overlap_time)
+            .sum();
+        let exposed = (step_wall - hw).max(0.0);
+        let stats = engine.pipeline_stats();
+        Ok((exposed, step_wall, stats.committed, stats.replanned))
+    };
+    let (exposed_sync, wall_sync, _, _) = pipeline_run(0)?;
+    let (exposed_pipe, wall_pipe, committed, replanned) = pipeline_run(1)?;
+    let mut t = Table::new(&["mode", "exposed_host_ms", "run_wall_ms", "committed", "replanned"]);
+    t.row(&[
+        "synchronous".into(),
+        format!("{:.3}", exposed_sync * 1e3),
+        format!("{:.1}", wall_sync * 1e3),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.row(&[
+        "pipelined".into(),
+        format!("{:.3}", exposed_pipe * 1e3),
+        format!("{:.1}", wall_pipe * 1e3),
+        committed.to_string(),
+        replanned.to_string(),
+    ]);
+    t.print();
+    t.print_csv("perf_pipeline");
+    // Wall-clock numbers are reported, not asserted — on a loaded box or
+    // a tiny layer loop the fixed speculation overhead (snapshot clone +
+    // worker spawn) can exceed the gap it hides. The deterministic
+    // virtual-clock case below is the asserted acceptance check.
+    if exposed_pipe >= exposed_sync {
+        println!(
+            "WARN: pipelined exposed host {:.3} ms did not undercut \
+             synchronous {:.3} ms on this run (wall-clock noise or \
+             speculation overhead > hidden gap at this scale)",
+            exposed_pipe * 1e3,
+            exposed_sync * 1e3
+        );
+    }
+
+    // Deterministic counterpart on the virtual clock (exact, no wall
+    // noise): same workload, host plan cost modeled, exposed host time
+    // strictly lower with the pipeline on.
+    {
+        use moe_lens::config::ModelSpec;
+        use moe_lens::simhw::{HostPlanCost, SimConfig, SimMachine};
+        let reqs: Vec<Request> =
+            (0..200).map(|i| Request::new(i, vec![1; 98], 32)).collect();
+        let sim_run = |depth: usize| {
+            let mut cfg = SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 70);
+            cfg.pipeline_depth = depth;
+            cfg.host_plan = HostPlanCost::new(0.05, 1e-5);
+            let (trace, report) = SimMachine::new(cfg).run(reqs.clone());
+            let exposed: f64 = trace.passes.iter().map(|p| p.host_time).sum();
+            (exposed, report.wall_secs)
+        };
+        let (sim_sync, sim_sync_wall) = sim_run(0);
+        let (sim_pipe, sim_pipe_wall) = sim_run(1);
+        println!(
+            "sim (virtual clock): exposed host {:.2}s -> {:.2}s, wall {:.1}s -> {:.1}s",
+            sim_sync, sim_pipe, sim_sync_wall, sim_pipe_wall
+        );
+        assert!(sim_pipe < sim_sync, "sim: pipelining must hide host time");
+        assert!(sim_pipe_wall < sim_sync_wall);
+    }
+
     // --- 2. CPU attention kernel (Mixtral-8x7B geometry).
     let shape = AttnShape { n_heads: 32, n_kv_heads: 8, head_dim: 128 };
     let (n_seq, ctx) = (16usize, 256usize);

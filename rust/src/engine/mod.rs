@@ -15,9 +15,15 @@
 //! Contiguous Data Mover, and stage boundaries are the only CPU↔GPU sync
 //! points. Python is never on this path: all five compute pieces are
 //! AOT-compiled PJRT executables.
+//!
+//! On top of the per-layer pipeline sits the *pass* pipeline
+//! (`EngineConfig::pipeline_depth`): pass N+1's planning, packing, and
+//! embedding gather run on a host worker under pass N's layer loop, and
+//! the LM head overlaps the next pass's layer-0 weight prefetch — see
+//! the `vslpipe` module docs.
 
 mod batch;
 mod vslpipe;
 
 pub use batch::{pack_plan, Bucket, Row, RowKind};
-pub use vslpipe::{EngineConfig, ServingEngine, StepResult};
+pub use vslpipe::{EngineConfig, PipelineStats, ServingEngine, StepResult};

@@ -8,8 +8,43 @@
 //! drains a closed batch by looping `step`, and
 //! [`ServingEngine::run_online`] feeds the scheduler from a timed arrival
 //! stream, tracking per-request TTFT / TPOT / end-to-end latency.
+//!
+//! # Double-buffered pass pipeline
+//!
+//! With [`EngineConfig::pipeline_depth`] ≥ 1 (the default), each step is
+//! a two-stage software pipeline instead of a serial plan → pack → embed
+//! → layers → head chain:
+//!
+//! * While pass N's layer loop runs (DataMover streaming + GPU GEMMs +
+//!   CPU attention), a host worker speculatively plans pass N+1 on a
+//!   [`Scheduler::speculate`] snapshot, packs its buckets, and gathers
+//!   its embeddings from the host-resident table. Pass-N yields that the
+//!   head has not produced yet enter the snapshot as placeholder tokens;
+//!   their bucket rows and embedding rows are patched at commit time.
+//! * The [`DataMover`] stage protocol runs across pass boundaries, so the
+//!   §6.4 `+2` prefetch issued at pass N's last layers streams pass N+1's
+//!   layer 0/1 *while the LM head computes*.
+//!
+//! The speculation commits only if pass N finished exactly the sequences
+//! the budget predicted (an EOS finish invalidates it) — otherwise the
+//! engine falls back to a synchronous replan. Time-dependent planning
+//! always takes the replan path: SLO admission reads the clock, and
+//! weighted victim selection combined with the measured-service EWMA
+//! reads a model that changes every pass. Requests arriving
+//! while pass N runs join planning one pass later than in the synchronous
+//! engine: that one-pass admission latency is the price of planning
+//! ahead, and it is what removes the exposed inter-pass host gap.
+//!
+//! Lane accounting: exposed host work (replans, the tail of an
+//! overrunning speculative plan, commit/patch bookkeeping) lands in
+//! `PassRecord::host_time` — the fifth exclusive lane — while hidden
+//! speculative work is reported as `host_overlap_time` on the pass it ran
+//! under. With `pipeline_depth = 0` the engine takes the exact pre-pipeline
+//! code path: planning happens outside the pass body, both host lanes
+//! stay zero, and traces are pass-for-pass identical to the synchronous
+//! engine.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -18,12 +53,13 @@ use anyhow::{Context, Result};
 
 use super::batch::{pack_plan, Bucket, RowKind};
 use crate::cpuattn::{AttnShape, DecodeQuery, ThreadPool};
-use crate::kvcache::{KvLayout, PagedKvCache, SeqId};
+use crate::kvcache::{KvLayout, PagedKvCache, PagedLayout, SeqId};
 use crate::metrics::{LatencyStats, PassRecord, RequestTracker, RunReport, Stopwatch, Trace};
 use crate::model::Request;
 use crate::runtime::{to_f32, to_i32, Arg, Manifest, PjrtEngine};
 use crate::sched::{
-    AdmissionPolicy, DropReason, SchedConfig, Scheduler, ServiceModel, VictimPolicy,
+    AdmissionPolicy, DropReason, PassPlan, SchedConfig, Scheduler, ServiceEstimator,
+    ServiceModel, VictimPolicy,
 };
 use crate::transfer::{DataMover, LinkTiming, PcieLink, WeightBuffer, WeightFile};
 use crate::workload::duplicate_id;
@@ -54,8 +90,22 @@ pub struct EngineConfig {
     pub victim: VictimPolicy,
     /// Service-time estimates for the SLO/weighted policies. The default
     /// (instant) makes SLO admission shed only requests whose deadline
-    /// has already passed — conservative until the engine is profiled.
+    /// has already passed; with [`measured_service`](Self::measured_service)
+    /// on, an EWMA of observed pass times replaces it as soon as the
+    /// first pass completes.
     pub service: ServiceModel,
+    /// Two-stage pass pipeline depth: 0 = legacy synchronous stepping,
+    /// ≥ 1 = overlap pass N+1's plan/pack/embed with pass N's layer loop
+    /// and the LM head with next-pass weight prefetch (see the module
+    /// docs). Default on.
+    pub pipeline_depth: usize,
+    /// Feed an online EWMA of *measured* per-pass prefill/decode times
+    /// into the scheduler's [`ServiceModel`] (ROADMAP "measured engine
+    /// service model"), so SLO admission predicts real service times
+    /// instead of the instant default. Only the SLO admission and
+    /// weighted-victim policies read the model; the FIFO/newest defaults
+    /// are unaffected.
+    pub measured_service: bool,
 }
 
 impl EngineConfig {
@@ -77,20 +127,27 @@ impl EngineConfig {
             admission: AdmissionPolicy::default(),
             victim: VictimPolicy::default(),
             service: ServiceModel::default(),
+            pipeline_depth: 1,
+            measured_service: true,
         }
     }
 }
 
 /// Per-pass lane timings (wall clock, mutually exclusive): `io_wait +
-/// gpu + cpu + overlap` decomposes the pass body. `overlap` is the window
-/// where GPU flash attention and CPU decode attention run concurrently
-/// (§6.4's phase overlap); total GPU busy time is `gpu + overlap`.
+/// gpu + cpu + overlap + host` decomposes the pass body. `overlap` is the
+/// window where GPU flash attention and CPU decode attention run
+/// concurrently (§6.4's phase overlap); total GPU busy time is
+/// `gpu + overlap`. `host` is *exposed* plan/pack/embed/commit time;
+/// `host_overlap` is speculative planning hidden under the layer loop
+/// (a shadow lane, excluded from the partition).
 #[derive(Debug, Clone, Copy, Default)]
 struct PassTimes {
     io_wait: f64,
     gpu: f64,
     cpu: f64,
     overlap: f64,
+    host: f64,
+    host_overlap: f64,
 }
 
 /// The outcome of one engine pass.
@@ -108,6 +165,140 @@ pub struct StepResult {
     pub dropped: Vec<(SeqId, DropReason)>,
 }
 
+/// Pipeline telemetry: how often the speculative planner ran, committed,
+/// and fell back to a synchronous replan.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineStats {
+    /// Speculative plan jobs launched.
+    pub speculated: usize,
+    /// Jobs whose prediction held and whose pass was reused.
+    pub committed: usize,
+    /// Jobs invalidated (EOS finish diverged from the budget prediction);
+    /// the next pass replanned synchronously.
+    pub replanned: usize,
+}
+
+/// A fully prepared next pass, produced by a committed speculation: the
+/// plan is already applied to the scheduler/KV layout, buckets are packed
+/// and token-patched, and embeddings are gathered. [`ServingEngine::step`]
+/// executes it directly, with no exposed host work.
+struct PipelinedStep {
+    plan: PassPlan,
+    buckets: Vec<Bucket>,
+    xs: Vec<Vec<f32>>,
+}
+
+/// Everything the speculative planner worker needs, owned (the worker is
+/// a plain `std::thread` joined within the same step).
+struct SpecJob {
+    sched: Scheduler,
+    layout: PagedLayout,
+    /// Sequences the in-flight pass will yield a token for (decode rows +
+    /// completing prefill chunks) — the predicted `complete` input.
+    yields: Vec<SeqId>,
+    now: f64,
+    n_tok: usize,
+    d_model: usize,
+    embedding: Arc<Vec<f32>>,
+}
+
+/// The worker's result: the speculative successor state plus the packed,
+/// embedded next pass and the patch sites that still need pass-N's real
+/// tokens.
+struct SpecNext {
+    /// Sequences predicted to finish (budget exhaustion), sorted.
+    predicted_finished: Vec<SeqId>,
+    /// Placeholder tokens applied to surviving yielders:
+    /// `(id, generated index, logical token position)`.
+    placeholders: Vec<(SeqId, usize, usize)>,
+    plan: PassPlan,
+    sched: Scheduler,
+    layout: PagedLayout,
+    buckets: Vec<Bucket>,
+    xs: Vec<Vec<f32>>,
+    /// `(bucket, row)` sites fed by a pass-N token (placeholder-valued
+    /// until commit patches them).
+    patches: Vec<(usize, usize)>,
+    /// Worker busy time (seconds) — the host work the pipeline hid.
+    host_secs: f64,
+}
+
+impl SpecJob {
+    fn run(mut self) -> SpecNext {
+        let clock = Stopwatch::start();
+        let (predicted_finished, placeholders) =
+            self.sched.complete_speculative(&self.yields, &mut self.layout);
+        let plan = self.sched.plan_at(&mut self.layout, self.now);
+        let (buckets, xs, patches) = if plan.is_empty() {
+            (Vec::new(), Vec::new(), Vec::new())
+        } else {
+            let buckets = pack_plan(&plan, &self.sched, self.n_tok);
+            // Rows fed by the token pass N is still computing: every
+            // decode row of a surviving yielder (its fed token is the
+            // placeholder just pushed), and any replayed prefill row
+            // landing exactly on the placeholder's logical position.
+            let site: BTreeMap<SeqId, usize> =
+                placeholders.iter().map(|&(id, _, pos)| (id, pos)).collect();
+            let mut patches = Vec::new();
+            for (bi, b) in buckets.iter().enumerate() {
+                for (ri, row) in b.rows.iter().enumerate() {
+                    let hit = match row.kind {
+                        RowKind::Decode => site.contains_key(&row.seq),
+                        RowKind::Prefill => site.get(&row.seq) == Some(&row.pos),
+                    };
+                    if hit {
+                        patches.push((bi, ri));
+                    }
+                }
+            }
+            let xs = gather_embeddings(&self.embedding[..], self.d_model, &buckets);
+            (buckets, xs, patches)
+        };
+        SpecNext {
+            predicted_finished,
+            placeholders,
+            plan,
+            sched: self.sched,
+            layout: self.layout,
+            buckets,
+            xs,
+            patches,
+            host_secs: clock.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Host-side embedding lookup: an exact row gather from the resident
+/// table, matching the PJRT `embed` executable (a pure `take`) bit for
+/// bit — which is what keeps pipelined and synchronous runs
+/// token-identical. Padding rows (id 0) gather row 0 exactly as the
+/// compiled gather does.
+fn gather_embeddings(embedding: &[f32], d_model: usize, buckets: &[Bucket]) -> Vec<Vec<f32>> {
+    buckets
+        .iter()
+        .map(|b| {
+            let mut x = vec![0f32; b.n_tok * d_model];
+            for (i, &id) in b.ids.iter().enumerate() {
+                let row = id as usize * d_model;
+                x[i * d_model..(i + 1) * d_model]
+                    .copy_from_slice(&embedding[row..row + d_model]);
+            }
+            x
+        })
+        .collect()
+}
+
+/// The expected yield set of a plan: one token per decode row and per
+/// completing prefill chunk — exactly what `Scheduler::complete` will be
+/// fed after the pass runs.
+fn predicted_yields(plan: &PassPlan) -> Vec<SeqId> {
+    plan.decode
+        .iter()
+        .map(|&(id, _)| id)
+        .chain(plan.prefill.iter().filter(|c| c.completes).map(|c| c.id))
+        .collect()
+}
+
 /// The end-to-end serving engine.
 pub struct ServingEngine {
     pub pjrt: PjrtEngine,
@@ -121,7 +312,8 @@ pub struct ServingEngine {
     shape: AttnShape,
     /// Host-resident non-layer weights (embedding table, final norm, LM
     /// head — the paper keeps only layer weights on the streaming path).
-    embedding: Vec<f32>,
+    /// The embedding is shared with the speculative planner worker.
+    embedding: Arc<Vec<f32>>,
     final_norm: Vec<f32>,
     lm_head: Vec<f32>,
     /// Run-relative clock stamping `PassRecord::t_end` (reset by
@@ -129,6 +321,19 @@ pub struct ServingEngine {
     run_clock: Stopwatch,
     /// Pass counter within the current run.
     next_pass: usize,
+    /// Pipeline depth (0 = legacy synchronous stepping).
+    pipeline_depth: usize,
+    /// Next weight *stage* to consume (pipelined mover protocol: stage
+    /// ids run across pass boundaries, stage s sources layer
+    /// `s % n_layers`).
+    stage_cursor: usize,
+    /// The committed speculative next pass, if any.
+    prepared: Option<PipelinedStep>,
+    /// Pipeline commit/replan telemetry.
+    stats: PipelineStats,
+    /// Online EWMA of observed pass times (measured service model).
+    measured_service: bool,
+    estimator: ServiceEstimator,
 }
 
 impl ServingEngine {
@@ -175,7 +380,7 @@ impl ServingEngine {
                 .with_service(cfg.service),
         );
 
-        let embedding = weights.tensor_data("embedding")?.to_vec();
+        let embedding = Arc::new(weights.tensor_data("embedding")?.to_vec());
         let final_norm = weights.tensor_data("final_norm")?.to_vec();
         let lm_head = weights.tensor_data("lm_head")?.to_vec();
 
@@ -194,6 +399,12 @@ impl ServingEngine {
             lm_head,
             run_clock: Stopwatch::start(),
             next_pass: 0,
+            pipeline_depth: cfg.pipeline_depth,
+            stage_cursor: 0,
+            prepared: None,
+            stats: PipelineStats::default(),
+            measured_service: cfg.measured_service,
+            estimator: ServiceEstimator::default(),
         })
     }
 
@@ -203,6 +414,19 @@ impl ServingEngine {
 
     pub fn link(&self) -> &PcieLink {
         &self.link
+    }
+
+    /// Speculation/commit/replan counters (zeros when `pipeline_depth` is
+    /// 0 or the admission policy forces replans).
+    pub fn pipeline_stats(&self) -> PipelineStats {
+        self.stats
+    }
+
+    /// The current measured service model, once at least one timed pass
+    /// has been observed (`None` before that, or with `measured_service`
+    /// off).
+    pub fn measured_service_model(&self) -> Option<ServiceModel> {
+        self.measured_service.then(|| self.estimator.model()).flatten()
     }
 
     /// Check a request against the compiled shapes.
@@ -221,12 +445,26 @@ impl ServingEngine {
             "request {} exceeds max_ctx",
             r.id
         );
+        // The pipelined path gathers embeddings on the host by direct row
+        // index, so out-of-range ids must be rejected up front (the
+        // compiled gather silently clamped them, masking bad inputs).
+        // Deliberately enforced in *both* modes — accepting garbage ids
+        // only at pipeline_depth 0 would make the accepted-input surface
+        // depend on a performance flag.
+        let vocab = self.pjrt.config.vocab as i32;
+        anyhow::ensure!(
+            r.prompt.iter().all(|&t| (0..vocab).contains(&t)),
+            "request {}: prompt tokens must lie in [0, vocab={vocab})",
+            r.id
+        );
         Ok(())
     }
 
     /// Validate and enqueue one request — online admission. The request
     /// joins the Prefill Scheduler's queue and is picked up by the next
-    /// [`step`](Self::step).
+    /// [`step`](Self::step). With pipelining on, a request arriving while
+    /// a speculative next pass is already committed joins planning one
+    /// pass later (see the module docs).
     pub fn submit(&mut self, r: Request) -> Result<()> {
         self.validate(&r)?;
         self.sched.submit(r);
@@ -234,17 +472,21 @@ impl ServingEngine {
     }
 
     /// Start a new run: reset the pass counter and the run-relative clock,
-    /// and hand back an empty trace sized to the KV geometry.
+    /// and hand back an empty trace sized to the KV geometry. A committed
+    /// speculative pass (pipelined mode) carries over — its plan is
+    /// already applied to the scheduler, so discarding it would orphan
+    /// reserved KV blocks.
     pub fn begin_run(&mut self) -> Trace {
         self.next_pass = 0;
         self.run_clock = Stopwatch::start();
         Trace::new(self.cache.layout().layout().n_blocks)
     }
 
-    /// Execute exactly one pass: plan → pack → run_pass → complete.
-    /// Generated tokens land in the scheduler (`self.sched.finished()` for
-    /// completed sequences); the returned [`StepResult`] carries the pass
-    /// telemetry and the yielded `(seq, token)` pairs.
+    /// Execute exactly one pass: plan → pack → run_pass → complete (or
+    /// the pipelined equivalent — see the module docs). Generated tokens
+    /// land in the scheduler (`self.sched.finished()` for completed
+    /// sequences); the returned [`StepResult`] carries the pass telemetry
+    /// and the yielded `(seq, token)` pairs.
     ///
     /// `PassRecord::t_end` and `pass_id` are relative to the last
     /// [`begin_run`](Self::begin_run) — `run`/`run_online` call it for
@@ -252,21 +494,54 @@ impl ServingEngine {
     /// otherwise timestamps count from engine load (or from the previous
     /// run's clock) and pass ids continue the previous run's numbering.
     pub fn step(&mut self) -> Result<StepResult> {
+        if self.pipeline_depth == 0 {
+            self.step_sync()
+        } else {
+            self.step_pipelined()
+        }
+    }
+
+    /// A zero-duration bookkeeping record for a pass whose planning only
+    /// shed requests (SLO admission): there is no pass body to execute,
+    /// and the record is stamped at the *planning* instant `now` so it
+    /// sits between its neighbors and never advances the next pass's
+    /// trace timestamps (`Trace::series` stays monotone — the pre-pipeline
+    /// code took a second, later clock reading here).
+    fn shed_only_record(&mut self, now: f64) -> PassRecord {
+        let record = PassRecord {
+            pass_id: self.next_pass,
+            t_end: now,
+            kv_blocks_used: self.cache.layout().used_blocks(),
+            active_decode: self.sched.active_decode(),
+            ..Default::default()
+        };
+        self.next_pass += 1;
+        record
+    }
+
+    /// Feed one completed pass into the measured service model and push
+    /// the refreshed estimate into the scheduler (SLO admission and the
+    /// weighted victim policy read it; the FIFO/newest defaults ignore
+    /// it).
+    fn observe_service(&mut self, record: &PassRecord) {
+        if !self.measured_service {
+            return;
+        }
+        self.estimator.observe(record.prefill_tokens, record.decode_tokens, record.duration);
+        if let Some(model) = self.estimator.model() {
+            self.sched.cfg.service = model;
+        }
+    }
+
+    /// The legacy synchronous step (pipeline_depth = 0): the exact
+    /// pre-pipeline pass structure, kept as its own code path so
+    /// disabling the pipeline reproduces it byte for byte.
+    fn step_sync(&mut self) -> Result<StepResult> {
         let now = self.run_clock.elapsed().as_secs_f64();
         let plan = self.sched.plan_at(self.cache.layout_mut(), now);
         let dropped = plan.dropped.clone();
         if plan.is_empty() {
-            // Planning only shed requests (SLO admission) — there is no
-            // pass body to execute. Record a zero-duration pass so the
-            // drop accounting still lands on the trace.
-            let record = PassRecord {
-                pass_id: self.next_pass,
-                t_end: self.run_clock.elapsed().as_secs_f64(),
-                kv_blocks_used: self.cache.layout().used_blocks(),
-                active_decode: self.sched.active_decode(),
-                ..Default::default()
-            };
-            self.next_pass += 1;
+            let record = self.shed_only_record(now);
             return Ok(StepResult {
                 record,
                 yielded: Vec::new(),
@@ -294,11 +569,206 @@ impl ServingEngine {
             gpu_time: times.gpu,
             cpu_time: times.cpu,
             overlap_time: times.overlap,
+            host_time: 0.0,
+            host_overlap_time: 0.0,
             kv_blocks_used: self.cache.layout().used_blocks(),
             active_decode: self.sched.active_decode(),
         };
+        self.observe_service(&record);
         self.next_pass += 1;
         Ok(StepResult { record, yielded: tokens, finished, dropped })
+    }
+
+    /// One pipelined step — the per-phase state machine:
+    ///
+    /// 1. **Acquire** this pass: reuse the committed [`PipelinedStep`] or
+    ///    replan/pack/embed synchronously (exposed host lane).
+    /// 2. **Speculate**: launch the pass-N+1 planner worker — only under
+    ///    time-independent planning (FIFO admission; and not weighted
+    ///    victims combined with the measured-service EWMA, whose
+    ///    per-pass updates would shift the snapshot's victim scores).
+    /// 3. **Execute** the layer loop with cross-pass weight prefetch,
+    ///    then the LM head (next-pass layer 0 streams under it).
+    /// 4. **Complete** on the authoritative scheduler.
+    /// 5. **Commit** the speculation if the finished-set prediction held
+    ///    (patching placeholder tokens/embeddings), else count a replan.
+    /// 6. **Record** the pass with the five-lane decomposition.
+    fn step_pipelined(&mut self) -> Result<StepResult> {
+        let step_clock = Stopwatch::start();
+        let now = self.run_clock.elapsed().as_secs_f64();
+        let mut times = PassTimes::default();
+
+        // Phase 1 — acquire.
+        let host_clock = Stopwatch::start();
+        let (plan, buckets, mut xs) = match self.prepared.take() {
+            Some(p) => (p.plan, p.buckets, p.xs),
+            None => {
+                let plan = self.sched.plan_at(self.cache.layout_mut(), now);
+                let dropped = plan.dropped.clone();
+                if plan.is_empty() {
+                    let record = self.shed_only_record(now);
+                    return Ok(StepResult {
+                        record,
+                        yielded: Vec::new(),
+                        finished: Vec::new(),
+                        dropped,
+                    });
+                }
+                let buckets = pack_plan(&plan, &self.sched, self.n_tok());
+                let xs = gather_embeddings(
+                    &self.embedding[..],
+                    self.pjrt.config.d_model,
+                    &buckets,
+                );
+                (plan, buckets, xs)
+            }
+        };
+        times.host += host_clock.elapsed().as_secs_f64();
+        let dropped = plan.dropped.clone();
+
+        // Phase 2 — speculate. Snapshotting the planner-visible state
+        // (scheduler + layout clones) and spawning the worker runs
+        // *before* the layer loop starts, so it is exposed host work and
+        // books into the host lane like the acquire phase. A pass the
+        // generation budget predicts will drain the scheduler skips
+        // speculation outright: the snapshot could only produce an empty
+        // plan, paying a clone + spawn for a pass that never exists (and
+        // inflating the `committed` counter). An EOS can only *add*
+        // finishes, so a predicted drain is always a real drain.
+        let yields = predicted_yields(&plan);
+        let drains = self.sched.queued() == 0
+            && yields.iter().all(|&id| {
+                self.sched
+                    .sequence(id)
+                    .is_some_and(|s| s.generated.len() + 1 >= s.req.max_gen)
+            });
+        // Speculation requires time-*independent* planning, so a committed
+        // plan is exactly what a synchronous replan would produce: FIFO
+        // admission (SLO shedding depends on the clock), and a service
+        // model that cannot change between snapshot and commit — the
+        // measured-service EWMA updates every pass, which would shift
+        // weighted-victim scores, so that combination always replans.
+        // (Newest victim selection ignores the service model entirely.)
+        let stable_policies = matches!(self.sched.cfg.admission, AdmissionPolicy::Fifo)
+            && (matches!(self.sched.cfg.victim, VictimPolicy::Newest)
+                || !self.measured_service);
+        let speculate = !drains && stable_policies;
+        let spec_handle = if speculate {
+            let spec_clock = Stopwatch::start();
+            self.stats.speculated += 1;
+            let job = SpecJob {
+                sched: self.sched.speculate(),
+                layout: self.cache.layout().clone(),
+                yields,
+                now,
+                n_tok: self.n_tok(),
+                d_model: self.pjrt.config.d_model,
+                embedding: Arc::clone(&self.embedding),
+            };
+            let handle = std::thread::spawn(move || job.run());
+            times.host += spec_clock.elapsed().as_secs_f64();
+            Some(handle)
+        } else {
+            None
+        };
+
+        // Phase 3 — execute.
+        let tokens = self.run_pass_pipelined(&buckets, &mut xs, &mut times)?;
+        let generated = tokens.len();
+
+        // Phase 4 — complete (capture KV/decode telemetry before the
+        // commit reserves next-pass blocks).
+        let finished = self.sched.complete(&tokens, self.cache.layout_mut());
+        let kv_blocks_used = self.cache.layout().used_blocks();
+        let active_decode = self.sched.active_decode();
+
+        // Phase 5 — commit or replan.
+        if let Some(handle) = spec_handle {
+            let join_clock = Stopwatch::start();
+            let spec = handle.join().expect("speculative planner thread");
+            // The join wait is the worker's exposed tail; the rest of its
+            // busy time hid under the layer loop.
+            let join_wait = join_clock.elapsed().as_secs_f64().min(spec.host_secs);
+            times.host += join_wait;
+            times.host_overlap += spec.host_secs - join_wait;
+            let commit_clock = Stopwatch::start();
+            if self.commit_speculation(spec, &tokens, &finished) {
+                self.stats.committed += 1;
+            } else {
+                self.stats.replanned += 1;
+            }
+            times.host += commit_clock.elapsed().as_secs_f64();
+        }
+
+        // Phase 6 — record. The whole step body is the pass duration, so
+        // the five exclusive lanes partition it (up to bookkeeping slack).
+        let record = PassRecord {
+            pass_id: self.next_pass,
+            t_end: self.run_clock.elapsed().as_secs_f64(),
+            duration: step_clock.elapsed().as_secs_f64(),
+            prefill_tokens: plan.prefill_tokens(),
+            decode_tokens: plan.decode_tokens(),
+            generated,
+            finished: finished.len(),
+            preempted: plan.preempted.len(),
+            io_time: times.io_wait,
+            gpu_time: times.gpu,
+            cpu_time: times.cpu,
+            overlap_time: times.overlap,
+            host_time: times.host,
+            host_overlap_time: times.host_overlap,
+            kv_blocks_used,
+            active_decode,
+        };
+        self.observe_service(&record);
+        self.next_pass += 1;
+        Ok(StepResult { record, yielded: tokens, finished, dropped })
+    }
+
+    /// Validate the speculative prediction against what pass N actually
+    /// did; on success patch the placeholder tokens (scheduler state,
+    /// bucket rows, embedding rows) and install the successor state.
+    /// Returns `false` when the speculation must be discarded (EOS finish
+    /// diverged from the budget-only prediction).
+    fn commit_speculation(
+        &mut self,
+        spec: SpecNext,
+        tokens: &[(SeqId, i32)],
+        finished: &[SeqId],
+    ) -> bool {
+        let mut actual: Vec<SeqId> = finished.to_vec();
+        actual.sort_unstable();
+        if actual != spec.predicted_finished {
+            return false;
+        }
+        let SpecNext { placeholders, plan, mut sched, layout, mut buckets, mut xs, patches, .. } =
+            spec;
+        if plan.is_empty() {
+            // FIFO never sheds, so an empty speculative plan means the
+            // clone drained — and the prediction matching means the real
+            // scheduler just drained identically. Nothing to prepare.
+            debug_assert!(self.sched.is_done(), "empty FIFO plan implies drained scheduler");
+            return true;
+        }
+        let token_of: BTreeMap<SeqId, i32> = tokens.iter().copied().collect();
+        let d = self.pjrt.config.d_model;
+        for &(id, gen_idx, _) in &placeholders {
+            let tok = *token_of.get(&id).expect("placeholder sequence must have yielded");
+            sched.patch_generated(id, gen_idx, tok);
+        }
+        for &(bi, ri) in &patches {
+            let id = buckets[bi].rows[ri].seq;
+            let tok = *token_of.get(&id).expect("patched row's sequence must have yielded");
+            buckets[bi].rows[ri].token = tok;
+            buckets[bi].ids[ri] = tok;
+            let row = tok as usize * d;
+            xs[bi][ri * d..(ri + 1) * d]
+                .copy_from_slice(&self.embedding[row..row + d]);
+        }
+        self.sched.commit(sched);
+        self.cache.replace_layout(layout);
+        self.prepared = Some(PipelinedStep { plan, buckets, xs });
+        true
     }
 
     /// Serve a batch of requests to completion. Returns the trace and the
@@ -395,11 +865,11 @@ impl ServingEngine {
         Ok((trace, report, stats))
     }
 
-    /// One VSLPipe pass over the packed buckets.
+    /// One VSLPipe pass over the packed buckets — the synchronous path:
+    /// per-pass mover stream (stages ≡ layers), embed via the PJRT
+    /// gather, then the shared layer loop and head.
     fn run_pass(&mut self, buckets: &[Bucket]) -> Result<(Vec<(SeqId, i32)>, PassTimes)> {
-        let rc = &self.pjrt.config;
-        let (n_tok, q_dim, kv_dim) = (rc.n_tok, rc.q_dim(), rc.kv_dim());
-        let n_layers = rc.n_layers;
+        let n_layers = self.pjrt.config.n_layers;
         let mut times = PassTimes::default();
 
         // Prologue: prime the double buffer (§6.4 prologue).
@@ -409,23 +879,66 @@ impl ServingEngine {
             self.mover.request(1);
         }
 
-        // Embed every bucket.
+        // Embed every bucket (GPU lane).
         let mut clock = Stopwatch::start();
         let mut xs: Vec<Vec<f32>> = Vec::with_capacity(buckets.len());
         for b in buckets {
             let outs = self
                 .pjrt
                 .embed
-                .run(&[Arg::I32(&b.ids), Arg::F32(&self.embedding)])
+                .run(&[Arg::I32(&b.ids), Arg::F32(&self.embedding[..])])
                 .context("embed")?;
             xs.push(to_f32(&outs[0])?);
         }
         times.gpu += clock.lap().as_secs_f64();
 
+        self.exec_layers(buckets, &mut xs, &mut times, 0, false)?;
+        let tokens = self.run_head(buckets, &xs, &mut times)?;
+        Ok((tokens, times))
+    }
+
+    /// The pipelined pass body: embeddings arrive pre-gathered, the mover
+    /// stream continues across pass boundaries (priming only the very
+    /// first pass), and the always-on `+2` prefetch issued at the last
+    /// layers streams the next pass's layer 0/1 under the LM head.
+    fn run_pass_pipelined(
+        &mut self,
+        buckets: &[Bucket],
+        xs: &mut [Vec<f32>],
+        times: &mut PassTimes,
+    ) -> Result<Vec<(SeqId, i32)>> {
+        if self.stage_cursor == 0 {
+            self.mover.request(0);
+            self.mover.request(1);
+        }
+        let base = self.stage_cursor;
+        self.exec_layers(buckets, xs, times, base, true)?;
+        self.stage_cursor = base + self.pjrt.config.n_layers;
+        self.run_head(buckets, xs, times)
+    }
+
+    /// The per-layer loop shared by both pass flavors. `stage_base` is
+    /// the mover stage of layer 0 this pass; with `stream_ahead` the
+    /// `+2` prefetch is unconditional (it runs into the next pass),
+    /// otherwise it stops at this pass's last layer (legacy protocol).
+    fn exec_layers(
+        &mut self,
+        buckets: &[Bucket],
+        xs: &mut [Vec<f32>],
+        times: &mut PassTimes,
+        stage_base: usize,
+        stream_ahead: bool,
+    ) -> Result<()> {
+        let rc = &self.pjrt.config;
+        let (n_tok, q_dim, kv_dim) = (rc.n_tok, rc.q_dim(), rc.kv_dim());
+        let n_layers = rc.n_layers;
+        let mut clock = Stopwatch::start();
+
         for layer in 0..n_layers {
+            let stage = stage_base + layer;
             // Stage-boundary sync: weights for this layer must be staged.
             clock.lap();
-            self.mover.wait_layer(layer);
+            self.mover.wait_layer(stage);
             times.io_wait += clock.lap().as_secs_f64();
 
             // Stage the layer's weight literals ONCE (not per bucket) and
@@ -433,7 +946,7 @@ impl ServingEngine {
             // expert tensors dominated H2D staging when copied per bucket.
             let ta = &self.pjrt.task_a;
             let tb = &self.pjrt.task_b;
-            let (a_w, b_w) = self.buffer.read(layer, |w| -> Result<_> {
+            let (a_w, b_w) = self.buffer.read(stage, |w| -> Result<_> {
                 let t = |name: &str| self.weights.tensor_in_layer(layer, name, w);
                 let a_w = [
                     ta.literal(2, &Arg::F32(t("ln1")?))?,
@@ -577,19 +1090,32 @@ impl ServingEngine {
             }
             times.gpu += clock.lap().as_secs_f64();
 
-            // Stage epilogue: release the slot, prefetch layer + 2 (§6.4).
-            self.mover.done_with(layer);
-            if layer + 2 < n_layers {
+            // Stage epilogue: release the slot, prefetch stage + 2 (§6.4).
+            // `stream_ahead` keeps prefetching into the next pass — that
+            // is what stages next-pass layer 0/1 while the LM head runs.
+            self.mover.done_with(stage);
+            if stream_ahead {
+                self.mover.request(stage + 2);
+            } else if layer + 2 < n_layers {
                 self.mover.request(layer + 2);
             }
         }
+        Ok(())
+    }
 
-        // Head: greedy next-token ids; collect yielding rows. Buckets with
-        // no yielding row (pure partial-prefill buckets) skip the LM-head
-        // execution entirely — their logits would be discarded.
+    /// Head: greedy next-token ids; collect yielding rows. Buckets with
+    /// no yielding row (pure partial-prefill buckets) skip the LM-head
+    /// execution entirely — their logits would be discarded.
+    fn run_head(
+        &mut self,
+        buckets: &[Bucket],
+        xs: &[Vec<f32>],
+        times: &mut PassTimes,
+    ) -> Result<Vec<(SeqId, i32)>> {
+        let rc = &self.pjrt.config;
         debug_assert_eq!(self.embedding.len(), rc.vocab * rc.d_model);
         let mut tokens: Vec<(SeqId, i32)> = Vec::new();
-        clock.lap();
+        let clock = Stopwatch::start();
         for (bi, b) in buckets.iter().enumerate() {
             if !b.rows.iter().any(|r| r.yields) {
                 continue;
@@ -604,15 +1130,14 @@ impl ServingEngine {
                 ])
                 .context("head")?;
             let ids = to_i32(&outs[0])?;
-            debug_assert_eq!(ids.len(), n_tok);
+            debug_assert_eq!(ids.len(), rc.n_tok);
             for (ri, row) in b.rows.iter().enumerate() {
                 if row.yields {
                     tokens.push((row.seq, ids[ri]));
                 }
             }
         }
-        times.gpu += clock.lap().as_secs_f64();
-
-        Ok((tokens, times))
+        times.gpu += clock.elapsed().as_secs_f64();
+        Ok(tokens)
     }
 }

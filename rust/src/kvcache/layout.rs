@@ -43,7 +43,13 @@ impl KvLayout {
 }
 
 /// Free-list block allocator.
-#[derive(Debug)]
+///
+/// `Clone` is deliberate: speculative pass planning (the engine's
+/// double-buffered pipeline) clones the whole layout, plans the next pass
+/// on the clone, and commits it back iff the prediction held. Allocation
+/// is deterministic (LIFO free list), so identical operation sequences on
+/// a clone produce identical block assignments.
+#[derive(Debug, Clone)]
 pub struct BlockAllocator {
     layout: KvLayout,
     free: Vec<u32>,
@@ -98,8 +104,9 @@ impl PageTable {
 /// Page-table registry + allocator: the layout-only paged cache.
 ///
 /// The engine pairs this with [`super::store::PagedKvCache`]'s data pools;
-/// the simulator uses it alone.
-#[derive(Debug)]
+/// the simulator uses it alone. Cloning snapshots the full allocation
+/// state (see [`BlockAllocator`]) for speculative pass planning.
+#[derive(Debug, Clone)]
 pub struct PagedLayout {
     alloc: BlockAllocator,
     tables: BTreeMap<SeqId, PageTable>,

@@ -49,6 +49,17 @@ impl PagedKvCache {
         &mut self.layout
     }
 
+    /// Install a layout evolved elsewhere (the pipelined engine's
+    /// committed speculative plan). Block ids are layer-invariant indices
+    /// into the data pools and the speculative clone evolved from this
+    /// cache's own layout via the deterministic allocator, so the pools
+    /// stay consistent — data written under the old layout remains
+    /// addressable wherever the new layout kept the page tables.
+    pub fn replace_layout(&mut self, layout: PagedLayout) -> PagedLayout {
+        debug_assert_eq!(layout.layout(), self.layout.layout(), "geometry must match");
+        std::mem::replace(&mut self.layout, layout)
+    }
+
     pub fn register(&mut self, id: SeqId) {
         self.layout.register(id);
     }

@@ -33,11 +33,19 @@ COMMANDS:
              scheduling policies (defaults reproduce FIFO/newest-first):
              [--admission fifo|slo] [--victim newest|weighted]
              (--admission slo drops requests past their deadline =
-              arrival + --slo-e2e; the engine's default service model
-              predicts instant service, so shedding is reactive until a
-              profiled estimate is wired into EngineConfig::service)
+              arrival + --slo-e2e)
+             execution pipeline (default on):
+             [--pipeline N]   0 = legacy synchronous stepping; >=1 plans,
+              packs, and embeds pass N+1 under pass N's layer loop and
+              overlaps the LM head with next-pass weight prefetch
+             [--service measured|instant]   measured (default) feeds an
+              EWMA of observed pass times into SLO admission / weighted
+              preemption; instant reproduces the pre-profiled behavior
   plan       print Stage-1/Stage-2 performance-model analysis
              --model <name> --gpu <name> --kv-gb N --p N --g N [--batch K]
+             [--host-ms X]   also print the pass-pipeline view: decode
+              iteration with X ms/pass of host plan/pack cost, pipelined
+              (max(lanes, host)) vs synchronous (host + max(lanes))
   simulate   run the paper-scale hardware simulator
              --model <name> --workload mtbench|rag|aime --gen N --kv-gb N
              --policy moe-lens|moe-lightning|vllm  [--requests K]
@@ -168,6 +176,7 @@ fn cmd_plan(args: &Args) {
         s1.effective_kv(p, g, kv) / kv as f64
     );
 
+    let hrm = moe_lens::perfmodel::hrm::HrmModel::new(machine.clone(), model.clone());
     let s2 = Stage2Model::new(machine, model, 16);
     let k = args.f64_or("batch", s2.default_batch(p, g, kv));
     let pred = s2.predict(p, g, kv, k);
@@ -182,6 +191,25 @@ fn cmd_plan(args: &Args) {
         pred.gpu_utilization * 100.0
     );
     println!("  regime                    : {:?}", pred.regime);
+
+    // Host-side plan/pack cost composed into the decode iteration — the
+    // cost-model view of the engine's double-buffered pass pipeline
+    // (--host-ms, per-pass; calibrate from a trace's host_busy()).
+    let host_secs = args.f64_or("host-ms", 0.0) / 1e3;
+    if host_secs > 0.0 {
+        let hplan = hrm.plan(p, g, kv);
+        let (n, ctx) = (hplan.decode_seqs, p + g / 2);
+        let sync = hrm.decode_iter_secs_with_host(n, ctx, host_secs, false);
+        let pipe = hrm.decode_iter_secs_with_host(n, ctx, host_secs, true);
+        println!("== Pass pipeline (host = {:.1} ms/pass) ==", host_secs * 1e3);
+        println!("  decode batch (HRM plan)   : {n} seqs @ ctx {ctx}");
+        println!("  sync iteration            : {:.4} s (host + max(lanes))", sync);
+        println!("  pipelined iteration       : {:.4} s (max(lanes, host))", pipe);
+        println!(
+            "  host time hidden          : {:.1} %",
+            100.0 * (sync - pipe) / host_secs
+        );
+    }
 }
 
 fn cmd_simulate(args: &Args) {
@@ -274,6 +302,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         eprintln!("unknown victim policy '{victim_name}' (newest|weighted)");
         std::process::exit(2);
     });
+    cfg.pipeline_depth = args.usize_or("pipeline", cfg.pipeline_depth);
+    let pipeline_depth = cfg.pipeline_depth;
+    cfg.measured_service = match args.str_or("service", "measured") {
+        "measured" => true,
+        "instant" => false,
+        other => {
+            eprintln!("unknown service model '{other}' (measured|instant)");
+            std::process::exit(2);
+        }
+    };
     // SLO admission sheds against per-request deadlines, which the CLI
     // derives from --slo-e2e in online mode. Without them the flag would
     // silently behave exactly like FIFO — reject the combination instead.
@@ -360,9 +398,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         };
         println!(
             "serving {n_eff} online requests ({process}, p={p}, g={g}, \
-             admission={admission_name}, victim={victim_name}) \
-             on '{model}' via PJRT {}...",
-            engine.pjrt.platform()
+             admission={admission_name}, victim={victim_name}, \
+             pipeline={pipeline_depth}) on '{model}' via PJRT {}...",
+            engine.pjrt.platform(),
         );
         let (trace, report, latency) = engine.run_online(arrivals, slo)?;
         report.print("real engine (online)");
@@ -370,13 +408,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         trace
     } else {
         println!(
-            "serving {n} requests (p={p}, g={g}) on '{model}' via PJRT {}...",
-            engine.pjrt.platform()
+            "serving {n} requests (p={p}, g={g}, pipeline={pipeline_depth}) \
+             on '{model}' via PJRT {}...",
+            engine.pjrt.platform(),
         );
         let (trace, report) = engine.run(reqs)?;
         report.print("real engine");
         trace
     };
+    let ps = engine.pipeline_stats();
+    if ps.speculated > 0 {
+        println!(
+            "  pipeline: {} speculative plans, {} committed, {} replanned",
+            ps.speculated, ps.committed, ps.replanned
+        );
+    }
     println!(
         "  link: {:.1} MB moved, achieved {:.2} GB/s (link clock)",
         engine.link().total_bytes() as f64 / 1e6,

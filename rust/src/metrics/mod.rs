@@ -51,6 +51,27 @@ pub struct PassRecord {
     /// seed booked this window to the GPU lane alone, double-counting the
     /// CPU lane and inflating the Fig.-13 utilization series.
     pub overlap_time: f64,
+    /// *Exposed* host plan/pack/embed time within the pass (seconds): the
+    /// window spent planning, packing, or gathering embeddings with no
+    /// concurrent layer execution to hide under. Zero for the synchronous
+    /// engine/simulator (planning happens outside the pass body there,
+    /// exactly as before the pipeline landed); the pipelined paths book
+    /// replan fallbacks, the exposed tail of an overrunning speculative
+    /// plan, and commit/patch bookkeeping here. This is the fifth
+    /// exclusive lane: it participates in [`lanes_total`].
+    ///
+    /// [`lanes_total`]: Self::lanes_total
+    pub host_time: f64,
+    /// Host plan/pack/embed work *hidden* under this pass's layer
+    /// execution (seconds): the speculative next-pass preparation that
+    /// ran concurrently on the planner worker. Like the GPU/CPU busy
+    /// shadows, this overlaps wall-clock already partitioned by the
+    /// io/gpu/cpu/overlap lanes, so it is informational and NOT part of
+    /// [`lanes_total`]; total host busy is [`host_busy`].
+    ///
+    /// [`lanes_total`]: Self::lanes_total
+    /// [`host_busy`]: Self::host_busy
+    pub host_overlap_time: f64,
     /// KV blocks in use at pass end.
     pub kv_blocks_used: usize,
     /// Active decode sequences at pass end.
@@ -60,9 +81,11 @@ pub struct PassRecord {
 impl PassRecord {
     /// Sum of the exclusive lane times. For engine-recorded passes this
     /// decomposes `duration` (up to unattributed bookkeeping slack): the
-    /// io, gpu, cpu, and overlap lanes partition the pass wall clock.
+    /// io, gpu, cpu, overlap, and exposed-host lanes partition the pass
+    /// wall clock. (`host_overlap_time` is a shadow of already-partitioned
+    /// time and is deliberately excluded.)
     pub fn lanes_total(&self) -> f64 {
-        self.io_time + self.gpu_time + self.cpu_time + self.overlap_time
+        self.io_time + self.gpu_time + self.cpu_time + self.overlap_time + self.host_time
     }
 
     /// Total GPU busy time: the GPU-exclusive lane plus the overlapped
@@ -75,6 +98,12 @@ impl PassRecord {
     /// window.
     pub fn cpu_busy(&self) -> f64 {
         self.cpu_time + self.overlap_time
+    }
+
+    /// Total host planning/packing/embedding busy time: the exposed lane
+    /// plus the part hidden under layer execution by the pass pipeline.
+    pub fn host_busy(&self) -> f64 {
+        self.host_time + self.host_overlap_time
     }
 }
 
@@ -92,6 +121,17 @@ impl Trace {
     }
 
     pub fn push(&mut self, rec: PassRecord) {
+        // Pass end times must never regress: zero-duration bookkeeping
+        // passes (SLO shed-only records) stamp the *planning* instant, so
+        // they sit between their neighbors and the Fig.-13 series stays
+        // monotone.
+        debug_assert!(
+            self.passes.last().is_none_or(|p| rec.t_end >= p.t_end),
+            "pass {} t_end {} regresses below previous {}",
+            rec.pass_id,
+            rec.t_end,
+            self.passes.last().map_or(0.0, |p| p.t_end),
+        );
         self.passes.push(rec);
     }
 
@@ -186,11 +226,12 @@ impl Trace {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "pass,t_end,duration,prefill_tokens,decode_tokens,finished,preempted,\
-             io_time,gpu_time,cpu_time,overlap_time,kv_blocks_used,active_decode\n",
+             io_time,gpu_time,cpu_time,overlap_time,host_time,host_overlap_time,\
+             kv_blocks_used,active_decode\n",
         );
         for p in &self.passes {
             s.push_str(&format!(
-                "{},{:.6},{:.6},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{},{}\n",
+                "{},{:.6},{:.6},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{}\n",
                 p.pass_id,
                 p.t_end,
                 p.duration,
@@ -202,6 +243,8 @@ impl Trace {
                 p.gpu_time,
                 p.cpu_time,
                 p.overlap_time,
+                p.host_time,
+                p.host_overlap_time,
                 p.kv_blocks_used,
                 p.active_decode,
             ));
@@ -574,6 +617,60 @@ mod tests {
         let mut t = RequestTracker::new();
         t.arrived(7, 0.0);
         t.arrived(7, 1.0);
+    }
+
+    #[test]
+    fn shed_only_passes_keep_series_monotone() {
+        // Regression (pipeline PR): a zero-duration shed-only pass is
+        // stamped at its *planning* instant, between its neighbors; the
+        // trace accepts it and every downsampled Fig.-13 series stays
+        // time-monotone for all sample counts.
+        let mut tr = Trace::new(10);
+        tr.push(pass(0, 1.0, 10, 0, 0.5, 1.0));
+        let shed_only = PassRecord { pass_id: 1, t_end: 1.25, ..Default::default() };
+        assert_eq!(shed_only.duration, 0.0);
+        tr.push(shed_only);
+        tr.push(pass(2, 2.5, 0, 10, 0.5, 1.0));
+        // Equal timestamps are tolerated too (back-to-back shed passes on
+        // a coarse clock).
+        tr.push(PassRecord { pass_id: 3, t_end: 2.5, ..Default::default() });
+        tr.push(pass(4, 3.0, 0, 10, 0.5, 0.5));
+        for n in 1..=8 {
+            let s = tr.series(n, |p| p.decode_tokens as f64);
+            for w in s.windows(2) {
+                assert!(w[0].0 <= w[1].0, "n={n}: series regressed: {s:?}");
+            }
+            assert_eq!(*s.last().unwrap(), (3.0, 10.0), "n={n}: final pass pinned");
+        }
+        // Throughput denominators ignore the zero-duration records.
+        assert!((tr.mean_gpu_utilization() - 1.5 / 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "regresses below previous")]
+    fn regressed_pass_timestamps_are_rejected() {
+        let mut tr = Trace::new(10);
+        tr.push(pass(0, 2.0, 1, 1, 0.1, 1.0));
+        tr.push(pass(1, 1.0, 1, 1, 0.1, 1.0));
+    }
+
+    #[test]
+    fn host_lanes_partition_and_shadow() {
+        // host_time is the fifth exclusive lane; host_overlap_time is a
+        // shadow (hidden under layer execution) and stays out of the
+        // partition, mirroring how gpu_busy() relates to gpu_time.
+        let mut p = pass(0, 1.0, 4, 4, 0.3, 1.0);
+        p.io_time = 0.2;
+        p.cpu_time = 0.1;
+        p.overlap_time = 0.25;
+        p.host_time = 0.15;
+        p.host_overlap_time = 0.6;
+        assert!((p.lanes_total() - 1.0).abs() < 1e-12);
+        assert!((p.host_busy() - 0.75).abs() < 1e-12);
+        let csv = Trace { passes: vec![p], kv_blocks_total: 1 }.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains("host_time") && header.contains("host_overlap_time"));
     }
 
     #[test]

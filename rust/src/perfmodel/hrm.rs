@@ -71,6 +71,31 @@ impl HrmModel {
         n as f64 / self.decode_iter_secs(n, ctx)
     }
 
+    /// Decode-iteration time with host-side planning/packing overhead
+    /// composed in — the cost-model mirror of the engine's
+    /// double-buffered pass pipeline. A synchronous schedule serializes
+    /// the host work with the lanes (`host + max(lanes)`); the pipelined
+    /// schedule plans the next iteration under the current one, so the
+    /// host lane joins the overlapped max (`max(lanes, host)`). Pipelined
+    /// is never slower, and whenever the host cost fits under the
+    /// slowest hardware lane the iteration time is exactly the
+    /// hardware-limited [`decode_iter_secs`](Self::decode_iter_secs) —
+    /// the "shrunken inter-pass gap" of the Fig.-13 traces.
+    pub fn decode_iter_secs_with_host(
+        &self,
+        n: usize,
+        ctx: usize,
+        host_secs: f64,
+        pipelined: bool,
+    ) -> f64 {
+        let exec = self.decode_iter_secs(n, ctx);
+        if pipelined {
+            exec.max(host_secs)
+        } else {
+            exec + host_secs
+        }
+    }
+
     /// The HRM *plan*: grow the decode batch until predicted throughput
     /// stops improving (within `plateau_tol`), i.e. until the slowest
     /// overlapped lane is no longer weight IO. This is the §3.1 blind
@@ -255,6 +280,28 @@ mod tests {
             fast.plan(98, 64, cap).decode_seqs >= slow.plan(98, 64, cap).decode_seqs,
             "faster attention must not shrink the plan"
         );
+    }
+
+    #[test]
+    fn pipelined_host_overhead_hides_under_the_lane_max() {
+        let h = hrm();
+        let (n, ctx) = (64usize, 130usize);
+        let exec = h.decode_iter_secs(n, ctx);
+        // A host cost smaller than the slowest lane disappears entirely
+        // under pipelining but stretches the synchronous iteration.
+        let small = exec * 0.25;
+        assert_eq!(h.decode_iter_secs_with_host(n, ctx, small, true), exec);
+        assert!((h.decode_iter_secs_with_host(n, ctx, small, false) - (exec + small)).abs() < 1e-12);
+        // A dominating host cost binds the pipeline instead.
+        let big = exec * 3.0;
+        assert_eq!(h.decode_iter_secs_with_host(n, ctx, big, true), big);
+        // Pipelined never loses, for any host cost.
+        for &hc in &[0.0, small, exec, big] {
+            assert!(
+                h.decode_iter_secs_with_host(n, ctx, hc, true)
+                    <= h.decode_iter_secs_with_host(n, ctx, hc, false)
+            );
+        }
     }
 
     #[test]

@@ -18,7 +18,8 @@ mod profiler;
 mod resource_aware;
 
 pub use policy::{
-    AdmissionPolicy, DropReason, ServiceModel, VictimPolicy, DEFAULT_SLO_HEADROOM,
+    AdmissionPolicy, DropReason, ServiceEstimator, ServiceModel, VictimPolicy,
+    DEFAULT_SLO_HEADROOM,
 };
 pub use profiler::{PipelineProfiler, ProfileFit};
 pub use resource_aware::{PassPlan, SchedConfig, SchedMode, Scheduler};

@@ -164,6 +164,81 @@ impl ServiceModel {
     }
 }
 
+/// Online EWMA of *observed* engine pass times → a [`ServiceModel`]
+/// (ROADMAP: "measured engine service model"). The real engine cannot
+/// know its wall-clock pass costs until it runs, so its SLO admission
+/// shipped with the instant default (sheds only already-expired
+/// requests). Feeding each completed pass into this estimator gives the
+/// admission and weighted-victim policies the same kind of measured
+/// estimate the simulator derives analytically:
+///
+/// * `decode_secs_per_iter` ← EWMA of the duration of decode-bearing
+///   passes (a pass is one decode iteration for every active sequence —
+///   the engine analog of the simulator's full weight-sweep δ);
+/// * `prefill_secs_per_token` ← EWMA of `duration / total_tokens` (the
+///   marginal per-token pipeline cost, the analog of δ / n_real).
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceEstimator {
+    /// EWMA smoothing factor in (0, 1]; higher = more reactive.
+    alpha: f64,
+    /// EWMA of decode-bearing pass durations (seconds).
+    decode_iter: Option<f64>,
+    /// EWMA of per-token pass cost (seconds / token).
+    per_token: Option<f64>,
+}
+
+impl ServiceEstimator {
+    /// Default smoothing: ~last 8 passes dominate the estimate.
+    pub const DEFAULT_ALPHA: f64 = 0.25;
+
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        ServiceEstimator { alpha, decode_iter: None, per_token: None }
+    }
+
+    fn fold(alpha: f64, acc: &mut Option<f64>, sample: f64) {
+        *acc = Some(match *acc {
+            None => sample,
+            Some(prev) => prev + alpha * (sample - prev),
+        });
+    }
+
+    /// Feed one completed pass. Zero-duration or empty passes (shed-only
+    /// bookkeeping records) carry no timing signal and are ignored.
+    pub fn observe(&mut self, prefill_tokens: usize, decode_tokens: usize, duration: f64) {
+        let total = prefill_tokens + decode_tokens;
+        if total == 0 || !(duration > 0.0) {
+            return;
+        }
+        Self::fold(self.alpha, &mut self.per_token, duration / total as f64);
+        if decode_tokens > 0 {
+            Self::fold(self.alpha, &mut self.decode_iter, duration);
+        }
+    }
+
+    /// The measured model, once at least one timed pass was observed.
+    /// Before any decode-bearing pass, decode cost falls back to the
+    /// per-token EWMA — a deliberate *under*-estimate (a decode iteration
+    /// sweeps the full weight set, a prefill token shares it): during
+    /// startup it errs toward admitting (FIFO-like) instead of letting a
+    /// single long prefill pass masquerade as the per-iteration decode
+    /// cost and spuriously shed whole generation budgets.
+    pub fn model(&self) -> Option<ServiceModel> {
+        let per_token = self.per_token?;
+        let decode = self.decode_iter.unwrap_or(per_token);
+        Some(ServiceModel {
+            prefill_secs_per_token: per_token,
+            decode_secs_per_iter: decode,
+        })
+    }
+}
+
+impl Default for ServiceEstimator {
+    fn default() -> Self {
+        ServiceEstimator::new(Self::DEFAULT_ALPHA)
+    }
+}
+
 /// Why the scheduler removed a request without finishing it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DropReason {
@@ -234,6 +309,58 @@ mod tests {
         let req = Request::new(1, vec![1; 50], 10);
         assert_eq!(m.predicted_service(&req), 0.0);
         assert_eq!(m.predicted_remaining(&Sequence::new(req)), 0.0);
+    }
+
+    #[test]
+    fn estimator_converges_on_steady_pass_times() {
+        let mut e = ServiceEstimator::default();
+        assert!(e.model().is_none(), "no observations yet");
+        // Shed-only / empty passes carry no signal.
+        e.observe(0, 0, 0.5);
+        e.observe(10, 0, 0.0);
+        assert!(e.model().is_none());
+        // Steady mixed passes: 100 tokens in 0.2 s.
+        for _ in 0..64 {
+            e.observe(60, 40, 0.2);
+        }
+        let m = e.model().unwrap();
+        assert!((m.decode_secs_per_iter - 0.2).abs() < 1e-9, "{m:?}");
+        assert!((m.prefill_secs_per_token - 0.002).abs() < 1e-9, "{m:?}");
+    }
+
+    #[test]
+    fn estimator_tracks_a_level_shift() {
+        let mut e = ServiceEstimator::new(0.5);
+        for _ in 0..32 {
+            e.observe(0, 50, 1.0);
+        }
+        for _ in 0..32 {
+            e.observe(0, 50, 3.0);
+        }
+        let m = e.model().unwrap();
+        assert!((m.decode_secs_per_iter - 3.0).abs() < 1e-6, "{m:?}");
+    }
+
+    #[test]
+    fn estimator_prefill_only_runs_fall_back_for_decode() {
+        // Before any decode-bearing pass, decode cost falls back to the
+        // per-token EWMA — better than predicting instant service, but an
+        // under-estimate by design so startup never sheds a request on
+        // the strength of one long prefill pass.
+        let mut e = ServiceEstimator::default();
+        e.observe(100, 0, 0.4);
+        let m = e.model().unwrap();
+        assert!((m.decode_secs_per_iter - 0.004).abs() < 1e-12);
+        assert!((m.prefill_secs_per_token - 0.004).abs() < 1e-12);
+        // The first decode-bearing pass replaces the fallback.
+        e.observe(0, 50, 1.0);
+        assert_eq!(e.model().unwrap().decode_secs_per_iter, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha must be in (0, 1]")]
+    fn estimator_rejects_bad_alpha() {
+        ServiceEstimator::new(0.0);
     }
 
     #[test]

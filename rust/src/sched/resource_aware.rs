@@ -229,7 +229,7 @@ impl Scheduler {
                 break;
             }
             mode = SchedMode::Preemption;
-            let victim = self.select_victim(now);
+            let victim = self.select_victim(now, kv);
             let mut seq = self.decoding.remove(&victim).unwrap();
             kv.release(victim);
             seq.preempt();
@@ -286,7 +286,7 @@ impl Scheduler {
     }
 
     /// Pick the decode sequence to evict in preemption mode.
-    fn select_victim(&self, now: f64) -> SeqId {
+    fn select_victim(&self, now: f64, kv: &PagedLayout) -> SeqId {
         match self.cfg.victim {
             // Newest = largest id (ids are assigned in admission order).
             VictimPolicy::Newest => {
@@ -304,8 +304,19 @@ impl Scheduler {
             // to youngest (largest arrival, then largest id), which
             // reduces to newest-first for identical closed-batch
             // sequences.
+            //
+            // Block-boundary credit: eviction reclaims *whole* KV blocks,
+            // so a sequence one token past a boundary frees nearly a full
+            // spare block beyond its token count. The replay charge is
+            // scaled by the victim's block-fill fraction (tokens held /
+            // slots reclaimed): paying the same replay for more reclaimed
+            // capacity is a better trade, so low-fill sequences score
+            // higher. Equal-length candidates keep identical scores, so
+            // the slack/tie-break behavior above is unchanged for uniform
+            // batches.
             VictimPolicy::Weighted => {
                 let service = self.cfg.service;
+                let block = kv.layout().block_size;
                 let mut best_key = (f64::NEG_INFINITY, f64::NEG_INFINITY, 0);
                 let mut best_id: Option<SeqId> = None;
                 for (&id, seq) in self.decoding.iter() {
@@ -313,10 +324,17 @@ impl Scheduler {
                         .req
                         .deadline
                         .unwrap_or(seq.arrival + super::policy::NO_DEADLINE_PATIENCE);
+                    let fill = if kv.contains(id) {
+                        let t = kv.table(id);
+                        let slots = (t.blocks.len() * block).max(1);
+                        (t.len as f64 / slots as f64).min(1.0)
+                    } else {
+                        1.0
+                    };
                     let score = deadline
                         - now
                         - service.predicted_remaining(seq)
-                        - service.replay_cost(seq);
+                        - service.replay_cost(seq) * fill;
                     let key = (score, seq.arrival, id);
                     if best_id.is_none() || key > best_key {
                         best_key = key;
@@ -468,6 +486,97 @@ impl Scheduler {
         self.decoding
             .get(&id)
             .or_else(|| self.queue.iter().find(|s| s.id() == id))
+    }
+
+    // --- Snapshot/commit planning (the engine's double-buffered pass
+    // pipeline). A speculative clone of the planner-visible state lets a
+    // host worker plan pass N+1 while pass N executes; the engine commits
+    // the clone back iff pass N completed exactly as predicted (budget
+    // finishes only — an EOS finish, a shed, or a new arrival invalidates
+    // the speculation and falls back to synchronous replanning).
+
+    /// Clone the planner-visible state: queue, decode set, and the policy
+    /// counters. The finished archive stays behind — it is irrelevant to
+    /// planning and commits must never clobber real generated tokens with
+    /// speculative placeholders.
+    pub fn speculate(&self) -> Scheduler {
+        Scheduler {
+            cfg: self.cfg,
+            queue: self.queue.clone(),
+            decoding: self.decoding.clone(),
+            finished: Vec::new(),
+            preemptions: self.preemptions,
+            rejected: self.rejected,
+            expired: self.expired,
+        }
+    }
+
+    /// Install a speculative successor produced by [`speculate`] +
+    /// [`complete_speculative`] + [`plan_at`], keeping the real finished
+    /// archive. The caller guarantees the prediction was validated (the
+    /// actual finished set matched) and every placeholder token was
+    /// patched with the real value first.
+    ///
+    /// [`speculate`]: Self::speculate
+    /// [`complete_speculative`]: Self::complete_speculative
+    /// [`plan_at`]: Self::plan_at
+    pub fn commit(&mut self, next: Scheduler) {
+        debug_assert!(next.finished.is_empty(), "speculative finishes are discarded");
+        self.queue = next.queue;
+        self.decoding = next.decoding;
+        self.preemptions = next.preemptions;
+        self.rejected = next.rejected;
+        self.expired = next.expired;
+    }
+
+    /// Speculative twin of [`complete`](Self::complete): apply the
+    /// *expected* yields of the pass currently executing, with placeholder
+    /// token values (0) and budget-only termination. EOS finishes cannot
+    /// be predicted before the LM head runs — when one fires, the actual
+    /// finished set diverges from the returned prediction and the caller
+    /// discards the speculation.
+    ///
+    /// Returns `(finished, placeholders)`: the predicted finished ids
+    /// (sorted) and, for every *surviving* yielder, the `(id, generated
+    /// index, logical token position)` of the placeholder the caller must
+    /// patch with the real token at commit time.
+    pub fn complete_speculative(
+        &mut self,
+        yields: &[SeqId],
+        kv: &mut PagedLayout,
+    ) -> (Vec<SeqId>, Vec<(SeqId, usize, usize)>) {
+        let mut finished = Vec::new();
+        let mut placeholders = Vec::new();
+        for &id in yields {
+            let seq = self.decoding.get_mut(&id).expect("yield for unknown sequence");
+            let gen_idx = seq.generated.len();
+            let logical_pos = seq.req.prompt.len() + gen_idx;
+            seq.generated.push(0);
+            if seq.generated.len() >= seq.req.max_gen {
+                let mut seq = self.decoding.remove(&id).unwrap();
+                seq.phase = SeqPhase::Finished;
+                kv.release(id);
+                finished.push(id);
+            } else {
+                placeholders.push((id, gen_idx, logical_pos));
+            }
+        }
+        finished.sort_unstable();
+        (finished, placeholders)
+    }
+
+    /// Replace a placeholder generated token (see
+    /// [`complete_speculative`](Self::complete_speculative)) with the real
+    /// value, wherever the sequence now lives (decode set, or the queue if
+    /// the speculative plan preempted it).
+    pub fn patch_generated(&mut self, id: SeqId, gen_idx: usize, token: i32) {
+        let seq = self
+            .decoding
+            .get_mut(&id)
+            .or_else(|| self.queue.iter_mut().find(|s| s.id() == id))
+            .unwrap_or_else(|| panic!("placeholder patch for dead sequence {id}"));
+        debug_assert_eq!(seq.generated[gen_idx], 0, "patch site must be a placeholder");
+        seq.generated[gen_idx] = token;
     }
 }
 
@@ -770,6 +879,108 @@ mod tests {
             s.complete(&toks, &mut layout);
         }
         panic!("tight cache must trigger preemption");
+    }
+
+    #[test]
+    fn weighted_victim_prefers_block_boundary_crossers() {
+        // Two sequences with identical deadlines/arrivals/remaining work;
+        // seq 1 sits exactly on a block boundary (fill 1.0), seq 0 is one
+        // token past one (low fill: replaying it reclaims almost a full
+        // spare block "for free"). Without the block credit the linear
+        // score would evict seq 1 (one fewer replay token); the credit
+        // must flip the choice to seq 0, whose eviction reclaims more
+        // slots per replayed token.
+        let cfg = SchedConfig::new(100, 100)
+            .with_victim(VictimPolicy::Weighted)
+            .with_service(ServiceModel::from_costs(1.0, 100));
+        let mut s = Scheduler::new(cfg);
+        let mut layout = kv(8, 5); // 40 token slots
+        s.submit(Request::new(0, vec![1; 9], 32)); // 9 tokens -> 2 blocks, fill 9/16
+        s.submit(Request::new(1, vec![1; 8], 32)); // 8 tokens -> 1 block,  fill 8/8
+        let p = s.plan(&mut layout);
+        assert_eq!(p.prefill_tokens(), 17);
+        s.complete(&[(0, 5), (1, 5)], &mut layout);
+        // Decode grows both: 10 tokens (2 blocks) + 9 tokens (2 blocks).
+        // 5-block cache -> next growth preempts.
+        for _ in 0..30 {
+            let plan = s.plan(&mut layout);
+            if !plan.preempted.is_empty() {
+                assert_eq!(
+                    plan.preempted[0], 0,
+                    "low-fill sequence frees more slots per replayed token"
+                );
+                layout.check_invariants();
+                return;
+            }
+            let toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 5)).collect();
+            s.complete(&toks, &mut layout);
+        }
+        panic!("tight cache must trigger preemption");
+    }
+
+    #[test]
+    fn speculative_complete_matches_real_complete_on_budget_finishes() {
+        let mut s = sched(64, 64);
+        let mut layout = kv(4, 64);
+        s.submit(Request::new(0, vec![1; 3], 1)); // finishes on first token
+        s.submit(Request::new(1, vec![1; 3], 4)); // survives
+        let plan = s.plan(&mut layout);
+        let yields: Vec<SeqId> =
+            plan.prefill.iter().filter(|c| c.completes).map(|c| c.id).collect();
+        assert_eq!(yields, vec![0, 1]);
+
+        let mut spec = s.speculate();
+        let mut spec_kv = layout.clone();
+        let (pred_finished, placeholders) =
+            spec.complete_speculative(&yields, &mut spec_kv);
+        assert_eq!(pred_finished, vec![0]);
+        assert_eq!(placeholders, vec![(1, 0, 3)]);
+
+        // Real completion with the same yields agrees.
+        let mut actual = s.complete(&[(0, 7), (1, 9)], &mut layout);
+        actual.sort_unstable();
+        assert_eq!(actual, pred_finished);
+        assert_eq!(spec_kv.used_blocks(), layout.used_blocks());
+
+        // The clone plans the next pass; patching + committing leaves the
+        // real scheduler in the state a synchronous replan would produce.
+        let spec_plan = spec.plan_at(&mut spec_kv, 0.0);
+        spec.patch_generated(1, 0, 9);
+        let real_plan = s.plan_at(&mut layout, 0.0);
+        assert_eq!(spec_plan.decode, real_plan.decode);
+        assert_eq!(spec_plan.prefill_tokens(), real_plan.prefill_tokens());
+        s.commit(spec);
+        assert_eq!(s.active_decode(), 1);
+        assert_eq!(s.sequence(1).unwrap().generated, vec![9]);
+        // Real finished archive survived the commit.
+        assert_eq!(s.finished().len(), 1);
+        assert_eq!(s.finished()[0].id(), 0);
+        assert_eq!(s.finished()[0].generated, vec![7]);
+    }
+
+    #[test]
+    fn eos_finish_diverges_from_speculative_prediction() {
+        let mut s = sched(64, 64);
+        let mut layout = kv(4, 64);
+        s.submit(Request::new(0, vec![1; 3], 10).with_eos(5));
+        let plan = s.plan(&mut layout);
+        assert!(plan.prefill[0].completes);
+        let mut spec = s.speculate();
+        let mut spec_kv = layout.clone();
+        let (pred, _) = spec.complete_speculative(&[0], &mut spec_kv);
+        assert!(pred.is_empty(), "budget says it survives");
+        // The head emits EOS: the actual finished set differs, which is
+        // the signal to discard the speculation.
+        let actual = s.complete(&[(0, 5)], &mut layout);
+        assert_eq!(actual, vec![0]);
+        assert_ne!(actual, pred);
+    }
+
+    #[test]
+    #[should_panic(expected = "placeholder patch for dead sequence")]
+    fn patching_a_dead_sequence_panics() {
+        let mut s = sched(8, 8);
+        s.patch_generated(42, 0, 1);
     }
 
     #[test]

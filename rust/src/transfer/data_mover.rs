@@ -12,6 +12,15 @@
 //! The mover never overwrites a slot whose layer has not been consumed
 //! (double-buffer back-pressure), so it can run arbitrarily far ahead of
 //! the compute threads without clobbering live weights.
+//!
+//! Requests are *stage* indices on a single monotone stream: stage `s`
+//! sources layer `s % n_layers` of the weight file. The synchronous
+//! engine uses one pass per stream ([`DataMover::reset`] between passes,
+//! stages ≡ layers); the pipelined engine never resets and lets stage
+//! ids run across pass boundaries, so the §6.4 `+2` prefetch issued at a
+//! pass's last layers streams the *next pass's* layer 0/1 while the LM
+//! head computes — the head↔prefetch overlap of the double-buffered pass
+//! pipeline.
 
 use std::collections::BTreeSet;
 use std::sync::mpsc::{channel, Sender};
@@ -72,9 +81,10 @@ impl DataMover {
         let worker = {
             let shared = Arc::clone(&shared);
             std::thread::spawn(move || {
+                let n_layers = weights.n_layers().max(1);
                 while let Ok(req) = rx.recv() {
-                    // Back-pressure: only two slots exist; filling layer L
-                    // overwrites L-2's slot, so wait until L-2 is consumed.
+                    // Back-pressure: only two slots exist; filling stage S
+                    // overwrites S-2's slot, so wait until S-2 is consumed.
                     {
                         let mut st = shared.state.lock().unwrap();
                         while !st.shutdown && req.layer >= 2 && st.consumed + 2 <= req.layer {
@@ -87,7 +97,9 @@ impl DataMover {
                             st.ready.remove(&(req.layer - 2));
                         }
                     }
-                    let src = weights.layer_data(req.layer);
+                    // Stage -> source layer: wraps so stage ids may run
+                    // across pass boundaries (pipelined engine).
+                    let src = weights.layer_data(req.layer % n_layers);
                     buffer.fill(req.layer, |dst| {
                         // Packetized copy: one link transaction per packet.
                         let mut off = 0;
@@ -269,6 +281,38 @@ mod tests {
         mover.wait_layer(2);
         assert!(!mover.is_ready(0), "staging layer 2 evicts layer 0");
         buf.read(2, |d| assert_eq!(d[0], 2000.0));
+    }
+
+    #[test]
+    fn stage_stream_crosses_pass_boundaries() {
+        // The pipelined engine's protocol: stage ids keep counting across
+        // passes (stage s sources layer s % n_layers), with no reset. The
+        // +2 prefetch at a pass's tail therefore stages the *next pass's*
+        // first layers while the head would run.
+        let n_layers = 3;
+        let (wf, buf) = toy_setup(n_layers, 32);
+        let link = Arc::new(PcieLink::new(LinkTiming::Unthrottled));
+        let mover = DataMover::spawn(Arc::clone(&wf), Arc::clone(&buf), Arc::clone(&link), 128);
+        mover.request(0);
+        mover.request(1);
+        let passes = 3;
+        for stage in 0..passes * n_layers {
+            mover.wait_layer(stage);
+            buf.read(stage, |d| {
+                assert_eq!(d[0], ((stage % n_layers) * 1000) as f32, "stage {stage}");
+            });
+            mover.done_with(stage);
+            mover.request(stage + 2); // unconditional: runs into the next pass
+        }
+        // After the last consumed stage, the two prefetched stages for the
+        // never-run next pass stream without blocking the mover.
+        mover.wait_layer(passes * n_layers);
+        mover.wait_layer(passes * n_layers + 1);
+        assert_eq!(
+            link.total_bytes() as usize,
+            (passes * n_layers + 2) * 32 * 4,
+            "every stage moved exactly once"
+        );
     }
 
     #[test]

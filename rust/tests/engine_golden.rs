@@ -190,6 +190,96 @@ fn online_with_zero_arrivals_matches_closed_batch() {
 }
 
 #[test]
+fn pipelined_and_synchronous_runs_are_equivalent() {
+    let Some(g) = golden() else { return };
+    // The pipeline acceptance invariant: pipeline_depth = 0 takes the
+    // pre-pipeline code path, and depth 1 must produce the same tokens,
+    // the same finished set, and the same pass-by-pass work — the
+    // speculative plan commits to exactly what a synchronous replan would
+    // have produced (host embedding gather included).
+    let run = |depth: usize| {
+        let mut cfg = EngineConfig::for_model("tiny");
+        cfg.pipeline_depth = depth;
+        let mut eng = ServingEngine::load(cfg).unwrap();
+        let reqs: Vec<Request> = g
+            .generation
+            .prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request::new(i as u64, p.clone(), g.generation.steps))
+            .collect();
+        let (trace, _) = eng.run(reqs).unwrap();
+        let stats = eng.pipeline_stats();
+        let mut fin = eng.sched.take_finished();
+        fin.sort_by_key(|s| s.id());
+        (trace, fin, stats)
+    };
+    let (t_sync, fin_sync, s_sync) = run(0);
+    let (t_pipe, fin_pipe, s_pipe) = run(1);
+
+    assert_eq!(s_sync.speculated, 0, "depth 0 must never speculate");
+    assert!(s_pipe.speculated > 0, "depth 1 must speculate");
+    assert!(s_pipe.committed > 0, "budget-only finishes must commit");
+    assert_eq!(s_pipe.replanned, 0, "no EOS in this workload => no replans");
+
+    assert_eq!(t_sync.passes.len(), t_pipe.passes.len());
+    for (a, b) in t_sync.passes.iter().zip(&t_pipe.passes) {
+        assert_eq!(a.prefill_tokens, b.prefill_tokens, "pass {}", a.pass_id);
+        assert_eq!(a.decode_tokens, b.decode_tokens, "pass {}", a.pass_id);
+        assert_eq!(a.generated, b.generated, "pass {}", a.pass_id);
+        assert_eq!(a.finished, b.finished, "pass {}", a.pass_id);
+        assert_eq!(a.preempted, b.preempted, "pass {}", a.pass_id);
+        assert_eq!(a.kv_blocks_used, b.kv_blocks_used, "pass {}", a.pass_id);
+    }
+    assert_eq!(fin_sync.len(), fin_pipe.len());
+    for (a, b) in fin_sync.iter().zip(&fin_pipe) {
+        assert_eq!(a.id(), b.id());
+        assert_eq!(a.generated, b.generated, "sequence {}", a.id());
+    }
+    // Both match the oracle (the pipelined host-side embedding gather is
+    // bit-exact with the PJRT gather).
+    for (i, seq) in fin_pipe.iter().enumerate() {
+        assert_eq!(seq.generated, g.generation.tokens[i], "sequence {i}");
+    }
+    // Lane sanity with the pipeline on: exposed + hidden host lanes are
+    // recorded, non-negative, and the five-lane sum stays within the
+    // pass wall clock's bookkeeping slack.
+    for p in &t_pipe.passes {
+        assert!(p.host_time >= 0.0 && p.host_overlap_time >= 0.0);
+        assert!(p.host_busy() >= 0.0);
+    }
+}
+
+#[test]
+fn pipelined_eos_replan_path_matches_oracle() {
+    let Some(g) = golden() else { return };
+    // An EOS finish is the one event the speculative planner cannot
+    // predict: it must invalidate the committed pass and replan, and the
+    // output must be unaffected. Use the oracle's first token as EOS so
+    // the replan path actually fires.
+    let eos = g.generation.tokens[0][0];
+    let mut cfg = EngineConfig::for_model("tiny");
+    cfg.pipeline_depth = 1;
+    let mut eng = ServingEngine::load(cfg).unwrap();
+    let mut reqs: Vec<Request> = g
+        .generation
+        .prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p.clone(), g.generation.steps))
+        .collect();
+    reqs[0] = reqs[0].clone().with_eos(eos);
+    eng.run(reqs).unwrap();
+    assert!(eng.pipeline_stats().replanned > 0, "EOS must force a replan");
+    let mut fin = eng.sched.take_finished();
+    fin.sort_by_key(|s| s.id());
+    assert_eq!(fin[0].generated, vec![eos], "EOS stops sequence 0 after one token");
+    for (i, seq) in fin.iter().enumerate().skip(1) {
+        assert_eq!(seq.generated, g.generation.tokens[i], "sequence {i}");
+    }
+}
+
+#[test]
 fn eos_termination_stops_early() {
     let Some(g) = golden() else { return };
     // Use the oracle's first generated token as a synthetic EOS: the
