@@ -1,0 +1,262 @@
+//! The ratchet baseline: committed per-file-per-rule violation counts.
+//!
+//! `lint-baseline.json` absorbs pre-existing debt so `--check` fails only
+//! on *increases* (new violations) or *staleness* (counts above actual —
+//! debt was paid down but the file not refreshed, which would let new
+//! violations hide in the slack). `--update-baseline` rewrites the file
+//! from the actual counts but refuses to raise any entry: the ratchet
+//! only turns one way.
+//!
+//! Counts are per file and rule, not per line, so unrelated edits that
+//! shift line numbers never churn the baseline.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::Counts;
+
+/// Baseline file name, resolved against the crate root.
+pub const BASELINE_FILE: &str = "lint-baseline.json";
+
+/// One count mismatch between the baseline and the actual scan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Regression {
+    pub file: String,
+    pub rule: String,
+    pub baseline: usize,
+    pub actual: usize,
+}
+
+/// Outcome of checking actual counts against the baseline.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// Entries where actual > baseline: new violations.
+    pub regressions: Vec<Regression>,
+    /// Entries where baseline > actual: stale debt records.
+    pub stale: Vec<Regression>,
+}
+
+impl CheckReport {
+    pub fn is_clean(&self) -> bool {
+        self.regressions.is_empty() && self.stale.is_empty()
+    }
+}
+
+/// The committed ratchet state.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub files: Counts,
+}
+
+impl Baseline {
+    /// Build from scan counts, dropping empty entries.
+    pub fn from_counts(counts: &Counts) -> Self {
+        let mut files = Counts::new();
+        for (file, rules) in counts {
+            let kept: BTreeMap<String, usize> =
+                rules.iter().filter(|&(_, &n)| n > 0).map(|(r, &n)| (r.clone(), n)).collect();
+            if !kept.is_empty() {
+                files.insert(file.clone(), kept);
+            }
+        }
+        Baseline { files }
+    }
+
+    pub fn total(&self) -> usize {
+        self.files.values().flat_map(|m| m.values()).sum()
+    }
+
+    /// Parse the baseline JSON (as written by [`to_pretty_json`]).
+    ///
+    /// [`to_pretty_json`]: Self::to_pretty_json
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let files_j = j.get("files").ok_or_else(|| "baseline missing 'files' key".to_string())?;
+        let obj = files_j.as_obj().ok_or_else(|| "'files' must be an object".to_string())?;
+        let mut files = Counts::new();
+        for (file, rules_j) in obj {
+            let rules_obj = rules_j
+                .as_obj()
+                .ok_or_else(|| format!("baseline entry for '{file}' must be an object"))?;
+            let mut m = BTreeMap::new();
+            for (rule, n) in rules_obj {
+                let count = n
+                    .as_usize()
+                    .ok_or_else(|| format!("count for '{file}'/'{rule}' must be a number"))?;
+                m.insert(rule.clone(), count);
+            }
+            files.insert(file.clone(), m);
+        }
+        Ok(Baseline { files })
+    }
+
+    /// Load from `path`. A missing file is an error — run
+    /// `--update-baseline` to create it.
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        let text = fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Serialize in the stable committed format (sorted keys, 2-space
+    /// indent, trailing newline).
+    pub fn to_pretty_json(&self) -> String {
+        let mut s = String::from("{\n  \"version\": 1,\n  \"files\": {");
+        if self.files.is_empty() {
+            s.push_str("}\n}\n");
+            return s;
+        }
+        s.push('\n');
+        let nf = self.files.len();
+        for (fi, (file, rules)) in self.files.iter().enumerate() {
+            s.push_str(&format!("    {}: {{\n", Json::Str(file.clone())));
+            let nr = rules.len();
+            for (ri, (rule, n)) in rules.iter().enumerate() {
+                let comma = if ri + 1 < nr { "," } else { "" };
+                s.push_str(&format!("      {}: {n}{comma}\n", Json::Str(rule.clone())));
+            }
+            s.push_str(if fi + 1 < nf { "    },\n" } else { "    }\n" });
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Compare actual scan counts against this baseline.
+    pub fn check(&self, actual: &Counts) -> CheckReport {
+        let mut report = CheckReport::default();
+        let mut keys: Vec<(&String, &String)> = Vec::new();
+        for (file, rules) in &self.files {
+            for rule in rules.keys() {
+                keys.push((file, rule));
+            }
+        }
+        for (file, rules) in actual {
+            for rule in rules.keys() {
+                if !self.files.get(file).is_some_and(|m| m.contains_key(rule)) {
+                    keys.push((file, rule));
+                }
+            }
+        }
+        keys.sort();
+        keys.dedup();
+        for (file, rule) in keys {
+            let base = self.files.get(file).and_then(|m| m.get(rule)).copied().unwrap_or(0);
+            let act = actual.get(file).and_then(|m| m.get(rule)).copied().unwrap_or(0);
+            let entry = Regression {
+                file: file.clone(),
+                rule: rule.clone(),
+                baseline: base,
+                actual: act,
+            };
+            if act > base {
+                report.regressions.push(entry);
+            } else if base > act {
+                report.stale.push(entry);
+            }
+        }
+        report
+    }
+
+    /// A refreshed baseline from `actual`, refusing to raise any count
+    /// (the ratchet only burns down). On refusal, returns the offending
+    /// entries.
+    pub fn updated(&self, actual: &Counts) -> Result<Baseline, Vec<Regression>> {
+        let report = self.check(actual);
+        if report.regressions.is_empty() {
+            Ok(Baseline::from_counts(actual))
+        } else {
+            Err(report.regressions)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(entries: &[(&str, &str, usize)]) -> Counts {
+        let mut c = Counts::new();
+        for &(f, r, n) in entries {
+            c.entry(f.to_string()).or_default().insert(r.to_string(), n);
+        }
+        c
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let b = Baseline::from_counts(&counts(&[
+            ("src/a.rs", "panic-policy", 2),
+            ("src/a.rs", "unchecked-cast", 5),
+            ("src/b.rs", "float-eq", 1),
+        ]));
+        let text = b.to_pretty_json();
+        assert_eq!(Baseline::parse(&text).unwrap(), b);
+        assert!(text.ends_with("}\n"));
+        assert!(text.contains("\"version\": 1"));
+        // Stable output: serializing twice is byte-identical.
+        assert_eq!(text, Baseline::parse(&text).unwrap().to_pretty_json());
+    }
+
+    #[test]
+    fn empty_baseline_round_trips() {
+        let b = Baseline::default();
+        assert_eq!(Baseline::parse(&b.to_pretty_json()).unwrap(), b);
+        assert_eq!(b.total(), 0);
+    }
+
+    #[test]
+    fn zero_counts_are_dropped() {
+        let b = Baseline::from_counts(&counts(&[("src/a.rs", "float-eq", 0)]));
+        assert!(b.files.is_empty());
+    }
+
+    #[test]
+    fn check_flags_regressions_and_staleness() {
+        let base = Baseline::from_counts(&counts(&[("src/a.rs", "panic-policy", 2)]));
+        // Equal: clean.
+        assert!(base.check(&counts(&[("src/a.rs", "panic-policy", 2)])).is_clean());
+        // Increase: regression.
+        let r = base.check(&counts(&[("src/a.rs", "panic-policy", 3)]));
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].baseline, 2);
+        assert_eq!(r.regressions[0].actual, 3);
+        assert!(r.stale.is_empty());
+        // Decrease: stale (baseline must be refreshed).
+        let s = base.check(&counts(&[("src/a.rs", "panic-policy", 1)]));
+        assert!(s.regressions.is_empty());
+        assert_eq!(s.stale.len(), 1);
+        // New file with violations: regression from an implicit 0.
+        let n = base.check(&counts(&[
+            ("src/a.rs", "panic-policy", 2),
+            ("src/new.rs", "float-eq", 1),
+        ]));
+        assert_eq!(n.regressions.len(), 1);
+        assert_eq!(n.regressions[0].file, "src/new.rs");
+        // File fixed entirely: stale entry from an implicit 0.
+        let gone = base.check(&Counts::new());
+        assert_eq!(gone.stale.len(), 1);
+        assert_eq!(gone.stale[0].actual, 0);
+    }
+
+    #[test]
+    fn update_permits_decreases_and_refuses_increases() {
+        let base = Baseline::from_counts(&counts(&[("src/a.rs", "panic-policy", 2)]));
+        let down = base.updated(&counts(&[("src/a.rs", "panic-policy", 1)])).unwrap();
+        assert_eq!(down.files["src/a.rs"]["panic-policy"], 1);
+        let err = base.updated(&counts(&[("src/a.rs", "panic-policy", 4)])).unwrap_err();
+        assert_eq!(err.len(), 1);
+        assert_eq!(err[0].actual, 4);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_baselines() {
+        assert!(Baseline::parse("{}").is_err(), "missing files key");
+        assert!(Baseline::parse("{\"files\": 3}").is_err());
+        assert!(Baseline::parse("{\"files\": {\"a.rs\": 1}}").is_err());
+        assert!(Baseline::parse("{\"files\": {\"a.rs\": {\"r\": \"x\"}}}").is_err());
+        assert!(Baseline::parse("not json").is_err());
+    }
+}

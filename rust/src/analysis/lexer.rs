@@ -1,0 +1,369 @@
+//! Line-level lexical scrubber for `pallas-lint`.
+//!
+//! The linter matches patterns against *code only*: string literals, char
+//! literals, and comments are blanked to spaces first, so `"HashMap"` in a
+//! doc comment or an error message never fires a rule. The scrubber is a
+//! small state machine over the raw source — it understands `//` and
+//! nested `/* */` comments, plain/byte/raw strings (`"…"`, `b"…"`,
+//! `r#"…"#`, `br#"…"#`), char and byte-char literals, escapes (including
+//! string line-continuations, which must still break lines so line
+//! numbers stay exact), and the char-literal-vs-lifetime ambiguity of
+//! `'`.
+//!
+//! Comment *text* is kept separately per line because suppression
+//! directives live in comments: `// pallas-lint: allow(<rule>)` on the
+//! violating line or the line directly above it.
+
+/// One source line after scrubbing.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// The line with non-code characters blanked to spaces.
+    pub code: String,
+    /// The comment text of the line (for allow-directive parsing).
+    pub comment: String,
+}
+
+/// Rust identifier-continuation characters (the repo is ASCII-only).
+pub fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+#[derive(PartialEq, Clone, Copy)]
+enum State {
+    Normal,
+    LineComment,
+    Block,
+    Str,
+    RawStr,
+}
+
+/// Scrub `src` into per-line (code, comment) pairs. The output always has
+/// one trailing entry for the (possibly empty) final line, matching
+/// `src.split('\n')` line numbering.
+pub fn scrub(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Normal;
+    let mut depth = 0usize; // block-comment nesting
+    let mut hashes = 0usize; // raw-string terminator hashes
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Normal;
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::Block => {
+                if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                    if depth == 0 {
+                        state = State::Normal;
+                    }
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' && i + 1 < n {
+                    // Escape: swallow the next char too — unless it is a
+                    // newline (string line-continuation), which must still
+                    // break the line so line numbers stay exact.
+                    code.push(' ');
+                    i += 1;
+                    if chars[i] != '\n' {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push(' ');
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr => {
+                let closes = c == '"'
+                    && i + hashes < n
+                    && chars[i + 1..i + 1 + hashes].iter().all(|&h| h == '#');
+                if closes {
+                    for _ in 0..=hashes {
+                        code.push(' ');
+                    }
+                    i += 1 + hashes;
+                    state = State::Normal;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Normal => {
+                let nxt = if i + 1 < n { chars[i + 1] } else { '\0' };
+                let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+                if c == '/' && nxt == '/' {
+                    state = State::LineComment;
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    state = State::Block;
+                    depth = 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal vs lifetime.
+                    if nxt == '\\' {
+                        // '\X…': the closing quote is the first ' at
+                        // index >= i+3 (covers '\'', '\\', '\u{…}').
+                        let mut j = i + 3;
+                        while j < n && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        for _ in i..(j + 1) {
+                            code.push(' ');
+                        }
+                        i = j + 1;
+                    } else if nxt != '\0' && nxt != '\'' && i + 2 < n && chars[i + 2] == '\'' {
+                        // Plain 'X' char literal.
+                        code.push_str("   ");
+                        i += 3;
+                    } else {
+                        // Lifetime quote ('a in types/bounds).
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    // Raw / byte string prefixes: r"…", r#"…"#, b"…",
+                    // br#"…"#, and byte-char b'x'.
+                    let isb = c == 'b';
+                    let mut j = i + 1;
+                    if isb && nxt == 'r' {
+                        j = i + 2;
+                    }
+                    let mut consumed = false;
+                    if !isb || nxt == 'r' {
+                        let mut h = 0usize;
+                        while j + h < n && chars[j + h] == '#' {
+                            h += 1;
+                        }
+                        if j + h < n && chars[j + h] == '"' {
+                            for _ in i..(j + h + 1) {
+                                code.push(' ');
+                            }
+                            i = j + h + 1;
+                            state = State::RawStr;
+                            hashes = h;
+                            consumed = true;
+                        }
+                    }
+                    if !consumed {
+                        if isb && nxt == '"' {
+                            code.push_str("  ");
+                            i += 2;
+                            state = State::Str;
+                        } else if isb && nxt == '\'' {
+                            // b'X': blank the b; the quote is handled next
+                            // round as a char literal.
+                            code.push(' ');
+                            i += 1;
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(Line { code, comment });
+    lines
+}
+
+/// Per-line flag: does the line start inside (or armed for) a
+/// `#[cfg(test)]` item? Armed means the attribute was seen and the next
+/// `{` opens the exempted region; a `;` before any `{` disarms (e.g.
+/// `#[cfg(test)] use …;`).
+pub fn test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut out = Vec::with_capacity(lines.len());
+    let mut depth: i64 = 0;
+    let mut stack: Vec<i64> = Vec::new();
+    let mut armed = false;
+    for line in lines {
+        out.push(!stack.is_empty() || armed);
+        if line.code.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        for ch in line.code.chars() {
+            if ch == '{' {
+                if armed {
+                    stack.push(depth);
+                    armed = false;
+                }
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+                if stack.last() == Some(&depth) {
+                    stack.pop();
+                }
+            } else if ch == ';' && armed {
+                armed = false;
+            }
+        }
+    }
+    out
+}
+
+/// Is a violation of `rule` on 0-based line `lineno` suppressed by a
+/// `pallas-lint: allow(…)` directive on that line or the line above?
+pub fn allows(lines: &[Line], lineno: usize, rule: &str) -> bool {
+    let lo = lineno.saturating_sub(1);
+    for line in &lines[lo..=lineno.min(lines.len() - 1)] {
+        let comment = &line.comment;
+        let Some(k) = comment.find("pallas-lint: allow(") else {
+            continue;
+        };
+        let rest = &comment[k + "pallas-lint: allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        if rest[..close].split(',').any(|s| s.trim() == rule) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Positions (char indices) where `pat` occurs in `line` with identifier
+/// boundaries on both sides — so `overlap_time` does not match inside
+/// `host_overlap_time`.
+pub fn ident_occurrences(line: &str, pat: &str) -> Vec<usize> {
+    let chars: Vec<char> = line.chars().collect();
+    let p: Vec<char> = pat.chars().collect();
+    let mut out = Vec::new();
+    if p.is_empty() || chars.len() < p.len() {
+        return out;
+    }
+    let mut k = 0usize;
+    while k + p.len() <= chars.len() {
+        if chars[k..k + p.len()] == p[..] {
+            let lb = k == 0 || !is_ident_char(chars[k - 1]);
+            let rb = k + p.len() == chars.len() || !is_ident_char(chars[k + p.len()]);
+            if lb && rb {
+                out.push(k);
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        scrub(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let c = codes("let x = \"HashMap\"; // HashMap here\nuse foo;");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("let x ="));
+        assert_eq!(c[1], "use foo;");
+        let l = scrub("x(); // pallas-lint: allow(float-eq)");
+        assert!(l[0].comment.contains("pallas-lint: allow(float-eq)"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        // Comment chars are captured as comment text, not kept in code
+        // (a separating space remains, so tokens never concatenate).
+        let c = codes("a /* x /* y */ z */ b");
+        assert_eq!(c[0], "a    b");
+        assert!(!c[0].contains('x') && !c[0].contains('z'));
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_count() {
+        let src = "let s = \"a\\\n   b\";\nnext();";
+        let c = codes(src);
+        assert_eq!(c.len(), 3, "continuation must still break lines");
+        assert_eq!(c[2], "next();");
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings() {
+        let c = codes("let r = r#\"as u64 == 0.0\"#; let b = b\"x\"; let br = br##\"y\"##;");
+        assert!(!c[0].contains("u64") && !c[0].contains("0.0"));
+        assert!(c[0].contains("let r =") && c[0].contains("let br ="));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let c = codes("fn f<'a>(x: &'a str) -> char { if y == '\"' { 'z' } else { '\\n' } }");
+        assert!(c[0].contains("-> char") && c[0].contains("if y =="));
+        assert!(!c[0].contains('z'));
+        // The quote inside the char literal must not open a string.
+        assert!(c[0].contains("else"));
+    }
+
+    #[test]
+    fn cfg_test_regions() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}";
+        let lines = scrub(src);
+        let t = test_regions(&lines);
+        assert_eq!(t, vec![false, false, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_on_use_item_disarms() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn a() {}";
+        let t = test_regions(&scrub(src));
+        assert!(!t[2], "a `;` before `{{` must disarm");
+    }
+
+    #[test]
+    fn allow_parses_multiple_rules_and_previous_line() {
+        let lines = scrub("// pallas-lint: allow(float-eq, unchecked-cast)\nx == 0.0;\ny;");
+        assert!(allows(&lines, 1, "float-eq"));
+        assert!(allows(&lines, 1, "unchecked-cast"));
+        assert!(!allows(&lines, 1, "panic-policy"));
+        assert!(!allows(&lines, 2, "float-eq"), "allow reaches one line only");
+    }
+
+    #[test]
+    fn ident_boundaries() {
+        assert_eq!(ident_occurrences("host_overlap_time + x", "overlap_time").len(), 0);
+        assert_eq!(ident_occurrences("overlap_time + overlap_time", "overlap_time").len(), 2);
+        assert_eq!(ident_occurrences("y as u64", "as").len(), 1);
+        assert_eq!(ident_occurrences("alias u64", "as").len(), 0);
+    }
+}

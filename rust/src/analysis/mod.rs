@@ -1,0 +1,163 @@
+//! `pallas-lint`: repo-native static analysis.
+//!
+//! A zero-dependency lexical linter enforcing six invariants that clippy
+//! cannot express (see `rules`): wall-clock leakage into virtual-clock
+//! code, unordered iteration, `PassRecord` lane-partition drift, unchecked
+//! numeric casts in accounting paths, panic policy in library hot paths,
+//! and float equality. Pre-existing violations live in a committed
+//! per-file-per-rule ratchet baseline (`lint-baseline.json`, see
+//! `baseline`): `pallas-lint --check` fails only when a count increases
+//! (or the baseline goes stale), so new code is held to the standard
+//! immediately while old debt burns down monotonically.
+//!
+//! Run it from the crate root:
+//!
+//! ```text
+//! cargo run --release --bin pallas-lint -- --check
+//! cargo run --release --bin pallas-lint -- --list
+//! cargo run --release --bin pallas-lint -- --update-baseline
+//! ```
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use baseline::{Baseline, CheckReport, Regression, BASELINE_FILE};
+pub use rules::{Rule, Violation};
+
+/// Crate subdirectories the linter scans.
+pub const SCAN_DIRS: &[&str] = &["src", "benches", "tests", "examples"];
+
+/// Directory name holding deliberate-violation fixtures, excluded from
+/// the default scan.
+pub const FIXTURE_DIR: &str = "lint_fixtures";
+
+/// Per-file, per-rule violation counts (the ratchet currency).
+pub type Counts = BTreeMap<String, BTreeMap<String, usize>>;
+
+/// All `.rs` files under `root`'s scan dirs, sorted, fixtures excluded.
+pub fn collect_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for sub in SCAN_DIRS {
+        let base = root.join(sub);
+        if base.is_dir() {
+            walk(&base, &mut out)?;
+        }
+    }
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == FIXTURE_DIR) {
+                continue;
+            }
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `file` relative to `root`, with forward slashes (rule scopes match on
+/// these paths).
+pub fn rel_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Scan one file's source text, applying every rule in its scope and
+/// filtering out violations suppressed by allow directives.
+pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
+    let lines = lexer::scrub(src);
+    let in_test = lexer::test_regions(&lines);
+    let mut raw: Vec<(usize, Rule, String)> = Vec::new();
+
+    let det = rules::in_modules(rel, rules::DET_MODULES);
+    let cast = rules::in_modules(rel, rules::CAST_MODULES);
+    let panic_scope = rules::in_modules(rel, rules::PANIC_MODULES);
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if det {
+            for pat in ["Instant::now", "SystemTime::now"] {
+                for _ in lexer::ident_occurrences(code, pat) {
+                    raw.push((idx, Rule::WallClockInSim, pat.to_string()));
+                }
+            }
+        }
+        if det || rel.starts_with("tests/") {
+            for pat in ["HashMap", "HashSet"] {
+                for _ in lexer::ident_occurrences(code, pat) {
+                    raw.push((idx, Rule::UnorderedIteration, pat.to_string()));
+                }
+            }
+        }
+        if cast && !in_test[idx] {
+            for _ in 0..rules::cast_sites(code) {
+                raw.push((idx, Rule::UncheckedCast, "as".to_string()));
+            }
+        }
+        if panic_scope && !in_test[idx] {
+            for pat in [".unwrap()", ".expect("] {
+                let mut start = 0usize;
+                while let Some(k) = code[start..].find(pat) {
+                    raw.push((idx, Rule::PanicPolicy, pat.to_string()));
+                    start += k + 1;
+                }
+            }
+        }
+        if rel.starts_with("src/") && !in_test[idx] {
+            for _ in rules::float_eq_positions(code) {
+                raw.push((idx, Rule::FloatEq, "==/!= on float".to_string()));
+            }
+        }
+    }
+    for (idx, name, missing) in rules::lane_partition(&lines) {
+        raw.push((idx, Rule::LanePartition, format!("{name} missing from {missing}")));
+    }
+
+    raw.into_iter()
+        .filter(|&(idx, rule, _)| !lexer::allows(&lines, idx, rule.name()))
+        .map(|(idx, rule, detail)| Violation {
+            file: rel.to_string(),
+            line: idx + 1,
+            rule,
+            detail,
+        })
+        .collect()
+}
+
+/// Scan the whole crate tree under `root`.
+pub fn scan_root(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut all = Vec::new();
+    for file in collect_files(root)? {
+        let src = fs::read_to_string(&file)?;
+        let rel = rel_path(root, &file);
+        all.extend(scan_source(&rel, &src));
+    }
+    Ok(all)
+}
+
+/// Aggregate violations into the per-file-per-rule ratchet counts.
+pub fn counts(violations: &[Violation]) -> Counts {
+    let mut out = Counts::new();
+    for v in violations {
+        *out.entry(v.file.clone())
+            .or_default()
+            .entry(v.rule.name().to_string())
+            .or_insert(0) += 1;
+    }
+    out
+}

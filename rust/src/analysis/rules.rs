@@ -1,0 +1,400 @@
+//! The six repo-specific lint rules and their detection logic.
+//!
+//! Each rule encodes an invariant the ROADMAP's engine/simulator/cost-model
+//! agreement rests on; see the README's "Static analysis & invariants"
+//! section for the rationale and the per-rule scopes.
+
+use super::lexer::{ident_occurrences, is_ident_char, Line};
+
+/// A lint rule. Names are the stable identifiers used in allow
+/// directives and the ratchet baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `Instant::now` / `SystemTime::now` in virtual-clock modules.
+    WallClockInSim,
+    /// `HashMap` / `HashSet` in deterministic modules or tests.
+    UnorderedIteration,
+    /// A `pub *_time: f64` lane on `PassRecord` missing from
+    /// `lanes_total()` or `to_csv()`.
+    LanePartition,
+    /// `as u64` / `as usize` / `as f64` in accounting modules.
+    UncheckedCast,
+    /// `.unwrap()` / `.expect(` in library hot paths outside tests.
+    PanicPolicy,
+    /// Direct `==` / `!=` against a float literal.
+    FloatEq,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::WallClockInSim,
+        Rule::UnorderedIteration,
+        Rule::LanePartition,
+        Rule::UncheckedCast,
+        Rule::PanicPolicy,
+        Rule::FloatEq,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::WallClockInSim => "wall-clock-in-sim",
+            Rule::UnorderedIteration => "unordered-iteration",
+            Rule::LanePartition => "lane-partition",
+            Rule::UncheckedCast => "unchecked-cast",
+            Rule::PanicPolicy => "panic-policy",
+            Rule::FloatEq => "float-eq",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.name() == name)
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the crate root, forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    /// What matched (pattern or field name).
+    pub detail: String,
+}
+
+/// Modules whose time must be virtual/replayable (wall-clock and
+/// unordered-iteration scope).
+pub const DET_MODULES: &[&str] =
+    &["simhw", "perfmodel", "baselines", "sched", "kvcache", "workload"];
+/// Accounting / cost-model modules (unchecked-cast scope).
+pub const CAST_MODULES: &[&str] = &["metrics", "perfmodel", "simhw", "sched", "kvcache"];
+/// Library hot paths (panic-policy scope).
+pub const PANIC_MODULES: &[&str] = &["engine", "sched", "kvcache", "transfer"];
+
+/// Does `rel` (crate-relative path) live in one of `modules` under src/?
+pub fn in_modules(rel: &str, modules: &[&str]) -> bool {
+    modules.iter().any(|m| {
+        let file = format!("src/{m}.rs");
+        let dir = format!("src/{m}/");
+        rel == file || rel.starts_with(&dir)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// float-eq
+// ---------------------------------------------------------------------------
+
+/// The (possibly dotted) token ending just left of char position `pos`.
+fn token_left(chars: &[char], pos: usize) -> String {
+    let mut j = pos;
+    while j > 0 && chars[j - 1] == ' ' {
+        j -= 1;
+    }
+    let mut k = j;
+    while k > 0 && (is_ident_char(chars[k - 1]) || chars[k - 1] == '.') {
+        k -= 1;
+    }
+    chars[k..j].iter().collect()
+}
+
+/// The (possibly signed, dotted) token starting just right of `pos`.
+fn token_right(chars: &[char], pos: usize) -> String {
+    let mut j = pos;
+    while j < chars.len() && chars[j] == ' ' {
+        j += 1;
+    }
+    let mut k = j;
+    if k < chars.len() && (chars[k] == '+' || chars[k] == '-') {
+        k += 1;
+    }
+    while k < chars.len() && (is_ident_char(chars[k]) || chars[k] == '.') {
+        k += 1;
+    }
+    chars[j..k].iter().collect()
+}
+
+/// Is `tok` a float literal (`0.0`, `1e-9`, `2.5f64`, `-1.0`, `9e15`)?
+fn is_float_lit(tok: &str) -> bool {
+    let mut t = tok;
+    if let Some(s) = t.strip_prefix('+').or_else(|| t.strip_prefix('-')) {
+        t = s;
+    }
+    let no_sep = t.replace('_', "");
+    let mut t = no_sep.as_str();
+    for suf in ["f64", "f32"] {
+        if let Some(s) = t.strip_suffix(suf) {
+            t = s;
+            break;
+        }
+    }
+    let Some(first) = t.chars().next() else {
+        return false;
+    };
+    if !first.is_ascii_digit() {
+        return false;
+    }
+    if !t.contains('.') && !t.contains('e') && !t.contains('E') {
+        return false;
+    }
+    t.parse::<f64>().is_ok()
+}
+
+/// Char positions of `==` / `!=` operators whose left or right operand is
+/// a float literal. `<=`, `>=`, and pattern `=>`s never match; `==` runs
+/// (`===`) are skipped defensively.
+pub fn float_eq_positions(code: &str) -> Vec<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < n {
+        let (a, b) = (chars[i], chars[i + 1]);
+        if a == '=' && b == '=' {
+            if i > 0 && matches!(chars[i - 1], '<' | '>' | '!' | '=') {
+                i += 1;
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '=' {
+                i += 3;
+                continue;
+            }
+        } else if a == '!' && b == '=' {
+            if i + 2 < n && chars[i + 2] == '=' {
+                i += 3;
+                continue;
+            }
+        } else {
+            i += 1;
+            continue;
+        }
+        let lt = token_left(&chars, i);
+        let rt = token_right(&chars, i + 2);
+        if is_float_lit(&lt) || is_float_lit(&rt) {
+            out.push(i);
+        }
+        i += 2;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// unchecked-cast
+// ---------------------------------------------------------------------------
+
+/// Count `as u64` / `as usize` / `as f64` cast sites on a scrubbed line.
+pub fn cast_sites(code: &str) -> usize {
+    let chars: Vec<char> = code.chars().collect();
+    ident_occurrences(code, "as")
+        .into_iter()
+        .filter(|&k| {
+            let ty = token_right(&chars, k + 2);
+            matches!(ty.as_str(), "u64" | "usize" | "f64")
+        })
+        .count()
+}
+
+// ---------------------------------------------------------------------------
+// lane-partition
+// ---------------------------------------------------------------------------
+
+/// Code text of `fn name`'s brace-matched body (signature line included),
+/// or None if the file does not define it.
+fn find_fn_body(lines: &[Line], name: &str) -> Option<String> {
+    let mut sig = None;
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if ident_occurrences(code, "fn").is_empty() || ident_occurrences(code, name).is_empty() {
+            continue;
+        }
+        if let Some(kfn) = code.find("fn ") {
+            if code[kfn..].find(name).is_some_and(|off| off > 0) {
+                sig = Some(idx);
+                break;
+            }
+        }
+    }
+    let sig = sig?;
+    let mut body = String::new();
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for line in &lines[sig..] {
+        for ch in line.code.chars() {
+            if ch == '{' {
+                depth += 1;
+                opened = true;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+        }
+        body.push_str(&line.code);
+        body.push(' ');
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    Some(body)
+}
+
+/// Lane-partition violations: every `pub *_time: f64` field declared on a
+/// `PassRecord` struct in this file must appear in both `lanes_total()`
+/// and `to_csv()`. Returns (0-based field line, field name, missing-from).
+pub fn lane_partition(lines: &[Line]) -> Vec<(usize, String, &'static str)> {
+    let mut start = None;
+    for (idx, line) in lines.iter().enumerate() {
+        let t = line.code.trim();
+        let tail = if let Some(r) = t.strip_prefix("pub struct PassRecord") {
+            r
+        } else if let Some(r) = t.strip_prefix("struct PassRecord") {
+            r
+        } else {
+            continue;
+        };
+        // Reject PassRecordFoo etc.
+        if tail.chars().next().is_none_or(|c| !is_ident_char(c)) {
+            start = Some(idx);
+            break;
+        }
+    }
+    let Some(start) = start else {
+        return Vec::new();
+    };
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    let mut fields: Vec<(usize, String)> = Vec::new();
+    for (off, line) in lines[start..].iter().enumerate() {
+        let t = line.code.trim();
+        if opened && depth == 1 && t.starts_with("pub ") {
+            if let Some(colon) = t.find(':') {
+                let name = t[4..colon].trim().to_string();
+                let ty = &t[colon + 1..];
+                if name.ends_with("_time") && !ident_occurrences(ty, "f64").is_empty() {
+                    fields.push((start + off, name));
+                }
+            }
+        }
+        for ch in line.code.chars() {
+            if ch == '{' {
+                depth += 1;
+                opened = true;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    let lanes = find_fn_body(lines, "lanes_total");
+    let csv = find_fn_body(lines, "to_csv");
+    let mut out = Vec::new();
+    for (idx, name) in fields {
+        let in_lanes = lanes
+            .as_deref()
+            .is_some_and(|b| !ident_occurrences(b, &name).is_empty());
+        if !in_lanes {
+            out.push((idx, name.clone(), "lanes_total"));
+        }
+        let in_csv = csv
+            .as_deref()
+            .is_some_and(|b| !ident_occurrences(b, &name).is_empty());
+        if !in_csv {
+            out.push((idx, name, "to_csv"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::scrub;
+
+    #[test]
+    fn rule_names_round_trip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::from_name(r.name()), Some(r));
+        }
+        assert_eq!(Rule::from_name("nope"), None);
+    }
+
+    #[test]
+    fn module_scoping() {
+        assert!(in_modules("src/sched/policy.rs", DET_MODULES));
+        assert!(in_modules("src/simhw.rs", DET_MODULES));
+        assert!(!in_modules("src/schedx/policy.rs", DET_MODULES));
+        assert!(!in_modules("src/engine/batch.rs", DET_MODULES));
+        assert!(!in_modules("benches/sched/x.rs", DET_MODULES));
+    }
+
+    #[test]
+    fn float_eq_detection() {
+        assert_eq!(float_eq_positions("if t == 0.0 {").len(), 1);
+        assert_eq!(float_eq_positions("x != 0.5").len(), 1);
+        assert_eq!(float_eq_positions("x == 9e15").len(), 1);
+        assert_eq!(float_eq_positions("x == 2.5f64").len(), 1);
+        // Known hole: a negative exponent stops the token scan ("1e" is
+        // not a float literal), so `!= 1e-9` slips through.
+        assert_eq!(float_eq_positions("x != 1e-9").len(), 0);
+        assert_eq!(float_eq_positions("n == 0").len(), 0, "integer compare");
+        assert_eq!(float_eq_positions("t <= 0.0 || t >= 1.0").len(), 0);
+        assert_eq!(float_eq_positions("(a - b).abs() < 1e-9").len(), 0);
+        assert_eq!(float_eq_positions("match x { 0.5 => 1, _ => 0 }").len(), 0);
+        assert_eq!(float_eq_positions("0.0 == x").len(), 1, "literal on the left");
+    }
+
+    #[test]
+    fn cast_detection() {
+        assert_eq!(cast_sites("let x = n as f64 / m as f64;"), 2);
+        assert_eq!(cast_sites("let x = n as u32;"), 0, "widening to u32 not flagged");
+        assert_eq!(cast_sites("let y = b as usize + 1;"), 1);
+        assert_eq!(cast_sites("alias u64"), 0, "ident boundary");
+    }
+
+    #[test]
+    fn lane_partition_flags_drift() {
+        let src = "\
+pub struct PassRecord {
+    pub io_time: f64,
+    pub gpu_time: f64,
+    pub count: usize,
+}
+impl PassRecord {
+    pub fn lanes_total(&self) -> f64 { self.io_time }
+    pub fn to_csv(&self) -> String { format!(\"{}\", self.io_time) }
+}
+";
+        let v = lane_partition(&scrub(src));
+        // gpu_time missing from both; io_time fine; count not a lane.
+        assert_eq!(v.len(), 2);
+        assert!(v.iter().all(|(_, name, _)| name == "gpu_time"));
+        let missing: Vec<&str> = v.iter().map(|(_, _, m)| *m).collect();
+        assert!(missing.contains(&"lanes_total") && missing.contains(&"to_csv"));
+    }
+
+    #[test]
+    fn lane_partition_ident_boundary() {
+        // A shadow lane whose name embeds a real lane's name must not
+        // borrow that lane's membership.
+        let src = "\
+pub struct PassRecord {
+    pub overlap_time: f64,
+    pub host_overlap_time: f64,
+}
+impl PassRecord {
+    pub fn lanes_total(&self) -> f64 { self.overlap_time + self.host_overlap_time }
+    pub fn to_csv(&self) -> String { format!(\"{}\", self.host_overlap_time) }
+}
+";
+        let v = lane_partition(&scrub(src));
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].1, "overlap_time");
+        assert_eq!(v[0].2, "to_csv");
+    }
+
+    #[test]
+    fn no_passrecord_no_findings() {
+        assert!(lane_partition(&scrub("pub struct Other { pub t_time: f64 }")).is_empty());
+        assert!(lane_partition(&scrub("pub struct PassRecordX { pub a_time: f64 }")).is_empty());
+    }
+}

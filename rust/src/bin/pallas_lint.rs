@@ -1,0 +1,163 @@
+//! `pallas-lint` — repo-native static analysis with a ratchet baseline.
+//!
+//! Scans `src/`, `benches/`, `tests/`, and `examples/` for violations of
+//! the six repo-specific rules (see `moe_lens::analysis`) and compares
+//! the per-file-per-rule counts against the committed
+//! `lint-baseline.json`.
+//!
+//! Modes:
+//! - `--check` (default): exit nonzero if any count increased over the
+//!   baseline, or if the baseline is stale (counts above actual).
+//! - `--list`: print every current violation (baselined or not).
+//! - `--update-baseline`: rewrite the baseline from the actual counts,
+//!   refusing to raise any entry.
+//! - `--root <dir>`: crate root to scan (defaults to
+//!   `$CARGO_MANIFEST_DIR`, which `cargo run` sets, then `.`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use moe_lens::analysis::{self, Baseline, Regression, Violation};
+
+enum Mode {
+    Check,
+    List,
+    Update,
+}
+
+fn usage() {
+    eprintln!(
+        "usage: pallas-lint [--check | --list | --update-baseline] [--root <dir>]\n\
+         see the README's \"Static analysis & invariants\" section"
+    );
+}
+
+fn main() -> ExitCode {
+    let mut mode = Mode::Check;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => mode = Mode::Check,
+            "--list" => mode = Mode::List,
+            "--update-baseline" => mode = Mode::Update,
+            "--root" => match args.next() {
+                Some(dir) => root = Some(PathBuf::from(dir)),
+                None => {
+                    eprintln!("pallas-lint: --root needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                usage();
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("pallas-lint: unknown argument '{other}'");
+                usage();
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root
+        .or_else(|| std::env::var_os("CARGO_MANIFEST_DIR").map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("."));
+
+    let violations = match analysis::scan_root(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("pallas-lint: scan failed under {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let actual = analysis::counts(&violations);
+    let baseline_path = root.join(analysis::BASELINE_FILE);
+
+    match mode {
+        Mode::List => {
+            for v in &violations {
+                println!("{}:{}: {} ({})", v.file, v.line, v.rule.name(), v.detail);
+            }
+            println!("{} violation(s) in {} file(s)", violations.len(), actual.len());
+            ExitCode::SUCCESS
+        }
+        Mode::Update => {
+            let old = if baseline_path.is_file() {
+                match Baseline::load(&baseline_path) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!("pallas-lint: {e}");
+                        return ExitCode::from(2);
+                    }
+                }
+            } else {
+                Baseline::default()
+            };
+            match old.updated(&actual) {
+                Ok(new) => {
+                    if let Err(e) = std::fs::write(&baseline_path, new.to_pretty_json()) {
+                        eprintln!("pallas-lint: cannot write {}: {e}", baseline_path.display());
+                        return ExitCode::from(2);
+                    }
+                    println!(
+                        "pallas-lint: baseline refreshed ({} violation(s) across {} file(s))",
+                        new.total(),
+                        new.files.len()
+                    );
+                    ExitCode::SUCCESS
+                }
+                Err(raised) => {
+                    eprintln!("pallas-lint: refusing to raise baseline counts:");
+                    print_deltas(&raised, &violations);
+                    eprintln!("fix the new violations or suppress each site with");
+                    eprintln!("`// pallas-lint: allow(<rule>)`, then rerun");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        Mode::Check => {
+            let base = match Baseline::load(&baseline_path) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("pallas-lint: {e}");
+                    eprintln!("run `cargo run --bin pallas-lint -- --update-baseline` to create it");
+                    return ExitCode::from(2);
+                }
+            };
+            let report = base.check(&actual);
+            if report.is_clean() {
+                println!(
+                    "pallas-lint: clean ({} baselined violation(s) across {} file(s))",
+                    base.total(),
+                    base.files.len()
+                );
+                return ExitCode::SUCCESS;
+            }
+            if !report.regressions.is_empty() {
+                eprintln!("pallas-lint: new violations over the baseline:");
+                print_deltas(&report.regressions, &violations);
+            }
+            if !report.stale.is_empty() {
+                eprintln!("pallas-lint: stale baseline (counts above actual — debt paid down):");
+                for r in &report.stale {
+                    let (f, ru) = (&r.file, &r.rule);
+                    eprintln!("  {f} / {ru}: baseline {}, actual {}", r.baseline, r.actual);
+                }
+                eprintln!("run `cargo run --bin pallas-lint -- --update-baseline` to refresh");
+            }
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Print each raised (file, rule) pair with its current violation sites.
+fn print_deltas(deltas: &[Regression], violations: &[Violation]) {
+    for d in deltas {
+        eprintln!("  {} / {}: baseline {}, actual {}", d.file, d.rule, d.baseline, d.actual);
+        for v in violations {
+            if v.file == d.file && v.rule.name() == d.rule {
+                eprintln!("    {}:{}: {}", v.file, v.line, v.detail);
+            }
+        }
+    }
+}

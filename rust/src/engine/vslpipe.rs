@@ -747,7 +747,8 @@ impl ServingEngine {
             // FIFO never sheds, so an empty speculative plan means the
             // clone drained — and the prediction matching means the real
             // scheduler just drained identically. Nothing to prepare.
-            debug_assert!(self.sched.is_done(), "empty FIFO plan implies drained scheduler");
+            // Always-on: a desynced clone here would stall the run.
+            assert!(self.sched.is_done(), "empty FIFO plan implies drained scheduler");
             return true;
         }
         let token_of: BTreeMap<SeqId, i32> = tokens.iter().copied().collect();
@@ -1113,7 +1114,9 @@ impl ServingEngine {
         times: &mut PassTimes,
     ) -> Result<Vec<(SeqId, i32)>> {
         let rc = &self.pjrt.config;
-        debug_assert_eq!(self.embedding.len(), rc.vocab * rc.d_model);
+        // Always-on (once per pass): a mis-sized table misattributes every
+        // token the head yields.
+        assert_eq!(self.embedding.len(), rc.vocab * rc.d_model);
         let mut tokens: Vec<(SeqId, i32)> = Vec::new();
         let clock = Stopwatch::start();
         for (bi, b) in buckets.iter().enumerate() {
@@ -1130,7 +1133,9 @@ impl ServingEngine {
                 ])
                 .context("head")?;
             let ids = to_i32(&outs[0])?;
-            debug_assert_eq!(ids.len(), rc.n_tok);
+            // Always-on (once per bucket): short output would pair rows
+            // with the wrong sequences below.
+            assert_eq!(ids.len(), rc.n_tok);
             for (ri, row) in b.rows.iter().enumerate() {
                 if row.yields {
                     tokens.push((row.seq, ids[ri]));

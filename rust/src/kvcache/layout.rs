@@ -79,7 +79,11 @@ impl BlockAllocator {
     }
 
     pub fn release(&mut self, block: u32) {
-        debug_assert!((block as usize) < self.layout.n_blocks);
+        // A foreign block id corrupts every later alloc, so the bounds
+        // check stays on in release builds (one compare per released
+        // block). The double-free scan is O(free-list) and release runs
+        // per block per finished sequence, so it stays debug-only.
+        assert!((block as usize) < self.layout.n_blocks);
         debug_assert!(!self.free.contains(&block), "double free of block {block}");
         self.free.push(block);
     }
@@ -96,6 +100,8 @@ pub struct PageTable {
 impl PageTable {
     /// (block, slot) coordinate of token `t`.
     pub fn locate(&self, t: usize, block_size: usize) -> (u32, usize) {
+        // Hot per-token path: debug-only by design (the block index below
+        // still bounds-checks in release).
         debug_assert!(t < self.len);
         (self.blocks[t / block_size], t % block_size)
     }

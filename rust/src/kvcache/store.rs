@@ -56,7 +56,9 @@ impl PagedKvCache {
     /// stay consistent — data written under the old layout remains
     /// addressable wherever the new layout kept the page tables.
     pub fn replace_layout(&mut self, layout: PagedLayout) -> PagedLayout {
-        debug_assert_eq!(layout.layout(), self.layout.layout(), "geometry must match");
+        // Always-on: once per committed pass, and a geometry mismatch
+        // would silently misaddress every pool access afterwards.
+        assert_eq!(layout.layout(), self.layout.layout(), "geometry must match");
         std::mem::replace(&mut self.layout, layout)
     }
 

@@ -7,6 +7,7 @@
 //! CPU decode attention, and the PJRT runtime that executes the AOT-lowered
 //! Layer-1/2 artifacts. See DESIGN.md for the system inventory.
 
+pub mod analysis;
 pub mod baselines;
 pub mod config;
 pub mod cpuattn;

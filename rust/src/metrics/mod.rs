@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use crate::kvcache::SeqId;
 use crate::sched::DropReason;
+use crate::util::cast::{f64_usize, usize_f64};
 use crate::util::stats::percentile;
 
 /// One inference pass (forward iteration) of the pipeline.
@@ -71,7 +72,7 @@ pub struct PassRecord {
     ///
     /// [`lanes_total`]: Self::lanes_total
     /// [`host_busy`]: Self::host_busy
-    pub host_overlap_time: f64,
+    pub host_overlap_time: f64, // pallas-lint: allow(lane-partition) — shadow of partitioned time
     /// KV blocks in use at pass end.
     pub kv_blocks_used: usize,
     /// Active decode sequences at pass end.
@@ -124,8 +125,9 @@ impl Trace {
         // Pass end times must never regress: zero-duration bookkeeping
         // passes (SLO shed-only records) stamp the *planning* instant, so
         // they sit between their neighbors and the Fig.-13 series stays
-        // monotone.
-        debug_assert!(
+        // monotone. Always-on: once per pass, and a regressed timestamp
+        // silently corrupts every downstream time series.
+        assert!(
             self.passes.last().is_none_or(|p| rec.t_end >= p.t_end),
             "pass {} t_end {} regresses below previous {}",
             rec.pass_id,
@@ -160,20 +162,20 @@ impl Trace {
     /// Generation throughput: generated tokens per second (Fig. 11).
     pub fn generation_throughput(&self) -> f64 {
         let t = self.wall_secs();
-        if t == 0.0 {
-            0.0
+        if t > 0.0 {
+            usize_f64(self.total_generated()) / t
         } else {
-            self.total_generated() as f64 / t
+            0.0
         }
     }
 
     /// Processed-token throughput (prefill + decode).
     pub fn processed_throughput(&self) -> f64 {
         let t = self.wall_secs();
-        if t == 0.0 {
-            0.0
+        if t > 0.0 {
+            usize_f64(self.total_decode_tokens() + self.total_prefill_tokens()) / t
         } else {
-            (self.total_decode_tokens() + self.total_prefill_tokens()) as f64 / t
+            0.0
         }
     }
 
@@ -185,10 +187,10 @@ impl Trace {
         }
         let busy: f64 = self.passes.iter().map(|p| p.gpu_busy()).sum();
         let total: f64 = self.passes.iter().map(|p| p.duration).sum();
-        if total == 0.0 {
-            0.0
-        } else {
+        if total > 0.0 {
             busy / total
+        } else {
+            0.0
         }
     }
 
@@ -213,10 +215,10 @@ impl Trace {
         // n evenly spaced samples, pinned to the first and last pass.
         // len > n ⇒ the stride ratio exceeds 1, so rounded indices are
         // strictly increasing (no duplicates).
-        let ratio = (len - 1) as f64 / (n - 1) as f64;
+        let ratio = usize_f64(len - 1) / usize_f64(n - 1);
         (0..n)
             .map(|i| {
-                let p = &self.passes[(i as f64 * ratio).round() as usize];
+                let p = &self.passes[f64_usize((usize_f64(i) * ratio).round())];
                 (p.t_end, f(p))
             })
             .collect()
@@ -354,10 +356,13 @@ impl RequestTracker {
         }
     }
 
-    /// Record request completion at time `t`.
+    /// Record request completion at time `t`. A double finish or a drop
+    /// of a finished request would corrupt the completion counts feeding
+    /// goodput, so these guards stay on in release builds (once per
+    /// request lifecycle — cold, like `arrived`).
     pub fn finished(&mut self, id: SeqId, t: f64) {
         let r = self.timings.get_mut(&id).expect("finish for untracked request");
-        debug_assert!(r.finish.is_none(), "request {id} finished twice");
+        assert!(r.finish.is_none(), "request {id} finished twice");
         r.finish = Some(t);
     }
 
@@ -365,8 +370,8 @@ impl RequestTracker {
     /// `t` (it will never finish).
     pub fn dropped(&mut self, id: SeqId, t: f64, reason: DropReason) {
         let r = self.timings.get_mut(&id).expect("drop for untracked request");
-        debug_assert!(r.finish.is_none(), "request {id} dropped after finishing");
-        debug_assert!(r.dropped.is_none(), "request {id} dropped twice");
+        assert!(r.finish.is_none(), "request {id} dropped after finishing");
+        assert!(r.dropped.is_none(), "request {id} dropped twice");
         r.dropped = Some((t, reason));
     }
 
@@ -402,7 +407,7 @@ impl RequestTracker {
             e2e.push(e);
             // TPOT is defined over the decode gaps, so it needs >= 2 tokens.
             if r.generated >= 2 {
-                tpot.push((fin - first) / (r.generated - 1) as f64);
+                tpot.push((fin - first) / usize_f64(r.generated - 1));
             }
             if e <= slo_e2e {
                 within_slo += 1;
@@ -419,7 +424,7 @@ impl RequestTracker {
             tpot_p99: percentile(&tpot, 0.99),
             e2e_p50: percentile(&e2e, 0.50),
             e2e_p99: percentile(&e2e, 0.99),
-            goodput_rps: if wall_secs > 0.0 { within_slo as f64 / wall_secs } else { 0.0 },
+            goodput_rps: if wall_secs > 0.0 { usize_f64(within_slo) / wall_secs } else { 0.0 },
             slo_e2e,
         }
     }
@@ -647,7 +652,6 @@ mod tests {
     }
 
     #[test]
-    #[cfg(debug_assertions)]
     #[should_panic(expected = "regresses below previous")]
     fn regressed_pass_timestamps_are_rejected() {
         let mut tr = Trace::new(10);

@@ -10,6 +10,7 @@
 //! (Table 1: 52% / 56% / 35% utilization).
 
 use crate::config::{MachineSpec, ModelSpec};
+use crate::util::cast::{f64_usize, u64_f64, u64_usize, usize_f64, usize_u64};
 
 /// HRM-style roofline over one (machine, model) pair.
 #[derive(Debug, Clone)]
@@ -60,15 +61,16 @@ impl HrmModel {
     /// (weight IO, GPU GEMM, CPU attention at the baseline's efficiency).
     pub fn decode_iter_secs(&self, n: usize, ctx: usize) -> f64 {
         let io = self.delta();
-        let gpu = n as f64 * self.model.flops_per_token() / self.machine.gpu.bf16_flops;
-        let kv_bytes = n as f64 * ctx as f64 * self.model.kv_bytes_per_token() as f64;
+        let gpu = usize_f64(n) * self.model.flops_per_token() / self.machine.gpu.bf16_flops;
+        let kv_bytes =
+            usize_f64(n) * usize_f64(ctx) * u64_f64(self.model.kv_bytes_per_token());
         let cpu = kv_bytes / (self.machine.host.mem_bw * self.cpu_attn_efficiency);
         io.max(gpu).max(cpu)
     }
 
     /// Decode throughput (tokens/s) for `n` sequences at context `ctx`.
     pub fn decode_throughput(&self, n: usize, ctx: usize) -> f64 {
-        n as f64 / self.decode_iter_secs(n, ctx)
+        usize_f64(n) / self.decode_iter_secs(n, ctx)
     }
 
     /// Decode-iteration time with host-side planning/packing overhead
@@ -116,7 +118,7 @@ impl HrmModel {
         let mut n = 64usize;
         let mut best = self.decode_throughput(n, ctx_avg);
         loop {
-            let next = (n as f64 * 1.25).ceil() as usize;
+            let next = f64_usize((usize_f64(n) * 1.25).ceil());
             let t = self.decode_throughput(next, ctx_avg);
             if t < best * (1.0 + plateau_tol) {
                 break;
@@ -131,32 +133,32 @@ impl HrmModel {
         // 1-sequence plan (so `decode_throughput` stays finite and nonzero
         // downstream), with the infeasibility visible via
         // [`HrmPlan::fits_in`].
-        let kv_per_seq = ctx_peak as u64 * self.model.kv_bytes_per_token();
+        let kv_per_seq = usize_u64(ctx_peak) * self.model.kv_bytes_per_token();
         let weights = self.model.model_bytes();
-        if weights + n as u64 * kv_per_seq > cpu_mem_bytes {
-            n = (cpu_mem_bytes.saturating_sub(weights) / kv_per_seq).max(1) as usize;
+        if weights + usize_u64(n) * kv_per_seq > cpu_mem_bytes {
+            n = u64_usize((cpu_mem_bytes.saturating_sub(weights) / kv_per_seq).max(1));
         }
 
         // Prefill micro-batch: compute-bound, sized to cover the per-layer
         // weight transfer (HRM's pipelining condition).
         let layer_io = self.machine.transfer_secs(self.model.layer_bytes());
         let flops_per_tok_layer =
-            self.model.flops_per_token() / self.model.n_layers as f64;
+            self.model.flops_per_token() / usize_f64(self.model.n_layers);
         let prefill_tokens =
-            (layer_io * self.machine.gpu.bf16_flops / flops_per_tok_layer) as usize;
+            f64_usize(layer_io * self.machine.gpu.bf16_flops / flops_per_tok_layer);
 
         HrmPlan {
             decode_seqs: n,
             prefill_tokens,
             decode_iter_secs: self.decode_iter_secs(n, ctx_avg),
-            cpu_mem_used: weights + n as u64 * kv_per_seq,
+            cpu_mem_used: weights + usize_u64(n) * kv_per_seq,
         }
     }
 
     /// Table 1's metric: fraction of the machine's CPU memory the plan
     /// commits.
     pub fn cpu_mem_utilization(&self, plan: &HrmPlan, cpu_mem_bytes: u64) -> f64 {
-        plan.cpu_mem_used as f64 / cpu_mem_bytes as f64
+        u64_f64(plan.cpu_mem_used) / u64_f64(cpu_mem_bytes)
     }
 
     /// MoE-Lightning's *published* execution plans for the Table-1
@@ -173,13 +175,13 @@ impl HrmModel {
             (926, 128) => 400,
             _ => return None,
         };
-        let ctx_peak = (p + g) as u64;
+        let ctx_peak = usize_u64(p + g);
         Some(HrmPlan {
             decode_seqs: gbs,
             prefill_tokens: self.plan(p, g, u64::MAX).prefill_tokens,
             decode_iter_secs: self.decode_iter_secs(gbs, p + g / 2),
             cpu_mem_used: self.model.model_bytes()
-                + gbs as u64 * ctx_peak * self.model.kv_bytes_per_token(),
+                + usize_u64(gbs) * ctx_peak * self.model.kv_bytes_per_token(),
         })
     }
 
@@ -200,7 +202,7 @@ impl HrmModel {
             return None;
         }
         let kv_used = plan.cpu_mem_used.saturating_sub(self.model.model_bytes());
-        Some(kv_used as f64 / kv_capacity as f64)
+        Some(u64_f64(kv_used) / u64_f64(kv_capacity))
     }
 
     /// End-to-end generation throughput of the *two-phase* (no-overlap)
@@ -211,15 +213,15 @@ impl HrmModel {
         let n = plan.decode_seqs.max(1);
         // Prefill: n·p tokens at the GPU-or-IO-bound rate.
         let gpu_rate = self.machine.gpu.bf16_flops / self.model.flops_per_token();
-        let io_rate_tokens = plan.prefill_tokens as f64
+        let io_rate_tokens = usize_f64(plan.prefill_tokens)
             / self.machine.transfer_secs(self.model.model_bytes());
-        let prefill_secs = n as f64 * p as f64 / gpu_rate.min(io_rate_tokens).max(1.0);
+        let prefill_secs = usize_f64(n) * usize_f64(p) / gpu_rate.min(io_rate_tokens).max(1.0);
         // Decode: g iterations, each a full weight sweep (or worse).
         let mut decode_secs = 0.0;
         for step in 0..g {
             decode_secs += self.decode_iter_secs(n, p + step);
         }
-        n as f64 * g as f64 / (prefill_secs + decode_secs)
+        usize_f64(n) * usize_f64(g) / (prefill_secs + decode_secs)
     }
 }
 

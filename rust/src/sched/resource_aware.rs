@@ -400,7 +400,9 @@ impl Scheduler {
                 break; // FIFO: nothing behind a blocked head may jump it
             }
             let chunk = seq.pending_prefill().min(self.cfg.max_chunk).min(budget);
-            debug_assert!(chunk > 0);
+            // Always-on: a zero chunk here means a done sequence sat in the
+            // prefill queue — scheduling it would spin the pass loop forever.
+            assert!(chunk > 0);
             if self.cfg.atomic_prefill && chunk < seq.pending_prefill() {
                 assert!(
                     seq.pending_prefill() <= self.cfg.max_chunk,
@@ -521,7 +523,9 @@ impl Scheduler {
     /// [`complete_speculative`]: Self::complete_speculative
     /// [`plan_at`]: Self::plan_at
     pub fn commit(&mut self, next: Scheduler) {
-        debug_assert!(next.finished.is_empty(), "speculative finishes are discarded");
+        // Always-on: once per committed pass; dropping a speculative finish
+        // here would silently lose a completed request from the archive.
+        assert!(next.finished.is_empty(), "speculative finishes are discarded");
         self.queue = next.queue;
         self.decoding = next.decoding;
         self.preemptions = next.preemptions;
@@ -575,7 +579,8 @@ impl Scheduler {
             .get_mut(&id)
             .or_else(|| self.queue.iter_mut().find(|s| s.id() == id))
             .unwrap_or_else(|| panic!("placeholder patch for dead sequence {id}"));
-        debug_assert_eq!(seq.generated[gen_idx], 0, "patch site must be a placeholder");
+        // Always-on: patching a non-placeholder overwrites a real token.
+        assert_eq!(seq.generated[gen_idx], 0, "patch site must be a placeholder");
         seq.generated[gen_idx] = token;
     }
 }

@@ -51,6 +51,7 @@ impl HostPlanCost {
     }
 
     pub fn is_zero(&self) -> bool {
+        // pallas-lint: allow(float-eq) — exact-zero sentinel for "no host cost configured"
         self.base_secs == 0.0 && self.per_token_secs == 0.0
     }
 }
@@ -414,7 +415,9 @@ impl SimMachine {
             // engine's attribution and the `host_overlap_time` docs).
             if speculate && !eos_surprise && !self.sched.is_done() {
                 let next = self.sched.plan_at(&mut self.kv, now);
-                debug_assert!(
+                // Always-on: once per pass, and a shed/empty speculative
+                // plan would silently desync the simulator from the engine.
+                assert!(
                     next.dropped.is_empty() && !next.is_empty(),
                     "FIFO plans never shed, and a live scheduler plans work"
                 );

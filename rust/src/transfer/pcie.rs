@@ -112,10 +112,10 @@ impl PcieLink {
     /// Achieved bandwidth on the link clock (bytes/s).
     pub fn achieved_bw(&self) -> f64 {
         let t = self.total_time().as_secs_f64();
-        if t == 0.0 {
-            0.0
-        } else {
+        if t > 0.0 {
             self.total_bytes() as f64 / t
+        } else {
+            0.0
         }
     }
 }

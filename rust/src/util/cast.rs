@@ -1,0 +1,91 @@
+//! Checked numeric conversions for accounting and cost-model code.
+//!
+//! The lane-accounting bugs fixed in PRs 1–2 (u64 underflow wrapping to a
+//! huge value, double-counted lanes) share a root cause: silent `as`
+//! conversions that truncate or lose precision without a trace. The
+//! `pallas-lint` `unchecked-cast` rule steers accounting code here: every
+//! helper either proves the conversion exact or panics loudly at the
+//! conversion site instead of corrupting a metric downstream.
+//!
+//! All helpers are `#[inline]` single-compare guards — cheap enough for
+//! per-pass accounting paths (they are deliberately *not* used in
+//! per-token kernels).
+
+/// Largest integer magnitude an `f64` represents exactly (2^53).
+pub const F64_EXACT_MAX: u64 = 1 << 53;
+
+/// Exact `usize -> f64`. Panics if the value exceeds 2^53 (where `f64`
+/// starts rounding integers) — token/pass/block counts never do.
+#[inline]
+pub fn usize_f64(x: usize) -> f64 {
+    assert!(x as u64 <= F64_EXACT_MAX, "usize {x} not exactly representable as f64");
+    x as f64
+}
+
+/// Exact `u64 -> f64`. Panics above 2^53 — byte capacities up to 8 PiB
+/// convert exactly.
+#[inline]
+pub fn u64_f64(x: u64) -> f64 {
+    assert!(x <= F64_EXACT_MAX, "u64 {x} not exactly representable as f64");
+    x as f64
+}
+
+/// Checked `f64 -> usize` truncation (toward zero, like `as usize`).
+/// Panics on NaN, negative values, or magnitudes at/above 2^53 — the
+/// regimes where `as` silently produces 0, saturates, or rounds.
+#[inline]
+pub fn f64_usize(x: f64) -> usize {
+    assert!(
+        x.is_finite() && x >= 0.0 && x < F64_EXACT_MAX as f64,
+        "f64 {x} out of exact usize range"
+    );
+    x as usize
+}
+
+/// Lossless `usize -> u64` (usize is at most 64 bits on every supported
+/// target).
+#[inline]
+pub fn usize_u64(x: usize) -> u64 {
+    x as u64
+}
+
+/// Checked `u64 -> usize`. Panics if the value exceeds `usize::MAX`
+/// (possible on 32-bit targets) instead of truncating.
+#[inline]
+pub fn u64_usize(x: u64) -> usize {
+    usize::try_from(x).unwrap_or_else(|_| panic!("u64 {x} overflows usize"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_roundtrips() {
+        assert_eq!(usize_f64(0), 0.0);
+        assert_eq!(usize_f64(123_456), 123_456.0);
+        assert_eq!(u64_f64(1 << 53), 9_007_199_254_740_992.0);
+        assert_eq!(f64_usize(0.0), 0);
+        assert_eq!(f64_usize(7.9), 7, "truncates toward zero like `as`");
+        assert_eq!(usize_u64(42), 42);
+        assert_eq!(u64_usize(42), 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "not exactly representable")]
+    fn huge_u64_to_f64_panics() {
+        u64_f64((1 << 53) + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of exact usize range")]
+    fn negative_f64_to_usize_panics() {
+        f64_usize(-1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of exact usize range")]
+    fn nan_to_usize_panics() {
+        f64_usize(f64::NAN);
+    }
+}

@@ -326,6 +326,7 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
+                // pallas-lint: allow(float-eq) — exact integrality test picks the int form
                 if x.fract() == 0.0 && x.abs() < 9e15 {
                     write!(f, "{}", *x as i64)
                 } else {

@@ -32,6 +32,7 @@ pub fn line_fit(xs: &[f64], ys: &[f64]) -> LineFit {
         })
         .sum();
     let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    // pallas-lint: allow(float-eq) — degenerate fit: zero variance is a perfect line
     let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
     LineFit { slope, intercept, r2 }
 }
@@ -39,8 +40,9 @@ pub fn line_fit(xs: &[f64], ys: &[f64]) -> LineFit {
 /// The paper's accuracy metric: `1 - |pred - measured| / measured`,
 /// clamped at 0. Averaged over cells it yields the "94% accuracy" claim.
 pub fn prediction_accuracy(predicted: f64, measured: f64) -> f64 {
+    // pallas-lint: allow(float-eq) — the metric's 0/0 case is defined by exact zeros
     if measured == 0.0 {
-        return if predicted == 0.0 { 1.0 } else { 0.0 };
+        return if predicted == 0.0 { 1.0 } else { 0.0 }; // pallas-lint: allow(float-eq)
     }
     (1.0 - (predicted - measured).abs() / measured).max(0.0)
 }

@@ -1,0 +1,4 @@
+// Fixture: model/ is not an accounting module — casts do not fire.
+pub fn dims(n: usize) -> f64 {
+    n as f64
+}

@@ -1,0 +1,5 @@
+// Fixture: provably-safe casts may carry an allow.
+pub fn ratio(n: usize, total: usize) -> f64 {
+    // pallas-lint: allow(unchecked-cast) — both operands bounded by the pass budget
+    n as f64 / total as f64
+}

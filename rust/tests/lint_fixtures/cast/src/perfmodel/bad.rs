@@ -1,0 +1,7 @@
+// Fixture: unchecked narrowing casts in an accounting module must fire.
+pub fn mix(n: usize, t: f64, b: u64) -> f64 {
+    let x = n as f64;
+    let y = t as usize;
+    let z = b as u64 + y as u64;
+    x + z as f64
+}

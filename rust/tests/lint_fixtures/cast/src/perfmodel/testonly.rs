@@ -1,0 +1,14 @@
+// Fixture: casts inside #[cfg(test)] are exempt.
+pub fn id(n: usize) -> usize {
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn casts_in_tests_are_fine() {
+        let n = 3usize;
+        assert_eq!(n as f64 as usize, n);
+        assert_eq!(n as u64, 3);
+    }
+}

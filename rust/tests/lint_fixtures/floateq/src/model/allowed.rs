@@ -1,0 +1,4 @@
+// Fixture: exact-zero sentinels may carry an allow.
+pub fn is_unset(t: f64) -> bool {
+    t == 0.0 // pallas-lint: allow(float-eq) — exact sentinel, never computed
+}

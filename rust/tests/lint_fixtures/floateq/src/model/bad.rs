@@ -1,0 +1,6 @@
+// Fixture: direct float equality must fire.
+pub fn degenerate(t: f64, eps: f64) -> bool {
+    let zeroed = t == 0.0;
+    let off = eps != 0.5;
+    zeroed || off
+}

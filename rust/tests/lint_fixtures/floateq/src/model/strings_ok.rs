@@ -1,0 +1,13 @@
+// Fixture: float equality in strings/comments must not fire.
+// A comment saying x == 0.0 is not a violation.
+pub fn describe() -> &'static str {
+    "the guard `t == 0.0` is fine inside a string, as is != 1.5"
+}
+
+pub fn tolerant(a: f64, b: f64) -> bool {
+    (a - b).abs() < 1e-9
+}
+
+pub fn integer_compare(n: usize) -> bool {
+    n == 0
+}

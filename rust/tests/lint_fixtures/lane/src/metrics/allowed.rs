@@ -1,0 +1,16 @@
+// Fixture: a deliberate shadow lane carries an allow (like the real
+// host_overlap_time).
+pub struct PassRecord {
+    pub io_time: f64,
+    pub shadow_time: f64, // pallas-lint: allow(lane-partition) — shadow, not a lane
+}
+
+impl PassRecord {
+    pub fn lanes_total(&self) -> f64 {
+        self.io_time
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!("{},{}", self.io_time, self.shadow_time)
+    }
+}

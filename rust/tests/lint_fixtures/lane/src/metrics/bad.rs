@@ -1,0 +1,18 @@
+// Fixture: a lane field missing from the partition must fire twice
+// (lanes_total and to_csv) — the PR 1/PR 2 drift bug class.
+pub struct PassRecord {
+    pub io_time: f64,
+    pub gpu_time: f64,
+    pub leaked_time: f64,
+    pub kv_blocks_used: usize,
+}
+
+impl PassRecord {
+    pub fn lanes_total(&self) -> f64 {
+        self.io_time + self.gpu_time
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!("{},{},{}", self.io_time, self.gpu_time, self.kv_blocks_used)
+    }
+}

@@ -1,0 +1,15 @@
+// Fixture: a complete partition — every lane in both functions.
+pub struct PassRecord {
+    pub io_time: f64,
+    pub gpu_time: f64,
+}
+
+impl PassRecord {
+    pub fn lanes_total(&self) -> f64 {
+        self.io_time + self.gpu_time
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!("{},{}", self.io_time, self.gpu_time)
+    }
+}

@@ -1,0 +1,5 @@
+// Fixture: allow suppresses panic-policy at audited sites.
+pub fn head(xs: &[i64]) -> i64 {
+    // pallas-lint: allow(panic-policy) — caller guarantees nonempty
+    *xs.first().unwrap()
+}

@@ -1,0 +1,7 @@
+// Fixture: unwrap/expect in a library hot path must fire.
+pub fn first_plus_one(xs: &[i64]) -> i64 {
+    let head = xs.first().unwrap();
+    let tail = xs.last().expect("nonempty");
+    let soft = xs.get(1).copied().unwrap_or(0);
+    head + tail + soft
+}

@@ -1,0 +1,14 @@
+// Fixture: unwrap/expect inside #[cfg(test)] are exempt.
+pub fn len(xs: &[i64]) -> usize {
+    xs.len()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let xs = [1i64, 2];
+        assert_eq!(*xs.first().unwrap(), 1);
+        assert_eq!(*xs.last().expect("nonempty"), 2);
+    }
+}

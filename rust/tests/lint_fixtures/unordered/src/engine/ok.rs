@@ -1,0 +1,6 @@
+// Fixture: engine is not a deterministic-replay module — no finding.
+use std::collections::HashMap;
+
+pub fn index(ids: &[u64]) -> HashMap<u64, usize> {
+    ids.iter().enumerate().map(|(k, &i)| (i, k)).collect()
+}

@@ -1,0 +1,8 @@
+// Fixture: allow suppresses the unordered-iteration rule.
+// pallas-lint: allow(unordered-iteration) — membership-only set, never iterated
+use std::collections::HashSet;
+
+pub fn seen(ids: &[u64]) -> usize {
+    let s: HashSet<u64> = ids.iter().copied().collect(); // pallas-lint: allow(unordered-iteration)
+    s.len()
+}

@@ -1,0 +1,8 @@
+// Fixture: unordered containers in a deterministic module must fire.
+use std::collections::{HashMap, HashSet};
+
+pub fn plan(ids: &[u64]) -> usize {
+    let m: HashMap<u64, usize> = ids.iter().map(|&i| (i, 1)).collect();
+    let s: HashSet<u64> = ids.iter().copied().collect();
+    m.len() + s.len()
+}

@@ -1,0 +1,6 @@
+// Fixture: tests must also iterate deterministically (golden traces).
+use std::collections::HashSet;
+
+fn ids() -> HashSet<u64> {
+    (0..4).collect()
+}

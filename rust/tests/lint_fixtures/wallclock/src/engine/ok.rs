@@ -1,0 +1,6 @@
+// Fixture: the engine is real-time code — wall-clock reads are fine here.
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}

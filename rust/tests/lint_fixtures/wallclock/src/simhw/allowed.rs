@@ -1,0 +1,11 @@
+// Fixture: the allow directive suppresses wall-clock violations.
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    // pallas-lint: allow(wall-clock-in-sim) — fixture-sanctioned exception
+    Instant::now()
+}
+
+pub fn stamp_trailing() -> Instant {
+    Instant::now() // pallas-lint: allow(wall-clock-in-sim)
+}

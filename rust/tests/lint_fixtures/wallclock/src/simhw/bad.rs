@@ -1,0 +1,12 @@
+// Fixture: wall-clock reads in a virtual-clock module must fire.
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> (Instant, SystemTime) {
+    let a = Instant::now();
+    let b = SystemTime::now();
+    (a, b)
+}
+
+pub fn in_string_is_fine() -> &'static str {
+    "Instant::now() mentioned in a string does not fire"
+}

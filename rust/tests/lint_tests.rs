@@ -1,0 +1,188 @@
+//! Integration tests for `pallas-lint`: fixture corpus per rule, the
+//! ratchet mechanics end-to-end, and a self-check that the committed
+//! baseline matches the live tree (the same check CI runs).
+//!
+//! Note: this file itself is scanned by the linter (tests/ is in the
+//! unordered-iteration scope), so it deliberately avoids the banned
+//! collection idents in code position.
+
+use std::path::{Path, PathBuf};
+
+use moe_lens::analysis::{Baseline, BASELINE_FILE, collect_files, counts, Rule, scan_root};
+
+fn crate_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_root(group: &str) -> PathBuf {
+    crate_root().join("tests").join("lint_fixtures").join(group)
+}
+
+/// Scan a fixture group and return (file, rule, detail) triples, sorted.
+fn scan_group(group: &str) -> Vec<(String, Rule, String)> {
+    let mut v: Vec<(String, Rule, String)> = scan_root(&fixture_root(group))
+        .expect("fixture scan")
+        .into_iter()
+        .map(|v| (v.file, v.rule, v.detail))
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn wallclock_fires_in_sim_modules_and_suppresses() {
+    let got = scan_group("wallclock");
+    // bad.rs fires twice; allowed.rs (allow directives) and engine/ok.rs
+    // (out of scope) contribute nothing.
+    assert_eq!(got.len(), 2, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/simhw/bad.rs");
+        assert_eq!(*rule, Rule::WallClockInSim);
+    }
+    let details: Vec<&str> = got.iter().map(|(_, _, d)| d.as_str()).collect();
+    assert!(details.contains(&"Instant::now"), "details: {details:?}");
+    assert!(details.contains(&"SystemTime::now"), "details: {details:?}");
+}
+
+#[test]
+fn unordered_fires_in_det_modules_and_tests_dir() {
+    let got = scan_group("unordered");
+    assert!(got.iter().all(|(_, r, _)| *r == Rule::UnorderedIteration), "violations: {got:?}");
+    let in_bad = got.iter().filter(|(f, _, _)| f == "src/sched/bad.rs").count();
+    let in_tests = got.iter().filter(|(f, _, _)| f == "tests/bad_in_tests.rs").count();
+    // bad.rs: two idents on the `use` line plus one per field; the rule
+    // also covers the crate's own tests/ tree.
+    assert_eq!(in_bad, 4, "violations: {got:?}");
+    assert_eq!(in_tests, 2, "violations: {got:?}");
+    assert_eq!(got.len(), in_bad + in_tests, "allowed.rs / engine/ok.rs must be clean: {got:?}");
+}
+
+#[test]
+fn lane_partition_catches_drift_in_both_functions() {
+    let got = scan_group("lane");
+    // The leaked lane is reported once per function it is missing from.
+    assert_eq!(got.len(), 2, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/metrics/bad.rs");
+        assert_eq!(*rule, Rule::LanePartition);
+    }
+    let details: Vec<&str> = got.iter().map(|(_, _, d)| d.as_str()).collect();
+    assert!(details.contains(&"leaked_time missing from lanes_total"), "details: {details:?}");
+    assert!(details.contains(&"leaked_time missing from to_csv"), "details: {details:?}");
+}
+
+#[test]
+fn unchecked_cast_fires_outside_tests_only() {
+    let got = scan_group("cast");
+    // bad.rs has five narrowing casts; allowed.rs carries an allow,
+    // testonly.rs casts only under #[cfg(test)], model/ is out of scope.
+    assert_eq!(got.len(), 5, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/perfmodel/bad.rs");
+        assert_eq!(*rule, Rule::UncheckedCast);
+    }
+}
+
+#[test]
+fn panic_policy_fires_on_unwrap_and_expect_only() {
+    let got = scan_group("panic");
+    // .unwrap() and .expect( fire; .unwrap_or(..) does not. The
+    // #[cfg(test)] module and the allow-carrying site are exempt.
+    assert_eq!(got.len(), 2, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/engine/bad.rs");
+        assert_eq!(*rule, Rule::PanicPolicy);
+    }
+    let details: Vec<&str> = got.iter().map(|(_, _, d)| d.as_str()).collect();
+    assert!(details.contains(&".unwrap()"), "details: {details:?}");
+    assert!(details.contains(&".expect("), "details: {details:?}");
+}
+
+#[test]
+fn float_eq_fires_on_literal_compares_not_strings() {
+    let got = scan_group("floateq");
+    // bad.rs compares against 0.0 and 0.5; strings_ok.rs mentions the
+    // pattern only inside strings/comments and uses epsilon/integer
+    // compares; allowed.rs carries a trailing allow.
+    assert_eq!(got.len(), 2, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/model/bad.rs");
+        assert_eq!(*rule, Rule::FloatEq);
+    }
+}
+
+#[test]
+fn fixture_corpus_is_excluded_from_the_default_scan() {
+    let files = collect_files(crate_root()).expect("walk crate");
+    assert!(!files.is_empty());
+    for f in &files {
+        let s = f.to_string_lossy();
+        assert!(!s.contains("lint_fixtures"), "fixture leaked into scan: {s}");
+    }
+}
+
+/// The check CI runs: the committed baseline must exactly match the live
+/// tree — no new violations, no stale (overpaid) entries.
+#[test]
+fn committed_baseline_is_clean_against_live_tree() {
+    let baseline = Baseline::load(&crate_root().join(BASELINE_FILE)).expect("load baseline");
+    let actual = counts(&scan_root(crate_root()).expect("scan crate"));
+    let report = baseline.check(&actual);
+    if !report.is_clean() {
+        for r in report.regressions.iter().chain(&report.stale) {
+            let kind = if r.actual > r.baseline { "regression" } else { "stale" };
+            eprintln!("{kind}: {} {} baseline {} actual {}", r.file, r.rule, r.baseline, r.actual);
+        }
+        panic!(
+            "lint baseline out of date ({} regressions, {} stale) — \
+             run `cargo run --release --bin pallas-lint -- --update-baseline`",
+            report.regressions.len(),
+            report.stale.len()
+        );
+    }
+}
+
+/// Ratchet end-to-end: a synthetic new violation on top of the live tree
+/// must fail `--check`, and `--update-baseline` must refuse to absorb it.
+#[test]
+fn synthetic_new_violation_fails_check_and_update() {
+    let baseline = Baseline::load(&crate_root().join(BASELINE_FILE)).expect("load baseline");
+    let mut actual = counts(&scan_root(crate_root()).expect("scan crate"));
+    *actual
+        .entry("src/engine/vslpipe.rs".to_string())
+        .or_default()
+        .entry("wall-clock-in-sim".to_string())
+        .or_insert(0) += 1;
+    let report = baseline.check(&actual);
+    assert_eq!(report.regressions.len(), 1, "report: {report:?}");
+    let r = &report.regressions[0];
+    assert_eq!(r.file, "src/engine/vslpipe.rs");
+    assert_eq!(r.rule, "wall-clock-in-sim");
+    assert_eq!(r.actual, r.baseline + 1);
+    assert!(baseline.updated(&actual).is_err(), "update must refuse to raise a count");
+}
+
+/// Ratchet end-to-end: paying down debt makes the committed baseline
+/// stale (check fails) and `--update-baseline` burns it down.
+#[test]
+fn paid_down_debt_goes_stale_and_updates_downward() {
+    let baseline = Baseline::load(&crate_root().join(BASELINE_FILE)).expect("load baseline");
+    let mut actual = counts(&scan_root(crate_root()).expect("scan crate"));
+    // The committed baseline carries real debt; retire one entry.
+    let (file, rule, old) = baseline
+        .files
+        .iter()
+        .flat_map(|(f, m)| m.iter().map(move |(r, &n)| (f.clone(), r.clone(), n)))
+        .next()
+        .expect("baseline has debt");
+    assert!(old > 0);
+    let m = actual.get_mut(&file).expect("debt file present in scan");
+    m.insert(rule.clone(), old - 1);
+    let report = baseline.check(&actual);
+    assert!(report.regressions.is_empty(), "report: {report:?}");
+    assert_eq!(report.stale.len(), 1, "report: {report:?}");
+    let refreshed = baseline.updated(&actual).expect("downward update permitted");
+    assert!(refreshed.total() < baseline.total());
+    let new_count = refreshed.files.get(&file).and_then(|m| m.get(&rule)).copied().unwrap_or(0);
+    assert_eq!(new_count, old - 1);
+}
