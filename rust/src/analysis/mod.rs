@@ -124,7 +124,7 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
             }
         }
     }
-    for (idx, name, missing) in rules::lane_partition(&lines) {
+    for (idx, name, missing) in rules::lane_partition(&lines, src) {
         raw.push((idx, Rule::LanePartition, format!("{name} missing from {missing}")));
     }
 

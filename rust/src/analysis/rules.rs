@@ -15,7 +15,9 @@ pub enum Rule {
     /// `HashMap` / `HashSet` in deterministic modules or tests.
     UnorderedIteration,
     /// A `pub *_time: f64` lane on `PassRecord` missing from
-    /// `lanes_total()` or `to_csv()`.
+    /// `lanes_total()`, from `to_csv()`, or from the CSV header string
+    /// (a lane summed into the row but unnamed in the header drifts
+    /// silently in offline plots).
     LanePartition,
     /// `as u64` / `as usize` / `as f64` in accounting modules.
     UncheckedCast,
@@ -198,9 +200,9 @@ pub fn cast_sites(code: &str) -> usize {
 // lane-partition
 // ---------------------------------------------------------------------------
 
-/// Code text of `fn name`'s brace-matched body (signature line included),
-/// or None if the file does not define it.
-fn find_fn_body(lines: &[Line], name: &str) -> Option<String> {
+/// Inclusive line span of `fn name`, signature line through the
+/// brace-matched closing line, or None if the file does not define it.
+fn find_fn_span(lines: &[Line], name: &str) -> Option<(usize, usize)> {
     let mut sig = None;
     for (idx, line) in lines.iter().enumerate() {
         let code = &line.code;
@@ -215,10 +217,9 @@ fn find_fn_body(lines: &[Line], name: &str) -> Option<String> {
         }
     }
     let sig = sig?;
-    let mut body = String::new();
     let mut depth: i64 = 0;
     let mut opened = false;
-    for line in &lines[sig..] {
+    for (off, line) in lines[sig..].iter().enumerate() {
         for ch in line.code.chars() {
             if ch == '{' {
                 depth += 1;
@@ -227,19 +228,35 @@ fn find_fn_body(lines: &[Line], name: &str) -> Option<String> {
                 depth -= 1;
             }
         }
+        if opened && depth <= 0 {
+            return Some((sig, sig + off));
+        }
+    }
+    Some((sig, lines.len().saturating_sub(1)))
+}
+
+/// Code text of `fn name`'s brace-matched body (signature line included),
+/// or None if the file does not define it.
+fn find_fn_body(lines: &[Line], name: &str) -> Option<String> {
+    let (lo, hi) = find_fn_span(lines, name)?;
+    let mut body = String::new();
+    for line in &lines[lo..=hi] {
         body.push_str(&line.code);
         body.push(' ');
-        if opened && depth <= 0 {
-            break;
-        }
     }
     Some(body)
 }
 
 /// Lane-partition violations: every `pub *_time: f64` field declared on a
-/// `PassRecord` struct in this file must appear in both `lanes_total()`
-/// and `to_csv()`. Returns (0-based field line, field name, missing-from).
-pub fn lane_partition(lines: &[Line]) -> Vec<(usize, String, &'static str)> {
+/// `PassRecord` struct in this file must appear in `lanes_total()`, in
+/// `to_csv()`, *and* — by name — in the CSV header string inside
+/// `to_csv()`. Header text lives in a string literal, which the scrubber
+/// blanks out of the code channel, so the header check reads `src` (the
+/// raw source the `lines` were scrubbed from): an ident-boundary
+/// occurrence in the raw `to_csv` body that is in neither the code nor
+/// the comment channel can only sit inside a string literal.
+/// Returns (0-based field line, field name, missing-from).
+pub fn lane_partition(lines: &[Line], src: &str) -> Vec<(usize, String, &'static str)> {
     let mut start = None;
     for (idx, line) in lines.iter().enumerate() {
         let t = line.code.trim();
@@ -287,6 +304,22 @@ pub fn lane_partition(lines: &[Line]) -> Vec<(usize, String, &'static str)> {
     }
     let lanes = find_fn_body(lines, "lanes_total");
     let csv = find_fn_body(lines, "to_csv");
+    let csv_span = find_fn_span(lines, "to_csv");
+    let raw: Vec<&str> = src.split('\n').collect();
+    // True iff `name` occurs inside a string literal somewhere in the
+    // `to_csv` body: raw occurrences on a line beyond what the code and
+    // comment channels account for must be literal text.
+    let in_csv_header = |name: &str| -> bool {
+        let Some((lo, hi)) = csv_span else {
+            return false;
+        };
+        lines[lo..=hi].iter().enumerate().any(|(off, line)| {
+            let rawl = raw.get(lo + off).copied().unwrap_or("");
+            ident_occurrences(rawl, name).len()
+                > ident_occurrences(&line.code, name).len()
+                    + ident_occurrences(&line.comment, name).len()
+        })
+    };
     let mut out = Vec::new();
     for (idx, name) in fields {
         let in_lanes = lanes
@@ -300,6 +333,8 @@ pub fn lane_partition(lines: &[Line]) -> Vec<(usize, String, &'static str)> {
             .is_some_and(|b| !ident_occurrences(b, &name).is_empty());
         if !in_csv {
             out.push((idx, name, "to_csv"));
+        } else if !in_csv_header(&name) {
+            out.push((idx, name, "to_csv header"));
         }
     }
     out
@@ -351,6 +386,10 @@ mod tests {
         assert_eq!(cast_sites("alias u64"), 0, "ident boundary");
     }
 
+    fn lanes(src: &str) -> Vec<(usize, String, &'static str)> {
+        lane_partition(&scrub(src), src)
+    }
+
     #[test]
     fn lane_partition_flags_drift() {
         let src = "\
@@ -361,10 +400,10 @@ pub struct PassRecord {
 }
 impl PassRecord {
     pub fn lanes_total(&self) -> f64 { self.io_time }
-    pub fn to_csv(&self) -> String { format!(\"{}\", self.io_time) }
+    pub fn to_csv(&self) -> String { format!(\"io_time={}\", self.io_time) }
 }
 ";
-        let v = lane_partition(&scrub(src));
+        let v = lanes(src);
         // gpu_time missing from both; io_time fine; count not a lane.
         assert_eq!(v.len(), 2);
         assert!(v.iter().all(|(_, name, _)| name == "gpu_time"));
@@ -375,7 +414,7 @@ impl PassRecord {
     #[test]
     fn lane_partition_ident_boundary() {
         // A shadow lane whose name embeds a real lane's name must not
-        // borrow that lane's membership.
+        // borrow that lane's membership — in code or in the header.
         let src = "\
 pub struct PassRecord {
     pub overlap_time: f64,
@@ -383,18 +422,44 @@ pub struct PassRecord {
 }
 impl PassRecord {
     pub fn lanes_total(&self) -> f64 { self.overlap_time + self.host_overlap_time }
-    pub fn to_csv(&self) -> String { format!(\"{}\", self.host_overlap_time) }
+    pub fn to_csv(&self) -> String { format!(\"host_overlap_time={}\", self.host_overlap_time) }
 }
 ";
-        let v = lane_partition(&scrub(src));
+        let v = lanes(src);
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].1, "overlap_time");
         assert_eq!(v[0].2, "to_csv");
     }
 
     #[test]
+    fn lane_partition_requires_csv_header_naming() {
+        // A lane summed into the CSV row but unnamed in the header string
+        // drifts silently in offline plots. The header lives in a string
+        // literal — invisible to the scrubbed code channel — so the check
+        // reads the raw to_csv body. A comment naming the lane must NOT
+        // satisfy it.
+        let src = "\
+pub struct PassRecord {
+    pub io_time: f64,
+    pub gpu_time: f64,
+}
+impl PassRecord {
+    pub fn lanes_total(&self) -> f64 { self.io_time + self.gpu_time }
+    pub fn to_csv(&self) -> String {
+        // gpu_time is appended to the row below
+        format!(\"io_time,{},{}\", self.io_time, self.gpu_time)
+    }
+}
+";
+        let v = lanes(src);
+        assert_eq!(v.len(), 1, "findings: {v:?}");
+        assert_eq!(v[0].1, "gpu_time");
+        assert_eq!(v[0].2, "to_csv header");
+    }
+
+    #[test]
     fn no_passrecord_no_findings() {
-        assert!(lane_partition(&scrub("pub struct Other { pub t_time: f64 }")).is_empty());
-        assert!(lane_partition(&scrub("pub struct PassRecordX { pub a_time: f64 }")).is_empty());
+        assert!(lanes("pub struct Other { pub t_time: f64 }").is_empty());
+        assert!(lanes("pub struct PassRecordX { pub a_time: f64 }").is_empty());
     }
 }

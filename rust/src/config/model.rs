@@ -70,6 +70,18 @@ impl ModelSpec {
         (attn + router + experts + 2 * h) * self.weight_bytes as u64
     }
 
+    /// Bytes of one expert's FFN weights (w1 + w3 + w2 slices) — the unit
+    /// of expert-granular residency and streaming.
+    pub fn expert_bytes(&self) -> u64 {
+        3 * self.d_model as u64 * self.d_ff as u64 * self.weight_bytes as u64
+    }
+
+    /// Per-layer bytes that are *not* expert FFN weights (attention
+    /// projections, norms, router) — always streamed, never pinned.
+    pub fn layer_dense_bytes(&self) -> u64 {
+        self.layer_bytes() - self.n_experts as u64 * self.expert_bytes()
+    }
+
     /// KV-cache bytes per token (both K and V, all layers).
     pub fn kv_bytes_per_token(&self) -> u64 {
         2 * self.n_layers as u64 * self.kv_dim() as u64 * self.kv_bytes as u64
@@ -231,6 +243,22 @@ mod tests {
         let emb = 2 * m.vocab as u64 * m.d_model as u64 * m.weight_bytes as u64;
         assert!(layers <= total);
         assert!(total - layers <= emb + 1_000_000);
+    }
+
+    #[test]
+    fn expert_and_dense_bytes_partition_the_layer() {
+        for m in ModelSpec::all() {
+            assert_eq!(
+                m.layer_dense_bytes() + m.n_experts as u64 * m.expert_bytes(),
+                m.layer_bytes(),
+                "{}",
+                m.name
+            );
+            assert!(m.layer_dense_bytes() > 0, "{}", m.name);
+        }
+        // Mixtral-8x7B expert: 3 * 4096 * 14336 * 2 B ≈ 352 MB.
+        let e = ModelSpec::mixtral_8x7b().expert_bytes();
+        assert_eq!(e, 352_321_536);
     }
 
     #[test]

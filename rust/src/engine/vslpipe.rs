@@ -46,12 +46,15 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use super::batch::{pack_plan, Bucket, RowKind};
+use crate::config::{MachineSpec, ModelSpec};
 use crate::cpuattn::{AttnShape, DecodeQuery, ThreadPool};
 use crate::kvcache::{KvLayout, PagedKvCache, PagedLayout, SeqId};
 use crate::metrics::{LatencyStats, PassRecord, RequestTracker, RunReport, Stopwatch, Trace};
@@ -61,8 +64,10 @@ use crate::sched::{
     AdmissionPolicy, DropReason, PassPlan, SchedConfig, Scheduler, ServiceEstimator,
     ServiceModel, VictimPolicy,
 };
-use crate::transfer::{DataMover, LinkTiming, PcieLink, WeightBuffer, WeightFile};
-use crate::workload::duplicate_id;
+use crate::transfer::{
+    DataMover, ExpertMode, LinkTiming, PcieLink, ResidencyMap, WeightBuffer, WeightFile,
+};
+use crate::workload::{duplicate_id, ExpertRouter, PassRouting, RoutingSpec};
 
 /// Engine deployment configuration.
 #[derive(Debug, Clone)]
@@ -106,6 +111,18 @@ pub struct EngineConfig {
     /// weighted-victim policies read the model; the FIFO/newest defaults
     /// are unaffected.
     pub measured_service: bool,
+    /// Expert-routing trace attached to this deployment (`None` =
+    /// uniform routing with the default seed). Only read when
+    /// [`pinned_experts`](Self::pinned_experts) is nonzero.
+    pub routing: Option<RoutingSpec>,
+    /// Experts pinned in HBM per layer (popularity order). `0` disables
+    /// expert-granular residency entirely: the mover streams whole layers
+    /// and traces are byte-identical to the pre-refactor engine.
+    pub pinned_experts: usize,
+    /// HBM bytes available for pinned expert weights (the residency
+    /// budget the always-on assert checks). Defaults to the paper
+    /// testbed's serving slice.
+    pub hbm_bytes: u64,
 }
 
 impl EngineConfig {
@@ -129,6 +146,9 @@ impl EngineConfig {
             service: ServiceModel::default(),
             pipeline_depth: 1,
             measured_service: true,
+            routing: None,
+            pinned_experts: 0,
+            hbm_bytes: MachineSpec::paper_testbed().gpu_mem_for_serving,
         }
     }
 }
@@ -186,10 +206,13 @@ struct PipelinedStep {
     plan: PassPlan,
     buckets: Vec<Bucket>,
     xs: Vec<Vec<f32>>,
+    /// Per-layer activated-expert sets of the plan (expert mode only) —
+    /// the routing state the speculate/commit snapshot carries.
+    routing: Option<PassRouting>,
 }
 
-/// Everything the speculative planner worker needs, owned (the worker is
-/// a plain `std::thread` joined within the same step).
+/// Everything the speculative planner worker needs, owned (jobs are fed
+/// to the long-lived [`PlannerWorker`] over a channel).
 struct SpecJob {
     sched: Scheduler,
     layout: PagedLayout,
@@ -200,6 +223,9 @@ struct SpecJob {
     n_tok: usize,
     d_model: usize,
     embedding: Arc<Vec<f32>>,
+    /// Routing oracle (expert mode): the worker routes the speculative
+    /// plan so the snapshot carries its activated-expert sets.
+    router: Option<Arc<ExpertRouter>>,
 }
 
 /// The worker's result: the speculative successor state plus the packed,
@@ -219,8 +245,61 @@ struct SpecNext {
     /// `(bucket, row)` sites fed by a pass-N token (placeholder-valued
     /// until commit patches them).
     patches: Vec<(usize, usize)>,
+    /// Activated-expert sets of the speculative plan (expert mode only).
+    routing: Option<PassRouting>,
     /// Worker busy time (seconds) — the host work the pipeline hid.
     host_secs: f64,
+}
+
+/// The long-lived speculative-planner worker: one thread, fed one
+/// [`SpecJob`] per pipelined pass over a channel (DataMover-style), so
+/// the per-pass cost on the submit side is just the snapshot clone — no
+/// thread spawn. Exactly one job is in flight at a time (submitted in
+/// the speculate phase, received in the commit phase of the same step).
+struct PlannerWorker {
+    tx: Option<Sender<SpecJob>>,
+    rx: Receiver<SpecNext>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl PlannerWorker {
+    fn spawn() -> PlannerWorker {
+        let (tx, job_rx) = channel::<SpecJob>();
+        let (out_tx, rx) = channel::<SpecNext>();
+        let handle = std::thread::spawn(move || {
+            while let Ok(job) = job_rx.recv() {
+                if out_tx.send(job.run()).is_err() {
+                    return;
+                }
+            }
+        });
+        PlannerWorker { tx: Some(tx), rx, handle: Some(handle) }
+    }
+
+    fn submit(&self, job: SpecJob) {
+        let Some(tx) = self.tx.as_ref() else {
+            panic!("planner worker not running");
+        };
+        if tx.send(job).is_err() {
+            panic!("planner worker exited");
+        }
+    }
+
+    fn recv(&self) -> SpecNext {
+        match self.rx.recv() {
+            Ok(next) => next,
+            Err(_) => panic!("planner worker exited"),
+        }
+    }
+}
+
+impl Drop for PlannerWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 impl SpecJob {
@@ -254,6 +333,11 @@ impl SpecJob {
             let xs = gather_embeddings(&self.embedding[..], self.d_model, &buckets);
             (buckets, xs, patches)
         };
+        let routing = if plan.is_empty() {
+            None
+        } else {
+            self.router.as_ref().map(|r| plan.routed(r))
+        };
         SpecNext {
             predicted_finished,
             placeholders,
@@ -263,6 +347,7 @@ impl SpecJob {
             buckets,
             xs,
             patches,
+            routing,
             host_secs: clock.elapsed().as_secs_f64(),
         }
     }
@@ -329,6 +414,10 @@ pub struct ServingEngine {
     stage_cursor: usize,
     /// The committed speculative next pass, if any.
     prepared: Option<PipelinedStep>,
+    /// The long-lived speculative-planner worker (pipelined mode).
+    planner: PlannerWorker,
+    /// Routing oracle — `Some` iff expert-granular residency is active.
+    router: Option<Arc<ExpertRouter>>,
     /// Pipeline commit/replan telemetry.
     stats: PipelineStats,
     /// Online EWMA of observed pass times (measured service model).
@@ -353,12 +442,39 @@ impl ServingEngine {
         let layer_elems = weights.layer_data(0).len();
         let buffer = Arc::new(WeightBuffer::new(layer_elems));
         let link = Arc::new(PcieLink::new(cfg.timing));
-        let mover = DataMover::spawn(
-            Arc::clone(&weights),
-            Arc::clone(&buffer),
-            Arc::clone(&link),
-            cfg.packet_bytes,
-        );
+        let token_budget = if cfg.token_budget == 0 { 2 * rc.n_tok } else { cfg.token_budget };
+        let (mover, router) = if cfg.pinned_experts > 0 {
+            let spec = ModelSpec::by_name(&cfg.model)
+                .with_context(|| format!("no ModelSpec named '{}'", cfg.model))?;
+            let routing = cfg.routing.unwrap_or_else(RoutingSpec::uniform);
+            let router = Arc::new(ExpertRouter::new(&spec, routing));
+            let residency = Arc::new(ResidencyMap::pin_hottest(
+                &router,
+                cfg.pinned_experts,
+                ResidencyMap::budget_from_bytes(cfg.hbm_bytes, spec.expert_bytes()),
+            ));
+            let mode = ExpertMode {
+                router: Arc::clone(&router),
+                residency,
+                predict_n: router.predicted_count(token_budget),
+            };
+            let mover = DataMover::spawn_expert(
+                Arc::clone(&weights),
+                Arc::clone(&buffer),
+                Arc::clone(&link),
+                cfg.packet_bytes,
+                mode,
+            );
+            (mover, Some(router))
+        } else {
+            let mover = DataMover::spawn(
+                Arc::clone(&weights),
+                Arc::clone(&buffer),
+                Arc::clone(&link),
+                cfg.packet_bytes,
+            );
+            (mover, None)
+        };
 
         let shape = AttnShape {
             n_heads: rc.n_heads,
@@ -371,7 +487,6 @@ impl ServingEngine {
             shape.kv_dim(),
         );
 
-        let token_budget = if cfg.token_budget == 0 { 2 * rc.n_tok } else { cfg.token_budget };
         let sched = Scheduler::new(
             SchedConfig::new(token_budget, rc.n_tok)
                 .atomic()
@@ -402,6 +517,8 @@ impl ServingEngine {
             pipeline_depth: cfg.pipeline_depth,
             stage_cursor: 0,
             prepared: None,
+            planner: PlannerWorker::spawn(),
+            router,
             stats: PipelineStats::default(),
             measured_service: cfg.measured_service,
             estimator: ServiceEstimator::default(),
@@ -550,8 +667,9 @@ impl ServingEngine {
             });
         }
         let buckets = pack_plan(&plan, &self.sched, self.n_tok());
+        let routing = self.router.as_ref().map(|r| plan.routed(r));
         let pass_clock = Stopwatch::start();
-        let (tokens, times) = self.run_pass(&buckets)?;
+        let (tokens, times) = self.run_pass(&buckets, routing.as_ref())?;
         let duration = pass_clock.elapsed().as_secs_f64();
         let generated = tokens.len();
         let finished = self.sched.complete(&tokens, self.cache.layout_mut());
@@ -600,8 +718,8 @@ impl ServingEngine {
 
         // Phase 1 — acquire.
         let host_clock = Stopwatch::start();
-        let (plan, buckets, mut xs) = match self.prepared.take() {
-            Some(p) => (p.plan, p.buckets, p.xs),
+        let (plan, buckets, mut xs, routing) = match self.prepared.take() {
+            Some(p) => (p.plan, p.buckets, p.xs, p.routing),
             None => {
                 let plan = self.sched.plan_at(self.cache.layout_mut(), now);
                 let dropped = plan.dropped.clone();
@@ -620,7 +738,8 @@ impl ServingEngine {
                     self.pjrt.config.d_model,
                     &buckets,
                 );
-                (plan, buckets, xs)
+                let routing = self.router.as_ref().map(|r| plan.routed(r));
+                (plan, buckets, xs, routing)
             }
         };
         times.host += host_clock.elapsed().as_secs_f64();
@@ -653,7 +772,7 @@ impl ServingEngine {
             && (matches!(self.sched.cfg.victim, VictimPolicy::Newest)
                 || !self.measured_service);
         let speculate = !drains && stable_policies;
-        let spec_handle = if speculate {
+        let spec_pending = if speculate {
             let spec_clock = Stopwatch::start();
             self.stats.speculated += 1;
             let job = SpecJob {
@@ -664,16 +783,18 @@ impl ServingEngine {
                 n_tok: self.n_tok(),
                 d_model: self.pjrt.config.d_model,
                 embedding: Arc::clone(&self.embedding),
+                router: self.router.clone(),
             };
-            let handle = std::thread::spawn(move || job.run());
+            self.planner.submit(job);
             times.host += spec_clock.elapsed().as_secs_f64();
-            Some(handle)
+            true
         } else {
-            None
+            false
         };
 
         // Phase 3 — execute.
-        let tokens = self.run_pass_pipelined(&buckets, &mut xs, &mut times)?;
+        let tokens =
+            self.run_pass_pipelined(&buckets, &mut xs, routing.as_ref(), &mut times)?;
         let generated = tokens.len();
 
         // Phase 4 — complete (capture KV/decode telemetry before the
@@ -683,11 +804,11 @@ impl ServingEngine {
         let active_decode = self.sched.active_decode();
 
         // Phase 5 — commit or replan.
-        if let Some(handle) = spec_handle {
+        if spec_pending {
             let join_clock = Stopwatch::start();
-            let spec = handle.join().expect("speculative planner thread");
-            // The join wait is the worker's exposed tail; the rest of its
-            // busy time hid under the layer loop.
+            let spec = self.planner.recv();
+            // The receive wait is the worker's exposed tail; the rest of
+            // its busy time hid under the layer loop.
             let join_wait = join_clock.elapsed().as_secs_f64().min(spec.host_secs);
             times.host += join_wait;
             times.host_overlap += spec.host_secs - join_wait;
@@ -741,8 +862,17 @@ impl ServingEngine {
         if actual != spec.predicted_finished {
             return false;
         }
-        let SpecNext { placeholders, plan, mut sched, layout, mut buckets, mut xs, patches, .. } =
-            spec;
+        let SpecNext {
+            placeholders,
+            plan,
+            mut sched,
+            layout,
+            mut buckets,
+            mut xs,
+            patches,
+            routing,
+            ..
+        } = spec;
         if plan.is_empty() {
             // FIFO never sheds, so an empty speculative plan means the
             // clone drained — and the prediction matching means the real
@@ -768,7 +898,7 @@ impl ServingEngine {
         }
         self.sched.commit(sched);
         self.cache.replace_layout(layout);
-        self.prepared = Some(PipelinedStep { plan, buckets, xs });
+        self.prepared = Some(PipelinedStep { plan, buckets, xs, routing });
         true
     }
 
@@ -869,12 +999,24 @@ impl ServingEngine {
     /// One VSLPipe pass over the packed buckets — the synchronous path:
     /// per-pass mover stream (stages ≡ layers), embed via the PJRT
     /// gather, then the shared layer loop and head.
-    fn run_pass(&mut self, buckets: &[Bucket]) -> Result<(Vec<(SeqId, i32)>, PassTimes)> {
+    fn run_pass(
+        &mut self,
+        buckets: &[Bucket],
+        routing: Option<&PassRouting>,
+    ) -> Result<(Vec<(SeqId, i32)>, PassTimes)> {
         let n_layers = self.pjrt.config.n_layers;
         let mut times = PassTimes::default();
 
-        // Prologue: prime the double buffer (§6.4 prologue).
+        // Prologue: prime the double buffer (§6.4 prologue). In expert
+        // mode the pass's exact activated sets are posted first, so every
+        // stage of a synchronous pass streams exactly the cold experts it
+        // activates (stages ≡ layers after the reset).
         self.mover.reset();
+        if let Some(r) = routing {
+            for (layer, set) in r.per_layer.iter().enumerate() {
+                self.mover.post_routing(layer, set);
+            }
+        }
         self.mover.request(0);
         if n_layers > 1 {
             self.mover.request(1);
@@ -893,7 +1035,7 @@ impl ServingEngine {
         }
         times.gpu += clock.lap().as_secs_f64();
 
-        self.exec_layers(buckets, &mut xs, &mut times, 0, false)?;
+        self.exec_layers(buckets, &mut xs, routing, &mut times, 0, false)?;
         let tokens = self.run_head(buckets, &xs, &mut times)?;
         Ok((tokens, times))
     }
@@ -906,14 +1048,27 @@ impl ServingEngine {
         &mut self,
         buckets: &[Bucket],
         xs: &mut [Vec<f32>],
+        routing: Option<&PassRouting>,
         times: &mut PassTimes,
     ) -> Result<Vec<(SeqId, i32)>> {
-        if self.stage_cursor == 0 {
+        let base = self.stage_cursor;
+        // Expert mode: post the pass's exact activated sets for every
+        // stage whose transfer has *not* been requested yet. The first
+        // two stages of a non-first pass were prefetched across the pass
+        // boundary before this plan existed — those streamed the
+        // popularity prediction and get topped up at the stage boundary
+        // instead (`wait_layer_routed`).
+        if let Some(r) = routing {
+            let first_unrequested = if base == 0 { 0 } else { 2 };
+            for (layer, set) in r.per_layer.iter().enumerate().skip(first_unrequested) {
+                self.mover.post_routing(base + layer, set);
+            }
+        }
+        if base == 0 {
             self.mover.request(0);
             self.mover.request(1);
         }
-        let base = self.stage_cursor;
-        self.exec_layers(buckets, xs, times, base, true)?;
+        self.exec_layers(buckets, xs, routing, times, base, true)?;
         self.stage_cursor = base + self.pjrt.config.n_layers;
         self.run_head(buckets, xs, times)
     }
@@ -926,6 +1081,7 @@ impl ServingEngine {
         &mut self,
         buckets: &[Bucket],
         xs: &mut [Vec<f32>],
+        routing: Option<&PassRouting>,
         times: &mut PassTimes,
         stage_base: usize,
         stream_ahead: bool,
@@ -938,8 +1094,16 @@ impl ServingEngine {
         for layer in 0..n_layers {
             let stage = stage_base + layer;
             // Stage-boundary sync: weights for this layer must be staged.
+            // Expert mode also settles the stage's transfer set here: any
+            // activated cold expert the stream missed is charged to the
+            // link while the stage blocks (exposed IO, io_wait lane).
             clock.lap();
-            self.mover.wait_layer(stage);
+            match routing.and_then(|r| r.activated(layer)) {
+                Some(activated) => {
+                    self.mover.wait_layer_routed(stage, activated);
+                }
+                None => self.mover.wait_layer(stage),
+            }
             times.io_wait += clock.lap().as_secs_f64();
 
             // Stage the layer's weight literals ONCE (not per bucket) and

@@ -41,11 +41,19 @@ COMMANDS:
              [--service measured|instant]   measured (default) feeds an
               EWMA of observed pass times into SLO admission / weighted
               preemption; instant reproduces the pre-profiled behavior
+             expert-granular residency (default off):
+             [--pinned-experts N] [--zipf F] [--routing-seed N]   pin the
+              N hottest experts per layer in HBM and stream only cold
+              activated experts; routing follows a Zipf(F) trace
   plan       print Stage-1/Stage-2 performance-model analysis
              --model <name> --gpu <name> --kv-gb N --p N --g N [--batch K]
              [--host-ms X]   also print the pass-pipeline view: decode
               iteration with X ms/pass of host plan/pack cost, pipelined
               (max(lanes, host)) vs synchronous (host + max(lanes))
+             [--pinned N] [--zipf F] [--pass-tokens N]   expert-cache
+              view: hit rate of the N hottest experts pinned per layer
+              under Zipf(F) routing, the routed weight-sweep δ it buys,
+              and the hit-rate-adjusted T_max / HRM decode iteration
   simulate   run the paper-scale hardware simulator
              --model <name> --workload mtbench|rag|aime --gen N --kv-gb N
              --policy moe-lens|moe-lightning|vllm  [--requests K]
@@ -192,6 +200,55 @@ fn cmd_plan(args: &Args) {
     );
     println!("  regime                    : {:?}", pred.regime);
 
+    // Expert-granular residency: what pinning the N hottest experts per
+    // layer buys on the weight-sweep lane (--pinned N [--zipf F]).
+    let pinned = args.usize_or("pinned", 0);
+    if pinned > 0 {
+        let zipf_s = args.f64_or("zipf", 1.0);
+        let n_tokens = args.usize_or("pass-tokens", 4096);
+        let s1m = &s2.stage1;
+        let budget = moe_lens::transfer::ResidencyMap::budget_from_bytes(
+            s1m.machine.gpu_mem_for_serving,
+            s1m.model.expert_bytes(),
+        );
+        let need = s1m.model.n_layers * pinned;
+        println!(
+            "== Expert residency (pinned={pinned}/layer, zipf={zipf_s}, \
+             {n_tokens} tok/pass) =="
+        );
+        println!(
+            "  HBM expert budget         : {budget} experts ({} needed){}",
+            need,
+            if need > budget { "  ** EXCEEDS BUDGET **" } else { "" }
+        );
+        println!(
+            "  expert cache hit rate     : {:.1} %",
+            s1m.expert_hit_rate(zipf_s, pinned, n_tokens) * 100.0
+        );
+        println!(
+            "  experts streamed / layer  : {:.2} of {}",
+            s1m.experts_streamed(zipf_s, pinned, n_tokens),
+            s1m.model.n_experts
+        );
+        println!(
+            "  delta routed              : {:.2} s (dense {:.2} s)",
+            s1m.delta_routed(zipf_s, pinned, n_tokens),
+            s1m.delta()
+        );
+        println!(
+            "  T_max routed              : {:.0} tok/s (dense {:.0})",
+            s1m.t_max_routed(p, g, kv, zipf_s, pinned, n_tokens),
+            s1m.t_max(p, g, kv)
+        );
+        let hplan = hrm.plan(p, g, kv);
+        let (n, ctx) = (hplan.decode_seqs, p + g / 2);
+        println!(
+            "  HRM decode iter routed    : {:.4} s (dense {:.4} s, {n} seqs)",
+            hrm.decode_iter_secs_routed(n, ctx, zipf_s, pinned),
+            hrm.decode_iter_secs(n, ctx)
+        );
+    }
+
     // Host-side plan/pack cost composed into the decode iteration — the
     // cost-model view of the engine's double-buffered pass pipeline
     // (--host-ms, per-pass; calibrate from a trace's host_busy()).
@@ -304,6 +361,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     });
     cfg.pipeline_depth = args.usize_or("pipeline", cfg.pipeline_depth);
     let pipeline_depth = cfg.pipeline_depth;
+    cfg.pinned_experts = args.usize_or("pinned-experts", 0);
+    if let Some(z) = args.get("zipf") {
+        let s = z.parse::<f64>().unwrap_or_else(|_| {
+            eprintln!("bad --zipf '{z}' (expected a float)");
+            std::process::exit(2);
+        });
+        cfg.routing = Some(moe_lens::workload::RoutingSpec::zipf(
+            s,
+            args.u64_or("routing-seed", 0),
+        ));
+    }
     cfg.measured_service = match args.str_or("service", "measured") {
         "measured" => true,
         "instant" => false,

@@ -9,6 +9,7 @@
 //! growing once the IO pipeline is covered and leave CPU memory idle
 //! (Table 1: 52% / 56% / 35% utilization).
 
+use super::stage1::Stage1Model;
 use crate::config::{MachineSpec, ModelSpec};
 use crate::util::cast::{f64_usize, u64_f64, u64_usize, usize_f64, usize_u64};
 
@@ -71,6 +72,34 @@ impl HrmModel {
     /// Decode throughput (tokens/s) for `n` sequences at context `ctx`.
     pub fn decode_throughput(&self, n: usize, ctx: usize) -> f64 {
         usize_f64(n) / self.decode_iter_secs(n, ctx)
+    }
+
+    /// δ with the expert-aware engine's residency win priced in: only the
+    /// expected cold activated experts cross the link (delegates to
+    /// [`Stage1Model::delta_routed`]). `pinned = 0` is the dense sweep
+    /// bit-for-bit.
+    pub fn delta_routed(&self, zipf_s: f64, pinned: usize, n_tokens: usize) -> f64 {
+        Stage1Model::new(self.machine.clone(), self.model.clone())
+            .delta_routed(zipf_s, pinned, n_tokens)
+    }
+
+    /// [`decode_iter_secs`](Self::decode_iter_secs) with the routed δ on
+    /// the IO lane — the HRM prediction of the expert-cache win. GPU and
+    /// CPU lanes are untouched, so the benefit saturates once weight IO
+    /// stops binding the iteration.
+    pub fn decode_iter_secs_routed(
+        &self,
+        n: usize,
+        ctx: usize,
+        zipf_s: f64,
+        pinned: usize,
+    ) -> f64 {
+        let io = self.delta_routed(zipf_s, pinned, n);
+        let gpu = usize_f64(n) * self.model.flops_per_token() / self.machine.gpu.bf16_flops;
+        let kv_bytes =
+            usize_f64(n) * usize_f64(ctx) * u64_f64(self.model.kv_bytes_per_token());
+        let cpu = kv_bytes / (self.machine.host.mem_bw * self.cpu_attn_efficiency);
+        io.max(gpu).max(cpu)
     }
 
     /// Decode-iteration time with host-side planning/packing overhead
@@ -304,6 +333,27 @@ mod tests {
                     <= h.decode_iter_secs_with_host(n, ctx, hc, false)
             );
         }
+    }
+
+    #[test]
+    fn routed_decode_iter_matches_engine_gate() {
+        let h = hrm();
+        // pinned = 0 disables residency: bit-identical to the dense lane.
+        assert_eq!(
+            h.decode_iter_secs_routed(64, 130, 1.2, 0).to_bits(),
+            h.decode_iter_secs(64, 130).to_bits()
+        );
+        // IO-bound regime: pinning hot experts under skew shortens the
+        // iteration strictly (δ binds at small n, and the routed sweep is
+        // smaller than the dense one).
+        let dense = h.decode_iter_secs(64, 130);
+        let routed = h.decode_iter_secs_routed(64, 130, 1.2, 2);
+        assert!(routed < dense, "routed {routed} vs dense {dense}");
+        // The win saturates once compute binds: the routed iteration can
+        // never drop below the compute lanes.
+        let huge = h.decode_iter_secs_routed(1_000_000, 1030, 1.2, 2);
+        assert!(huge >= h.decode_iter_secs(1_000_000, 1030) * 0.5);
+        assert!(h.delta_routed(1.2, 2, 64) < h.delta());
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! limiter (the paper's central modeling insight).
 
 use crate::config::{MachineSpec, ModelSpec};
+use crate::util::cast::{u64_f64, usize_f64};
+use crate::workload::routing::{rank_activation_probs, zipf_weights};
 
 /// Which resource binds the Stage-1 roofline (Eq. 4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,20 +40,20 @@ impl Stage1Model {
     /// compute-per-weight-byte intensity `I`.
     pub fn intensity_per_token(&self) -> f64 {
         let m = self.model.m_ratio();
-        let s = self.model.gqa_group() as f64;
-        let nk = self.model.top_k as f64;
-        let ne = self.model.n_experts as f64;
+        let s = usize_f64(self.model.gqa_group());
+        let nk = usize_f64(self.model.top_k);
+        let ne = usize_f64(self.model.n_experts);
         (6.0 * m * nk + 2.0 + 2.0 / s) / (6.0 * m * ne + 2.0 + 2.0 / s)
     }
 
     /// Eq. 1 evaluated at `n` parallel tokens.
     pub fn intensity(&self, n: usize) -> f64 {
-        n as f64 * self.intensity_per_token()
+        usize_f64(n) * self.intensity_per_token()
     }
 
     /// The paper's sparsity approximation of Eq. 1: `I ≈ n N_k / N_e`.
     pub fn intensity_approx(&self, n: usize) -> f64 {
-        n as f64 * self.model.top_k as f64 / self.model.n_experts as f64
+        usize_f64(n) * usize_f64(self.model.top_k) / usize_f64(self.model.n_experts)
     }
 
     // -- Eq. 2: tokens needed to saturate GPU compute ---------------------
@@ -60,8 +62,8 @@ impl Stage1Model {
     /// form; A40 + B=32 GB/s + Mixtral-8x7B gives ~19.2k tokens).
     pub fn tokens_to_saturate(&self) -> f64 {
         (self.machine.gpu.bf16_flops / self.machine.pcie_bw)
-            * self.model.n_experts as f64
-            / self.model.top_k as f64
+            * usize_f64(self.model.n_experts)
+            / usize_f64(self.model.top_k)
     }
 
     /// Exact form using Eq. 1's full intensity expression. Note the
@@ -69,15 +71,15 @@ impl Stage1Model {
     /// bytes per element the IO requirement scales accordingly.
     pub fn tokens_to_saturate_exact(&self) -> f64 {
         let per_byte =
-            self.intensity_per_token() / self.model.weight_bytes as f64;
+            self.intensity_per_token() / usize_f64(self.model.weight_bytes);
         (self.machine.gpu.bf16_flops / self.machine.pcie_bw) / per_byte
     }
 
     /// KV-cache bytes needed to sustain `tokens_to_saturate()` parallel
     /// sequences of total length `seq_len` (Table 2, right half).
     pub fn kv_bytes_to_saturate(&self, seq_len: usize) -> f64 {
-        self.tokens_to_saturate() * seq_len as f64
-            * self.model.kv_bytes_per_token() as f64
+        self.tokens_to_saturate() * usize_f64(seq_len)
+            * u64_f64(self.model.kv_bytes_per_token())
     }
 
     // -- Eq. 3: Parallelism-Memory Efficiency ------------------------------
@@ -86,7 +88,7 @@ impl Stage1Model {
     /// token-slot of KV capacity, amortized over the sequence's lifetime.
     pub fn pme(&self, p: usize, g: usize) -> f64 {
         assert!(g > 0, "generation length must be positive");
-        let (p, g) = (p as f64, g as f64);
+        let (p, g) = (usize_f64(p), usize_f64(g));
         2.0 * (p + g) / ((2.0 * p + g) * g)
     }
 
@@ -105,7 +107,7 @@ impl Stage1Model {
 
     /// KV capacity in token slots for a byte budget.
     pub fn kv_tokens(&self, kv_bytes: u64) -> f64 {
-        kv_bytes as f64 / self.model.kv_bytes_per_token() as f64
+        u64_f64(kv_bytes) / u64_f64(self.model.kv_bytes_per_token())
     }
 
     /// Eq. 4: `T_max = min(PME * M / δ, T_GPU)` in processed tokens/s
@@ -133,7 +135,7 @@ impl Stage1Model {
     /// Generation throughput (tokens/s of *generated* output): the `g /
     /// (p+g)` share of processed tokens.
     pub fn generation_throughput(&self, p: usize, g: usize, kv_bytes: u64) -> f64 {
-        self.t_max(p, g, kv_bytes) * g as f64 / (p + g) as f64
+        self.t_max(p, g, kv_bytes) * usize_f64(g) / usize_f64(p + g)
     }
 
     // -- Eq. 5–6: CPU-side requirements ------------------------------------
@@ -142,8 +144,8 @@ impl Stage1Model {
     /// never stall: `B_mem = (M / M_weight) * B_IO`, with `M` the total
     /// bytes touched per iteration (weights + KV cache).
     pub fn cpu_mem_bw_required(&self, kv_bytes: u64) -> f64 {
-        let m_weight = self.model.model_bytes() as f64;
-        let m_total = m_weight + kv_bytes as f64;
+        let m_weight = u64_f64(self.model.model_bytes());
+        let m_total = m_weight + u64_f64(kv_bytes);
         (m_total / m_weight) * self.machine.pcie_bw
     }
 
@@ -159,7 +161,7 @@ impl Stage1Model {
     /// saxpby accumulate, i.e. 2 FLOPs / 2 bytes = 1 FLOP/byte.
     pub fn cpu_flops_required(&self, kv_bytes: u64) -> f64 {
         const I_CPU_ATTN: f64 = 1.0; // FLOP per KV byte
-        2.0 * self.model.gqa_group() as f64 * I_CPU_ATTN * self.b_kv(kv_bytes)
+        2.0 * usize_f64(self.model.gqa_group()) * I_CPU_ATTN * self.b_kv(kv_bytes)
     }
 
     // -- Eq. 7: prefill/decode overlap -------------------------------------
@@ -167,8 +169,68 @@ impl Stage1Model {
     /// Eq. 7: effective KV capacity under overlapped scheduling:
     /// `C_eff = (p + g) / (p + g/2) * C_KV`.
     pub fn effective_kv(&self, p: usize, g: usize, kv_bytes: u64) -> f64 {
-        let (p, g) = (p as f64, g as f64);
-        (p + g) / (p + g / 2.0) * kv_bytes as f64
+        let (p, g) = (usize_f64(p), usize_f64(g));
+        (p + g) / (p + g / 2.0) * u64_f64(kv_bytes)
+    }
+
+    // -- Expert-granular residency (expert-aware extension) ----------------
+
+    /// Expected number of experts streamed over the link per layer per
+    /// pass when the `pinned` hottest experts stay HBM-resident under
+    /// Zipf(`zipf_s`) routing with `n_tokens` parallel tokens: the tail
+    /// `Σ_{r ≥ pinned} a_r` of the rank activation probabilities.
+    pub fn experts_streamed(&self, zipf_s: f64, pinned: usize, n_tokens: usize) -> f64 {
+        let weights = zipf_weights(self.model.n_experts, zipf_s);
+        rank_activation_probs(&weights, self.model.top_k, n_tokens)
+            .iter()
+            .skip(pinned)
+            .sum()
+    }
+
+    /// Expert-cache hit rate: the share of per-pass expert weight traffic
+    /// served from HBM instead of the link. `0` when nothing is pinned;
+    /// approaches the pinned experts' activation mass as skew grows.
+    pub fn expert_hit_rate(&self, zipf_s: f64, pinned: usize, n_tokens: usize) -> f64 {
+        let weights = zipf_weights(self.model.n_experts, zipf_s);
+        let probs = rank_activation_probs(&weights, self.model.top_k, n_tokens);
+        let total: f64 = probs.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let resident: f64 = probs.iter().take(pinned).sum();
+        resident / total
+    }
+
+    /// δ under expert-granular residency: dense layer bytes always
+    /// stream, but only the expected cold activated experts cross the
+    /// link. `pinned = 0` disables the residency map (the mover streams
+    /// whole dense layers) and returns [`delta`](Self::delta) bit-for-bit.
+    pub fn delta_routed(&self, zipf_s: f64, pinned: usize, n_tokens: usize) -> f64 {
+        if pinned == 0 {
+            return self.delta();
+        }
+        let streamed = self.experts_streamed(zipf_s, pinned, n_tokens);
+        let skipped = usize_f64(self.model.n_experts) - streamed;
+        let saved = usize_f64(self.model.n_layers)
+            * skipped
+            * u64_f64(self.model.expert_bytes());
+        (u64_f64(self.model.model_bytes()) - saved) / self.machine.pcie_bw
+    }
+
+    /// Eq. 4 with the routed δ: the IO-bound arm shrinks by the expert
+    /// cache's hit rate while the GPU arm is untouched.
+    pub fn t_max_routed(
+        &self,
+        p: usize,
+        g: usize,
+        kv_bytes: u64,
+        zipf_s: f64,
+        pinned: usize,
+        n_tokens: usize,
+    ) -> f64 {
+        let delta = self.delta_routed(zipf_s, pinned, n_tokens);
+        let io_bound = self.pme(p, g) * self.kv_tokens(kv_bytes) / delta;
+        io_bound.min(self.t_gpu())
     }
 }
 
@@ -309,5 +371,46 @@ mod tests {
         let s1 = m();
         let t = s1.t_max(100, 100, 100 << 30);
         assert!((s1.generation_throughput(100, 100, 100 << 30) - t / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn routed_delta_disabled_is_bit_identical() {
+        // The pinned = 0 gate must reproduce the dense sweep exactly —
+        // the analytic twin of the engine/simulator identity contract.
+        let s1 = m();
+        assert_eq!(s1.delta_routed(1.2, 0, 4096).to_bits(), s1.delta().to_bits());
+        assert_eq!(
+            s1.t_max_routed(98, 32, 70 << 30, 1.2, 0, 4096).to_bits(),
+            s1.t_max(98, 32, 70 << 30).to_bits()
+        );
+    }
+
+    #[test]
+    fn expert_hit_rate_grows_with_skew_and_pinning() {
+        let s1 = m();
+        // More pinned experts -> higher hit rate; more skew -> higher hit
+        // rate at a fixed pinned count (the hot experts carry more mass).
+        let h1 = s1.expert_hit_rate(1.2, 1, 4096);
+        let h2 = s1.expert_hit_rate(1.2, 2, 4096);
+        assert!(h2 > h1 && h1 > 0.0, "h1={h1} h2={h2}");
+        assert!(s1.expert_hit_rate(2.0, 1, 64) > s1.expert_hit_rate(0.5, 1, 64));
+        // Pinning everything serves all expert traffic from HBM.
+        let all = s1.expert_hit_rate(1.2, s1.model.n_experts, 4096);
+        assert!((all - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routed_delta_shrinks_with_pinning() {
+        let s1 = m();
+        let dense = s1.delta();
+        let d1 = s1.delta_routed(1.2, 1, 4096);
+        let d2 = s1.delta_routed(1.2, 2, 4096);
+        assert!(d1 < dense, "{d1} vs dense {dense}");
+        assert!(d2 < d1);
+        // Routed IO can only help the IO-bound arm of Eq. 4.
+        assert!(
+            s1.t_max_routed(98, 32, 70 << 30, 1.2, 1, 4096)
+                >= s1.t_max(98, 32, 70 << 30)
+        );
     }
 }

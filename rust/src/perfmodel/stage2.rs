@@ -9,6 +9,7 @@
 
 use super::stage1::Stage1Model;
 use crate::config::{MachineSpec, ModelSpec};
+use crate::util::cast::{u64_f64, usize_f64};
 
 /// Which side of Eq. 14's `min` binds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,16 +60,16 @@ impl Stage2Model {
     /// Number of KV-cache blocks `N` for a byte budget.
     pub fn n_blocks(&self, kv_bytes: u64) -> f64 {
         let block_bytes =
-            self.block_size as f64 * self.stage1.model.kv_bytes_per_token() as f64;
-        kv_bytes as f64 / block_bytes
+            usize_f64(self.block_size) * u64_f64(self.stage1.model.kv_bytes_per_token());
+        u64_f64(kv_bytes) / block_bytes
     }
 
     /// Lifetime block-iterations of one sequence: `Σ_{i=0}^{g} ⌈(p+i)/b⌉`
     /// (the denominator of Eq. 8). Paging rounds every footprint up to a
     /// whole block, which is what shifts Fig. 4's knee right.
     pub fn lifetime_block_cost(&self, p: usize, g: usize) -> f64 {
-        let b = self.block_size as f64;
-        (0..=g).map(|i| ((p + i) as f64 / b).ceil()).sum()
+        let b = usize_f64(self.block_size);
+        (0..=g).map(|i| (usize_f64(p + i) / b).ceil()).sum()
     }
 
     /// Eq. 8: sequences prefilled per iteration, `q = N / Σ ⌈(p+i)/b⌉`.
@@ -88,21 +89,21 @@ impl Stage2Model {
     pub fn t1(&self, p: usize, g: usize, kv_bytes: u64, k: f64) -> f64 {
         let q = self.q(p, g, kv_bytes);
         let delta = self.stage1.delta();
-        k * g as f64 / ((k / q + g as f64) * delta)
+        k * usize_f64(g) / ((k / q + usize_f64(g)) * delta)
     }
 
     /// Eq. 11: steady-state prefill token rate per iteration when the GPU
     /// binds, `T_prefill = T_GPU · p / (p + g)`.
     pub fn t_prefill_iter(&self, p: usize, g: usize) -> f64 {
-        self.t_gpu_iter() * p as f64 / (p + g) as f64
+        self.t_gpu_iter() * usize_f64(p) / usize_f64(p + g)
     }
 
     /// Eq. 12: total pipeline iterations in the GPU-bound regime.
     pub fn iterations_gpu_bound(&self, p: usize, g: usize, k: f64) -> f64 {
         let t_pre = self.t_prefill_iter(p, g);
         let t_gpu = self.t_gpu_iter();
-        let g = g as f64;
-        let main = (k * p as f64 - (t_pre + t_gpu) / 2.0 * g) / t_pre;
+        let g = usize_f64(g);
+        let main = (k * usize_f64(p) - (t_pre + t_gpu) / 2.0 * g) / t_pre;
         2.0 * g + main.max(0.0)
     }
 
@@ -110,7 +111,7 @@ impl Stage2Model {
     /// compute binds.
     pub fn t2(&self, p: usize, g: usize, k: f64) -> f64 {
         let it = self.iterations_gpu_bound(p, g, k);
-        k * g as f64 / (it * self.stage1.delta())
+        k * usize_f64(g) / (it * self.stage1.delta())
     }
 
     /// Eq. 14 and derived quantities.
@@ -121,10 +122,10 @@ impl Stage2Model {
         let t2 = self.t2(p, g, k);
         let throughput = t1.min(t2);
         let regime = if t1 <= t2 { Regime::MemoryCapacity } else { Regime::GpuCompute };
-        let wall_secs = k * g as f64 / throughput;
+        let wall_secs = k * usize_f64(g) / throughput;
         let iterations = wall_secs / self.stage1.delta();
         // Processed (prefill+decode) tokens per second over the GPU rate.
-        let processed = throughput * (p + g) as f64 / g as f64;
+        let processed = throughput * usize_f64(p + g) / usize_f64(g);
         let gpu_utilization = (processed / self.stage1.t_gpu()).min(1.0);
         Stage2Prediction { q, t1, t2, throughput, wall_secs, iterations, gpu_utilization, regime }
     }
@@ -132,7 +133,7 @@ impl Stage2Model {
     /// The paper's default request-batch sizing for evaluation: `K = 5 g q`
     /// (§7 "the request batch size is set to 5gq").
     pub fn default_batch(&self, p: usize, g: usize, kv_bytes: u64) -> f64 {
-        5.0 * g as f64 * self.q(p, g, kv_bytes)
+        5.0 * usize_f64(g) * self.q(p, g, kv_bytes)
     }
 }
 

@@ -111,6 +111,18 @@ impl PassPlan {
     pub fn is_empty(&self) -> bool {
         self.decode.is_empty() && self.prefill.is_empty()
     }
+
+    /// The per-layer activated-expert sets of this pass under `router`'s
+    /// routing trace: the union over every scheduled token row (decode
+    /// rows feed one position each, prefill chunks a position range).
+    pub fn routed(&self, router: &crate::workload::ExpertRouter) -> crate::workload::PassRouting {
+        let decode = self.decode.iter().copied();
+        let prefill = self
+            .prefill
+            .iter()
+            .flat_map(|c| (c.start..c.start + c.len).map(move |pos| (c.id, pos)));
+        router.route_rows(decode.chain(prefill))
+    }
 }
 
 /// The combined Prefill + Decode scheduler.

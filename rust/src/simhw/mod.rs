@@ -14,14 +14,16 @@
 //! With prefill/decode overlap (MoE-Lens) the iteration takes the max of
 //! the lanes; the baselines compose them differently (`baselines`).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 use crate::config::{MachineSpec, ModelSpec};
 use crate::kvcache::{KvLayout, PagedLayout};
 use crate::metrics::{LatencyStats, PassRecord, RequestTracker, RunReport, Trace};
 use crate::model::Request;
-use crate::sched::{AdmissionPolicy, SchedConfig, Scheduler, ServiceModel, VictimPolicy};
-use crate::workload::duplicate_id;
+use crate::sched::{AdmissionPolicy, PassPlan, SchedConfig, Scheduler, ServiceModel, VictimPolicy};
+use crate::transfer::ResidencyMap;
+use crate::util::cast::usize_u64;
+use crate::workload::{duplicate_id, ExpertRouter, RoutingSpec};
 
 /// Memory-controller contention coefficient: fraction of IO slowdown per
 /// unit of CPU-attention lane occupancy. Calibrated to §8.2's observation
@@ -87,6 +89,13 @@ pub struct SimConfig {
     pub pipeline_depth: usize,
     /// Per-pass host plan/pack/embed cost (default zero).
     pub host_plan: HostPlanCost,
+    /// Expert-routing trace (`None` = uniform routing, default seed).
+    /// Only read when [`pinned_experts`](Self::pinned_experts) is nonzero.
+    pub routing: Option<RoutingSpec>,
+    /// Experts pinned in HBM per layer (popularity order). `0` disables
+    /// expert-granular residency: every pass sweeps the full model and
+    /// pre-refactor traces are f64-identical.
+    pub pinned_experts: usize,
 }
 
 impl SimConfig {
@@ -103,6 +112,8 @@ impl SimConfig {
             victim: VictimPolicy::default(),
             pipeline_depth: 0,
             host_plan: HostPlanCost::default(),
+            routing: None,
+            pinned_experts: 0,
         }
     }
 
@@ -160,7 +171,19 @@ impl<'a> CostModel<'a> {
 
     /// Compose one overlapped iteration (§8.2 contention included).
     pub fn overlapped_iter(&self, n_tokens: usize, kv_tokens: u64) -> LaneCosts {
-        let io = self.delta();
+        self.overlapped_iter_bytes(n_tokens, kv_tokens, self.model.model_bytes())
+    }
+
+    /// [`overlapped_iter`](Self::overlapped_iter) with an explicit weight
+    /// sweep size — expert-granular residency shrinks the per-pass sweep
+    /// below `model_bytes()` when pinned experts skip the link.
+    pub fn overlapped_iter_bytes(
+        &self,
+        n_tokens: usize,
+        kv_tokens: u64,
+        weight_bytes: u64,
+    ) -> LaneCosts {
+        let io = self.machine.transfer_secs(weight_bytes);
         let gpu = self.gpu_time(n_tokens);
         let cpu = self.cpu_attn_time(kv_tokens);
         // CPU attention and the DMA engine contend at the memory
@@ -171,12 +194,55 @@ impl<'a> CostModel<'a> {
     }
 }
 
+/// Expert-granular residency state mirrored on the virtual clock: the
+/// same router, pinned set, and prediction width the engine's data mover
+/// runs with, so simulated IO per pass matches the mover's protocol.
+struct SimExpert {
+    router: ExpertRouter,
+    residency: ResidencyMap,
+    predict_n: usize,
+}
+
+impl SimExpert {
+    /// Weight bytes streamed over the link for one pass under the data
+    /// mover's protocol: pinned experts never cross the link; layers whose
+    /// exact routing was posted before their transfer stream
+    /// `activated \ pinned`; and on pipelined passes after the first, the
+    /// two §6.4 +2-prefetched layers were requested before routing was
+    /// known, so they stream `predicted \ pinned` plus the exposed top-up
+    /// `activated \ (pinned ∪ predicted)`.
+    fn pass_bytes(&self, plan: &PassPlan, model: &ModelSpec, prefetched_head: bool) -> u64 {
+        let routing = plan.routed(&self.router);
+        let mut bytes =
+            model.model_bytes() - usize_u64(model.n_layers) * model.layer_bytes();
+        for (layer, activated) in routing.per_layer.iter().enumerate() {
+            let mut streamed: BTreeSet<usize> = activated
+                .iter()
+                .copied()
+                .filter(|&e| !self.residency.is_resident(layer, e))
+                .collect();
+            if prefetched_head && layer < 2 {
+                streamed.extend(
+                    self.router
+                        .predicted(layer, self.predict_n)
+                        .into_iter()
+                        .filter(|&e| !self.residency.is_resident(layer, e)),
+                );
+            }
+            bytes += model.layer_dense_bytes()
+                + usize_u64(streamed.len()) * model.expert_bytes();
+        }
+        bytes
+    }
+}
+
 /// The MoE-Lens policy on the simulated machine: resource-aware scheduler
 /// with prefill/decode overlap, VSLPipe-style lane overlap per iteration.
 pub struct SimMachine {
     pub cfg: SimConfig,
     pub sched: Scheduler,
     pub kv: PagedLayout,
+    expert: Option<SimExpert>,
 }
 
 impl SimMachine {
@@ -193,7 +259,24 @@ impl SimMachine {
                 .with_victim(cfg.victim)
                 .with_service(ServiceModel::from_costs(delta, budget)),
         );
-        SimMachine { cfg, sched, kv: PagedLayout::new(layout) }
+        // Expert-granular residency mirrors the engine's gate exactly:
+        // active only with a nonzero pinned set, so the default config
+        // reproduces pre-refactor traces f64-identically.
+        let expert = if cfg.pinned_experts > 0 {
+            let spec = cfg.routing.unwrap_or_else(RoutingSpec::uniform);
+            let router = ExpertRouter::new(&cfg.model, spec);
+            let hbm_budget = ResidencyMap::budget_from_bytes(
+                cfg.machine.gpu_mem_for_serving,
+                cfg.model.expert_bytes(),
+            );
+            let residency =
+                ResidencyMap::pin_hottest(&router, cfg.pinned_experts, hbm_budget);
+            let predict_n = router.predicted_count(budget);
+            Some(SimExpert { router, residency, predict_n })
+        } else {
+            None
+        };
+        SimMachine { cfg, sched, kv: PagedLayout::new(layout), expert }
     }
 
     /// Run a closed request batch to completion; returns the execution
@@ -331,7 +414,18 @@ impl SimMachine {
             // attends over its sequence's full cache.
             let kv_scanned: u64 =
                 plan.decode.iter().map(|&(id, _)| self.kv.len(id) as u64).sum();
-            let lanes = costs.overlapped_iter(plan.total_tokens(), kv_scanned);
+            // Expert-granular residency shrinks the weight sweep: pinned
+            // experts never cross the link and only activated (or +2
+            // predicted) cold experts stream. Disabled (`None`) takes the
+            // full-model sweep — bit-for-bit the pre-refactor cost.
+            let sweep_bytes = match &self.expert {
+                Some(ex) => {
+                    ex.pass_bytes(&plan, &self.cfg.model, pipelined && pass_id > 0)
+                }
+                None => self.cfg.model.model_bytes(),
+            };
+            let lanes =
+                costs.overlapped_iter_bytes(plan.total_tokens(), kv_scanned, sweep_bytes);
             let exec = lanes.io_contended.max(lanes.gpu).max(lanes.cpu);
             let dur = host_exposed + exec;
             now += dur;
@@ -788,5 +882,83 @@ mod tests {
         assert_eq!(quiet.io_contended, quiet.io);
         assert!(heavy.io_contended > heavy.io);
         assert!(heavy.io_contended <= heavy.io * (1.0 + CONTENTION_KAPPA) + 1e-9);
+    }
+
+    #[test]
+    fn uniform_routing_with_zero_pinning_is_f64_identical() {
+        // The refactor's identity contract: announcing a routing trace
+        // while keeping pinned_experts = 0 must leave the virtual clock
+        // bit-for-bit untouched (the residency gate is off, so every pass
+        // sweeps the full model exactly as before).
+        let base = small_sim(70);
+        let mut routed = small_sim(70);
+        routed.routing = Some(RoutingSpec::uniform());
+        routed.pinned_experts = 0;
+        let (t0, r0) = run_uniform(base, 98, 32, 300);
+        let (t1, r1) = run_uniform(routed, 98, 32, 300);
+        assert_eq!(r0.wall_secs.to_bits(), r1.wall_secs.to_bits());
+        assert_eq!(t0.passes.len(), t1.passes.len());
+        for (a, b) in t0.passes.iter().zip(&t1.passes) {
+            assert_eq!(a.t_end.to_bits(), b.t_end.to_bits());
+            assert_eq!(a.duration.to_bits(), b.duration.to_bits());
+            assert_eq!(a.io_time.to_bits(), b.io_time.to_bits());
+            assert_eq!(a.generated, b.generated);
+        }
+    }
+
+    #[test]
+    fn pinning_hot_experts_cuts_io_under_skew() {
+        // Zipf-skewed routing concentrates activations on a few experts
+        // per layer; pinning the hottest one per layer must strictly
+        // shrink the streamed sweep (and thus exposed IO) versus the
+        // blind full-model stream, without changing token accounting.
+        let mut blind = small_sim(70);
+        blind.routing = Some(RoutingSpec::zipf(1.2, 7));
+        let mut pinned = blind.clone();
+        pinned.pinned_experts = 1;
+        let (tb, rb) = run_uniform(blind, 98, 32, 300);
+        let (tp, rp) = run_uniform(pinned, 98, 32, 300);
+        assert_eq!(rb.generated_tokens, rp.generated_tokens);
+        let io = |t: &Trace| t.passes.iter().map(|p| p.io_time).sum::<f64>();
+        assert!(
+            io(&tp) < io(&tb),
+            "pinned exposed IO {} must undercut blind {}",
+            io(&tp),
+            io(&tb)
+        );
+        assert!(rp.wall_secs < rb.wall_secs);
+    }
+
+    #[test]
+    fn pipelined_residency_matches_unpinned_token_accounting() {
+        // The +2-prefetched head layers stream predicted experts and top
+        // up the misses; scheduling decisions (token counts, finishes)
+        // must not depend on the residency map.
+        let mut cfg = small_sim(70);
+        cfg.pipeline_depth = 1;
+        cfg.host_plan = HostPlanCost::new(1e-3, 1e-6);
+        cfg.routing = Some(RoutingSpec::zipf(1.0, 11));
+        cfg.pinned_experts = 1;
+        let (trace, report) = run_uniform(cfg, 98, 32, 300);
+        assert_eq!(report.generated_tokens, 300 * 32);
+        for p in &trace.passes {
+            assert!(
+                (p.lanes_total() - p.duration).abs() < 1e-9,
+                "pass {}: lanes {} vs duration {}",
+                p.pass_id,
+                p.lanes_total(),
+                p.duration
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds HBM expert budget")]
+    fn pinned_set_over_hbm_budget_is_rejected() {
+        // 16 GB of serving HBM holds 48 Mixtral-8x7B experts; pinning two
+        // per layer across 32 layers asks for 64 and must panic loudly.
+        let mut cfg = small_sim(70);
+        cfg.pinned_experts = 2;
+        SimMachine::new(cfg);
     }
 }

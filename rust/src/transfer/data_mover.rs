@@ -21,20 +21,59 @@
 //! pass's last layers streams the *next pass's* layer 0/1 while the LM
 //! head computes — the head↔prefetch overlap of the double-buffered pass
 //! pipeline.
+//!
+//! # Expert-granular mode
+//!
+//! With [`ExpertMode`], the unit of link accounting drops from layer to
+//! expert. The engine posts each stage's exact activated-expert set via
+//! [`DataMover::post_routing`] *before* enqueuing that stage's request;
+//! stages requested ahead of their pass's planning (the cross-pass `+2`
+//! prefetch) have no posted set, so the mover streams the
+//! popularity-predicted top-N experts instead — §6.4's blind next-layer
+//! prefetch becomes popularity-predicted. Either way, pinned experts
+//! ([`ResidencyMap`]) never move. At the stage boundary,
+//! [`DataMover::wait_layer_routed`] compares the set actually streamed
+//! against the experts the pass really activated and *tops up* the
+//! shortfall — mispredicted experts are charged to the link while the
+//! stage blocks, i.e. as exposed IO.
+//!
+//! Modeling note: the compiled kernels read full dense `w1/w3/w2`
+//! tensors (routing happens inside the kernel), so the staged slot is
+//! always filled completely and token numerics are bit-identical in
+//! every mode. Residency changes only *link accounting*: streamed
+//! regions (dense tensors + cold activated experts) go through charged
+//! link transactions; pinned and non-activated bytes are plain memcpys
+//! standing in for "already HBM-resident / never fetched".
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
 use std::thread::JoinHandle;
 
 use super::buffer::WeightBuffer;
 use super::pcie::PcieLink;
-use super::weights::WeightFile;
+use super::residency::ResidencyMap;
+use super::weights::{LayerRegions, WeightFile};
+use crate::workload::ExpertRouter;
 
 /// A layer-granularity transfer request.
 #[derive(Debug, Clone, Copy)]
 pub struct TransferRequest {
     pub layer: usize,
+}
+
+/// Expert-granular streaming configuration: the routing oracle, the
+/// pinned-set residency map, and how many experts to predict for stages
+/// whose routing is not yet known.
+#[derive(Clone)]
+pub struct ExpertMode {
+    pub router: Arc<ExpertRouter>,
+    pub residency: Arc<ResidencyMap>,
+    /// Top-N popularity prediction used for stages streamed before their
+    /// pass's routing is posted (the cross-pass `+2` prefetch).
+    pub predict_n: usize,
 }
 
 struct State {
@@ -44,6 +83,13 @@ struct State {
     /// evicted. Monotone.
     consumed: usize,
     shutdown: bool,
+    /// Exact activated-expert sets posted per stage (expert mode). Posted
+    /// strictly before the stage's request is enqueued, so the worker's
+    /// view is deterministic.
+    routes: BTreeMap<usize, BTreeSet<usize>>,
+    /// Experts actually streamed per staged stage (expert mode) — the set
+    /// `wait_layer_routed` tops up against.
+    streamed: BTreeMap<usize, BTreeSet<usize>>,
 }
 
 struct Shared {
@@ -51,12 +97,34 @@ struct Shared {
     cv: Condvar,
 }
 
+impl Shared {
+    /// Lock, recovering the guard from a poisoned mutex (a panicking
+    /// engine thread must not wedge the mover's shutdown path).
+    fn lock(&self) -> MutexGuard<'_, State> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn wait<'a>(&self, guard: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+        match self.cv.wait(guard) {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
 /// The mover thread + its request queue.
 pub struct DataMover {
     tx: Option<Sender<TransferRequest>>,
     worker: Option<JoinHandle<()>>,
     shared: Arc<Shared>,
+    link: Arc<PcieLink>,
     packet_elems: usize,
+    /// Bytes of one expert's slices (expert mode only; 0 otherwise).
+    expert_bytes: u64,
+    mode: Option<ExpertMode>,
 }
 
 impl DataMover {
@@ -64,31 +132,73 @@ impl DataMover {
     pub const DEFAULT_PACKET_BYTES: usize = 100 << 20;
 
     /// Spawn the mover over a weight file, staging buffer, and link. All
-    /// three are shared with the engine via `Arc`.
+    /// three are shared with the engine via `Arc`. Streams whole layers
+    /// (the legacy dense path).
     pub fn spawn(
         weights: Arc<WeightFile>,
         buffer: Arc<WeightBuffer>,
         link: Arc<PcieLink>,
         packet_bytes: usize,
     ) -> Self {
+        Self::spawn_inner(weights, buffer, link, packet_bytes, None)
+    }
+
+    /// Spawn in expert-granular mode: pinned experts never stream, cold
+    /// experts stream per activated (or predicted) set.
+    pub fn spawn_expert(
+        weights: Arc<WeightFile>,
+        buffer: Arc<WeightBuffer>,
+        link: Arc<PcieLink>,
+        packet_bytes: usize,
+        mode: ExpertMode,
+    ) -> Self {
+        Self::spawn_inner(weights, buffer, link, packet_bytes, Some(mode))
+    }
+
+    fn spawn_inner(
+        weights: Arc<WeightFile>,
+        buffer: Arc<WeightBuffer>,
+        link: Arc<PcieLink>,
+        packet_bytes: usize,
+        mode: Option<ExpertMode>,
+    ) -> Self {
         assert!(packet_bytes >= 4);
         let packet_elems = packet_bytes / 4;
         let shared = Arc::new(Shared {
-            state: Mutex::new(State { ready: BTreeSet::new(), consumed: 0, shutdown: false }),
+            state: Mutex::new(State {
+                ready: BTreeSet::new(),
+                consumed: 0,
+                shutdown: false,
+                routes: BTreeMap::new(),
+                streamed: BTreeMap::new(),
+            }),
             cv: Condvar::new(),
         });
+        // Per-layer dense/expert region tables (expert mode only).
+        let regions: Option<Vec<LayerRegions>> = mode.as_ref().map(|m| {
+            let n = m.router.n_experts();
+            (0..weights.n_layers()).map(|l| weights.layer_regions(l, n)).collect()
+        });
+        let expert_bytes = regions
+            .as_ref()
+            .and_then(|r| r.first())
+            .map(|r| r.expert_elems() as u64 * 4)
+            .unwrap_or(0);
         let (tx, rx) = channel::<TransferRequest>();
         let worker = {
             let shared = Arc::clone(&shared);
+            let link = Arc::clone(&link);
+            let mode = mode.clone();
             std::thread::spawn(move || {
                 let n_layers = weights.n_layers().max(1);
                 while let Ok(req) = rx.recv() {
                     // Back-pressure: only two slots exist; filling stage S
                     // overwrites S-2's slot, so wait until S-2 is consumed.
+                    let route: Option<BTreeSet<usize>>;
                     {
-                        let mut st = shared.state.lock().unwrap();
+                        let mut st = shared.lock();
                         while !st.shutdown && req.layer >= 2 && st.consumed + 2 <= req.layer {
-                            st = shared.cv.wait(st).unwrap();
+                            st = shared.wait(st);
                         }
                         if st.shutdown {
                             return;
@@ -96,69 +206,192 @@ impl DataMover {
                         if req.layer >= 2 {
                             st.ready.remove(&(req.layer - 2));
                         }
+                        route = st.routes.get(&req.layer).cloned();
                     }
                     // Stage -> source layer: wraps so stage ids may run
                     // across pass boundaries (pipelined engine).
-                    let src = weights.layer_data(req.layer % n_layers);
-                    buffer.fill(req.layer, |dst| {
-                        // Packetized copy: one link transaction per packet.
-                        let mut off = 0;
-                        while off < src.len() {
-                            let end = (off + packet_elems).min(src.len());
-                            link.transfer(&src[off..end], &mut dst[off..end]);
-                            off = end;
+                    let layer = req.layer % n_layers;
+                    let src = weights.layer_data(layer);
+                    let mut streamed_set: Option<BTreeSet<usize>> = None;
+                    match (&mode, &regions) {
+                        (Some(m), Some(regs)) if m.residency.enabled() => {
+                            // Expert-granular staging. Posted exact set, or
+                            // the popularity-predicted top-N when the stage
+                            // runs ahead of its pass's planning.
+                            let target = route
+                                .unwrap_or_else(|| m.router.predicted(layer, m.predict_n));
+                            let streamed: BTreeSet<usize> = target
+                                .iter()
+                                .copied()
+                                .filter(|&e| !m.residency.is_resident(layer, e))
+                                .collect();
+                            let reg = &regs[layer];
+                            buffer.fill(req.layer, |dst| {
+                                // Uncharged memcpys: pinned experts
+                                // (HBM-resident) and cold experts nobody
+                                // activated (never fetched) — staged only
+                                // because the kernels read dense tensors.
+                                for (e, ranges) in reg.expert.iter().enumerate() {
+                                    if streamed.contains(&e) {
+                                        continue;
+                                    }
+                                    for &(off, len) in ranges {
+                                        dst[off..off + len]
+                                            .copy_from_slice(&src[off..off + len]);
+                                    }
+                                }
+                                // Charged, packetized link transactions:
+                                // dense tensors + streamed experts.
+                                let mut charged: Vec<(usize, usize)> = reg.dense.clone();
+                                for &e in &streamed {
+                                    charged.extend_from_slice(&reg.expert[e]);
+                                }
+                                for (off, len) in charged {
+                                    let mut o = off;
+                                    while o < off + len {
+                                        let end = (o + packet_elems).min(off + len);
+                                        link.transfer(&src[o..end], &mut dst[o..end]);
+                                        o = end;
+                                    }
+                                }
+                            });
+                            streamed_set = Some(streamed);
                         }
-                    });
-                    let mut st = shared.state.lock().unwrap();
+                        _ => {
+                            // Legacy dense path: the whole layer is one
+                            // charged, packetized run.
+                            buffer.fill(req.layer, |dst| {
+                                let mut off = 0;
+                                while off < src.len() {
+                                    let end = (off + packet_elems).min(src.len());
+                                    link.transfer(&src[off..end], &mut dst[off..end]);
+                                    off = end;
+                                }
+                            });
+                        }
+                    }
+                    let mut st = shared.lock();
+                    if let Some(s) = streamed_set {
+                        st.streamed.insert(req.layer, s);
+                    }
                     st.ready.insert(req.layer);
                     shared.cv.notify_all();
                 }
             })
         };
-        DataMover { tx: Some(tx), worker: Some(worker), shared, packet_elems }
+        DataMover {
+            tx: Some(tx),
+            worker: Some(worker),
+            shared,
+            link,
+            packet_elems,
+            expert_bytes,
+            mode,
+        }
     }
 
     pub fn packet_bytes(&self) -> usize {
         self.packet_elems * 4
     }
 
+    /// Expert-granular streaming is active.
+    pub fn expert_mode(&self) -> bool {
+        self.mode.as_ref().map(|m| m.residency.enabled()).unwrap_or(false)
+    }
+
     /// Enqueue a layer transfer (returns immediately — the §6.4 prefetch
     /// at the start of each stage).
     pub fn request(&self, layer: usize) {
-        self.tx
-            .as_ref()
-            .expect("mover running")
-            .send(TransferRequest { layer })
-            .expect("mover thread alive");
+        let Some(tx) = self.tx.as_ref() else {
+            panic!("mover not running");
+        };
+        if tx.send(TransferRequest { layer }).is_err() {
+            panic!("mover thread exited");
+        }
+    }
+
+    /// Post a stage's exact activated-expert set. Must happen *before*
+    /// [`DataMover::request`] for that stage — the channel send then
+    /// orders the map write ahead of the worker's read, so accounting is
+    /// deterministic. Stages requested ahead of planning are deliberately
+    /// never posted (they stream the popularity prediction).
+    pub fn post_routing(&self, stage: usize, activated: &BTreeSet<usize>) {
+        let mut st = self.shared.lock();
+        st.routes.insert(stage, activated.clone());
     }
 
     /// Stage-boundary sync: block until `layer` is fully staged.
     pub fn wait_layer(&self, layer: usize) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.lock();
         while !st.ready.contains(&layer) {
-            st = self.shared.cv.wait(st).unwrap();
+            st = self.shared.wait(st);
         }
+    }
+
+    /// Expert-mode stage boundary: block until staged, then charge the
+    /// link for any activated cold expert the stream missed (misprediction
+    /// top-up — the bytes were staged with the slot, so this is
+    /// accounting-only). Returns the top-up cost, incurred while the
+    /// stage blocks: exposed IO.
+    pub fn wait_layer_routed(&self, stage: usize, activated: &BTreeSet<usize>) -> Duration {
+        if !self.expert_mode() {
+            self.wait_layer(stage);
+            return Duration::ZERO;
+        }
+        let missing: Vec<usize> = {
+            let mut st = self.shared.lock();
+            while !st.ready.contains(&stage) {
+                st = self.shared.wait(st);
+            }
+            let Some(mode) = self.mode.as_ref() else {
+                panic!("expert_mode() implies mode");
+            };
+            let layer = stage % mode.router.n_layers().max(1);
+            let streamed = st.streamed.entry(stage).or_default();
+            let missing: Vec<usize> = activated
+                .iter()
+                .copied()
+                .filter(|&e| !mode.residency.is_resident(layer, e) && !streamed.contains(&e))
+                .collect();
+            streamed.extend(missing.iter().copied());
+            missing
+        };
+        if missing.is_empty() {
+            Duration::ZERO
+        } else {
+            self.link.charge(missing.len() as u64 * self.expert_bytes)
+        }
+    }
+
+    /// Experts streamed for a staged stage (telemetry / tests).
+    pub fn streamed_for(&self, stage: usize) -> Option<BTreeSet<usize>> {
+        self.shared.lock().streamed.get(&stage).cloned()
     }
 
     /// Mark `layer` consumed: its slot may be reused for `layer + 2`.
     pub fn done_with(&self, layer: usize) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.lock();
         st.consumed = st.consumed.max(layer + 1);
+        // Routing/streaming records for consumed stages are dead.
+        st.routes = st.routes.split_off(&(layer + 1));
+        st.streamed = st.streamed.split_off(&(layer + 1));
         self.shared.cv.notify_all();
     }
 
     /// Non-blocking readiness check (telemetry / tests).
     pub fn is_ready(&self, layer: usize) -> bool {
-        self.shared.state.lock().unwrap().ready.contains(&layer)
+        self.shared.lock().ready.contains(&layer)
     }
 
     /// Start a new pass: layer indices restart at 0, so the consumption
     /// cursor and readiness set reset. Callers must have consumed every
     /// outstanding request (the engine's per-pass epilogue guarantees it).
     pub fn reset(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.lock();
         st.ready.clear();
         st.consumed = 0;
+        st.routes.clear();
+        st.streamed.clear();
         self.shared.cv.notify_all();
     }
 }
@@ -166,7 +399,7 @@ impl DataMover {
 impl Drop for DataMover {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.lock();
             st.shutdown = true;
             self.shared.cv.notify_all();
         }
@@ -180,8 +413,10 @@ impl Drop for DataMover {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ModelSpec;
     use crate::transfer::pcie::LinkTiming;
     use crate::transfer::weights::{LayerView, TensorView};
+    use crate::workload::RoutingSpec;
 
     fn toy_setup(n_layers: usize, layer_elems: usize) -> (Arc<WeightFile>, Arc<WeightBuffer>) {
         let mut data = Vec::new();
@@ -325,5 +560,132 @@ mod tests {
         }
         mover.wait_layer(1);
         drop(mover); // worker is blocked on back-pressure; Drop must join
+    }
+
+    // ---- expert-granular mode ----
+
+    /// 2 layers of `tiny`-shaped expert tensors: per layer, a dense ln
+    /// (8 elems) + w1/w3/w2 with 4 experts x 4 elems each.
+    fn expert_setup() -> (Arc<WeightFile>, Arc<WeightBuffer>, ExpertMode) {
+        let n_layers = 2;
+        let n_experts = 4;
+        let mut data = Vec::new();
+        let mut tensors = Vec::new();
+        let mut layers = Vec::new();
+        for li in 0..n_layers {
+            let start = data.len();
+            let mut off = start;
+            let mut push = |name: &str, len: usize, data: &mut Vec<f32>, off: &mut usize| {
+                data.extend((0..len).map(|i| (li * 1000 + *off - start + i) as f32));
+                let t = TensorView {
+                    name: format!("layers.{li}.{name}"),
+                    shape: vec![len],
+                    offset: *off,
+                    len,
+                };
+                *off += len;
+                t
+            };
+            let lt = vec![
+                push("ln1", 8, &mut data, &mut off),
+                push("w1", 16, &mut data, &mut off),
+                push("w3", 16, &mut data, &mut off),
+                push("w2", 16, &mut data, &mut off),
+            ];
+            layers.push(LayerView { layer: li, tensors: lt.clone(), start, end: off });
+            tensors.extend(lt);
+        }
+        let layer_elems = 8 + 48;
+        let wf = Arc::new(WeightFile::from_parts(data, tensors, layers));
+        let buf = Arc::new(WeightBuffer::new(layer_elems));
+        // Router over a matching toy spec: 2 layers, 4 experts, top-1.
+        let mut spec = ModelSpec::tiny();
+        spec.n_layers = n_layers;
+        spec.n_experts = n_experts;
+        spec.top_k = 1;
+        let router = Arc::new(ExpertRouter::new(&spec, RoutingSpec::zipf(1.2, 3)));
+        let residency = Arc::new(ResidencyMap::pin_hottest(&router, 1, 8));
+        (wf, buf, ExpertMode { router, residency, predict_n: 2 })
+    }
+
+    #[test]
+    fn expert_mode_charges_only_streamed_regions() {
+        let (wf, buf, mode) = expert_setup();
+        let link = Arc::new(PcieLink::new(LinkTiming::Unthrottled));
+        let pinned0 = mode.residency.pinned(0).clone();
+        let mover = DataMover::spawn_expert(
+            Arc::clone(&wf),
+            Arc::clone(&buf),
+            Arc::clone(&link),
+            4 * 64,
+            mode,
+        );
+        // Post an exact set: two experts, one of them pinned.
+        let mut activated = BTreeSet::new();
+        let pinned_e = *pinned0.iter().next().expect("one pinned expert");
+        activated.insert(pinned_e);
+        activated.insert((pinned_e + 1) % 4);
+        mover.post_routing(0, &activated);
+        mover.request(0);
+        let topup = mover.wait_layer_routed(0, &activated);
+        assert_eq!(topup, Duration::ZERO, "posted set needs no top-up");
+        // Charged: dense (8 elems) + 1 cold expert (12 elems) = 80 B.
+        assert_eq!(link.total_bytes(), (8 + 12) * 4);
+        assert_eq!(mover.streamed_for(0), Some([(pinned_e + 1) % 4].into()));
+        // The slot is still staged completely — kernels read dense tensors.
+        buf.read(0, |d| {
+            assert_eq!(d.len(), 56);
+            for (i, &x) in d.iter().enumerate() {
+                assert_eq!(x, i as f32, "slot byte {i} must be staged");
+            }
+        });
+        mover.done_with(0);
+    }
+
+    #[test]
+    fn unposted_stage_streams_prediction_and_tops_up() {
+        let (wf, buf, mode) = expert_setup();
+        let link = Arc::new(PcieLink::new(LinkTiming::Virtual(1e9)));
+        let router = Arc::clone(&mode.router);
+        let residency = Arc::clone(&mode.residency);
+        let mover =
+            DataMover::spawn_expert(wf, Arc::clone(&buf), Arc::clone(&link), 4 * 64, mode);
+        // No post_routing: the mover streams predicted(0, 2) minus pinned.
+        mover.request(0);
+        mover.wait_layer(0);
+        let predicted = router.predicted(0, 2);
+        let expect: BTreeSet<usize> = predicted
+            .iter()
+            .copied()
+            .filter(|&e| !residency.is_resident(0, e))
+            .collect();
+        assert_eq!(mover.streamed_for(0), Some(expect.clone()));
+        let before = link.total_bytes();
+        assert_eq!(before, (8 + 12 * expect.len()) as u64 * 4);
+        // Activate an expert outside prediction ∪ pinned: top-up charged.
+        let cold = (0..4)
+            .find(|e| !predicted.contains(e) && !residency.is_resident(0, *e))
+            .expect("a mispredicted expert exists");
+        let activated: BTreeSet<usize> = [cold].into();
+        let topup = mover.wait_layer_routed(0, &activated);
+        assert!(topup > Duration::ZERO);
+        assert_eq!(link.total_bytes() - before, 12 * 4);
+        // Top-up is idempotent: the set now includes the cold expert.
+        assert_eq!(mover.wait_layer_routed(0, &activated), Duration::ZERO);
+        mover.done_with(0);
+    }
+
+    #[test]
+    fn disabled_residency_is_the_legacy_path() {
+        let (wf, buf, mut mode) = expert_setup();
+        mode.residency = Arc::new(ResidencyMap::disabled(2));
+        let link = Arc::new(PcieLink::new(LinkTiming::Unthrottled));
+        let mover = DataMover::spawn_expert(wf, buf, Arc::clone(&link), 4 * 64, mode);
+        assert!(!mover.expert_mode());
+        mover.request(0);
+        mover.wait_layer_routed(0, &BTreeSet::new());
+        // Whole layer charged, exactly like DataMover::spawn.
+        assert_eq!(link.total_bytes(), 56 * 4);
+        mover.done_with(0);
     }
 }

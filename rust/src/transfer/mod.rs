@@ -15,9 +15,11 @@
 mod buffer;
 mod data_mover;
 mod pcie;
+mod residency;
 mod weights;
 
 pub use buffer::WeightBuffer;
-pub use data_mover::{DataMover, TransferRequest};
+pub use data_mover::{DataMover, ExpertMode, TransferRequest};
 pub use pcie::{LinkTiming, PcieLink};
-pub use weights::{LayerView, TensorView, WeightFile};
+pub use residency::ResidencyMap;
+pub use weights::{LayerRegions, LayerView, TensorView, WeightFile};

@@ -1,0 +1,142 @@
+//! Expert-granular HBM residency: which experts stay resident on the GPU
+//! across passes (pinned) and which stream from host memory per pass.
+//!
+//! The pinning policy is popularity-based: the `pinned_per_layer` hottest
+//! experts of each layer (per the routing trace's rank order) are pinned.
+//! The map is sized against a hard HBM expert budget derived from
+//! `MachineSpec::gpu_mem_for_serving` — the always-on assert in
+//! [`ResidencyMap::pin_hottest`] fires if a configuration would pin more
+//! expert weights than the serving slice of HBM can hold.
+
+use std::collections::BTreeSet;
+
+use crate::workload::ExpertRouter;
+
+/// Per-layer pinned-expert sets plus the budget they were checked against.
+#[derive(Debug, Clone)]
+pub struct ResidencyMap {
+    pinned: Vec<BTreeSet<usize>>,
+    pinned_per_layer: usize,
+    budget_experts: usize,
+}
+
+impl ResidencyMap {
+    /// How many whole experts fit in `hbm_bytes` of serving memory.
+    pub fn budget_from_bytes(hbm_bytes: u64, expert_bytes: u64) -> usize {
+        assert!(expert_bytes > 0, "expert_bytes must be positive");
+        (hbm_bytes / expert_bytes) as usize
+    }
+
+    /// Pin the `pinned_per_layer` hottest experts of every layer.
+    ///
+    /// Always-on budget check: the residency map must never exceed the
+    /// configured HBM expert budget.
+    pub fn pin_hottest(
+        router: &ExpertRouter,
+        pinned_per_layer: usize,
+        budget_experts: usize,
+    ) -> ResidencyMap {
+        assert!(
+            pinned_per_layer <= router.n_experts(),
+            "cannot pin {pinned_per_layer} of {} experts per layer",
+            router.n_experts()
+        );
+        let total = router.n_layers() * pinned_per_layer;
+        assert!(
+            total <= budget_experts,
+            "residency map exceeds HBM expert budget: {} layers x {pinned_per_layer} pinned \
+             = {total} experts > budget of {budget_experts}",
+            router.n_layers()
+        );
+        let pinned = (0..router.n_layers())
+            .map(|layer| router.predicted(layer, pinned_per_layer))
+            .collect();
+        ResidencyMap { pinned, pinned_per_layer, budget_experts }
+    }
+
+    /// An empty (disabled) map: everything streams, legacy behavior.
+    pub fn disabled(n_layers: usize) -> ResidencyMap {
+        ResidencyMap {
+            pinned: (0..n_layers).map(|_| BTreeSet::new()).collect(),
+            pinned_per_layer: 0,
+            budget_experts: 0,
+        }
+    }
+
+    /// Expert-granular residency is active (`pinned_per_layer > 0`). When
+    /// false, every code path must reduce exactly to dense layer
+    /// streaming — the f64-identity guarantee.
+    pub fn enabled(&self) -> bool {
+        self.pinned_per_layer > 0
+    }
+
+    pub fn pinned_per_layer(&self) -> usize {
+        self.pinned_per_layer
+    }
+
+    pub fn budget_experts(&self) -> usize {
+        self.budget_experts
+    }
+
+    pub fn total_pinned(&self) -> usize {
+        self.pinned.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_resident(&self, layer: usize, expert: usize) -> bool {
+        self.pinned[layer].contains(&expert)
+    }
+
+    pub fn pinned(&self, layer: usize) -> &BTreeSet<usize> {
+        &self.pinned[layer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::workload::RoutingSpec;
+
+    fn router() -> ExpertRouter {
+        ExpertRouter::new(&ModelSpec::mixtral_8x7b(), RoutingSpec::zipf(1.2, 17))
+    }
+
+    #[test]
+    fn pins_the_hottest_experts() {
+        let r = router();
+        let map = ResidencyMap::pin_hottest(&r, 2, 64);
+        assert!(map.enabled());
+        assert_eq!(map.total_pinned(), 64);
+        for layer in 0..r.n_layers() {
+            let hot = &r.popularity(layer)[..2];
+            for &e in hot {
+                assert!(map.is_resident(layer, e));
+            }
+            assert_eq!(map.pinned(layer).len(), 2);
+        }
+    }
+
+    #[test]
+    fn disabled_map_pins_nothing() {
+        let map = ResidencyMap::disabled(32);
+        assert!(!map.enabled());
+        assert_eq!(map.total_pinned(), 0);
+        assert!(!map.is_resident(0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds HBM expert budget")]
+    fn budget_overflow_panics() {
+        // 32 layers x 2 pinned = 64 experts > budget of 45 (a 16 GB
+        // serving slice at 352 MB per Mixtral-8x7B expert).
+        let r = router();
+        let _ = ResidencyMap::pin_hottest(&r, 2, 45);
+    }
+
+    #[test]
+    fn budget_from_serving_bytes() {
+        let e = ModelSpec::mixtral_8x7b().expert_bytes();
+        assert_eq!(ResidencyMap::budget_from_bytes(16 << 30, e), 48);
+        assert_eq!(ResidencyMap::budget_from_bytes(0, e), 0);
+    }
+}

@@ -30,6 +30,30 @@ pub struct LayerView {
     pub end: usize,
 }
 
+/// Element ranges of one layer (relative to the layer's start) split by
+/// residency unit: `dense` ranges always stream; `expert[e]` ranges
+/// stream only when expert `e` is activated and not pinned in HBM.
+#[derive(Debug, Clone)]
+pub struct LayerRegions {
+    pub dense: Vec<(usize, usize)>,
+    pub expert: Vec<Vec<(usize, usize)>>,
+}
+
+impl LayerRegions {
+    /// Elements of one expert's slices (w1 + w3 + w2).
+    pub fn expert_elems(&self) -> usize {
+        self.expert
+            .first()
+            .map(|rs| rs.iter().map(|&(_, len)| len).sum())
+            .unwrap_or(0)
+    }
+
+    /// Elements of the dense (non-expert) ranges.
+    pub fn dense_elems(&self) -> usize {
+        self.dense.iter().map(|&(_, len)| len).sum()
+    }
+}
+
 /// The whole weight file resident in (what stands for pinned) host memory.
 pub struct WeightFile {
     data: Vec<f32>,
@@ -143,6 +167,38 @@ impl WeightFile {
         Ok(&self.data[t.offset..t.offset + t.len])
     }
 
+    /// Split layer `i` into dense vs per-expert element ranges, all
+    /// relative to the layer's start (so they index both [`layer_data`]
+    /// and the staged GPU slot). The expert tensors (`w1`, `w3`, `w2`)
+    /// are stored expert-dimension-outermost, so expert `e` owns the
+    /// `e`-th equal slice of each; everything else (attention, norms,
+    /// router) is dense and always streamed.
+    pub fn layer_regions(&self, i: usize, n_experts: usize) -> LayerRegions {
+        assert!(n_experts > 0);
+        let lv = &self.layers[i];
+        let mut dense = Vec::new();
+        let mut expert: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_experts];
+        for t in &lv.tensors {
+            let rel = t.offset - lv.start;
+            let base = t.name.rsplit('.').next().unwrap_or(&t.name);
+            if matches!(base, "w1" | "w3" | "w2") {
+                assert!(
+                    t.len % n_experts == 0,
+                    "expert tensor {} ({} elems) not divisible by {n_experts} experts",
+                    t.name,
+                    t.len
+                );
+                let per = t.len / n_experts;
+                for (e, ranges) in expert.iter_mut().enumerate() {
+                    ranges.push((rel + e * per, per));
+                }
+            } else {
+                dense.push((rel, t.len));
+            }
+        }
+        LayerRegions { dense, expert }
+    }
+
     /// A tensor's data within a *layer-local* buffer previously filled from
     /// [`layer_data`] (i.e., the GPU weight-buffer view of the tensor).
     pub fn tensor_in_layer<'a>(&self, layer: usize, name: &str, buf: &'a [f32]) -> Result<&'a [f32]> {
@@ -208,6 +264,34 @@ mod tests {
         assert_eq!(b, &[9.0, 10.0, 11.0]);
         let a = w.tensor_in_layer(1, "a", &staged).unwrap();
         assert_eq!(a, &[7.0, 8.0]);
+    }
+
+    #[test]
+    fn layer_regions_partition_the_layer() {
+        // One layer: dense ln (2 elems), expert tensors w1/w3 with 2
+        // experts (4 elems each), dense tail (1 elem).
+        let data: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        let mk = |name: &str, off: usize, len: usize| TensorView {
+            name: name.into(),
+            shape: vec![len],
+            offset: off,
+            len,
+        };
+        let tensors = vec![
+            mk("layers.0.ln1", 0, 2),
+            mk("layers.0.w1", 2, 4),
+            mk("layers.0.w3", 6, 4),
+            mk("layers.0.ln2", 10, 1),
+        ];
+        let layers = vec![LayerView { layer: 0, tensors: tensors.clone(), start: 0, end: 11 }];
+        let w = WeightFile::from_parts(data, tensors, layers);
+        let r = w.layer_regions(0, 2);
+        assert_eq!(r.dense, vec![(0, 2), (10, 1)]);
+        assert_eq!(r.expert, vec![vec![(2, 2), (6, 2)], vec![(4, 2), (8, 2)]]);
+        assert_eq!(r.expert_elems(), 4);
+        assert_eq!(r.dense_elems(), 3);
+        // dense + n_experts * expert covers the whole span
+        assert_eq!(r.dense_elems() + 2 * r.expert_elems(), 11);
     }
 
     #[test]

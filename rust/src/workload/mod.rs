@@ -12,9 +12,12 @@ use crate::kvcache::SeqId;
 use crate::model::Request;
 use crate::util::rng::Rng;
 
+pub mod routing;
+
 // The workload families live in `config`; re-export them here so callers
 // generating Table-3 traffic (benches, examples) need only one import.
 pub use crate::config::{AIME, MTBENCH, RAG};
+pub use routing::{ExpertRouter, PassRouting, RoutingSpec};
 
 /// Generator over one workload family.
 #[derive(Debug, Clone)]

@@ -1,0 +1,380 @@
+//! Seedable, Zipf-parameterized per-layer expert-routing traces.
+//!
+//! "Towards MoE Deployment" (PAPERS.md) measures heavily Zipf-skewed,
+//! temporally stable expert popularity in deployed MoE models. This
+//! module attaches such a routing trace to requests *functionally*: the
+//! top-k expert set of any `(request, token position, layer)` triple is a
+//! pure deterministic function of the routing seed, so the engine, the
+//! simulator, and the speculative planner can each evaluate the same
+//! trace independently and agree expert-for-expert without shipping
+//! per-token tensors around.
+//!
+//! Popularity is rank-based: rank `r` carries weight `1 / (r+1)^s`
+//! (`s = 0` ⇒ uniform), and a per-layer seeded permutation maps ranks to
+//! expert ids so the hot experts differ across layers (as observed in
+//! practice). [`ExpertRouter::popularity`] exposes the hot→cold order per
+//! layer — the pinning policy and the popularity-predicted prefetch both
+//! read it.
+
+use std::collections::BTreeSet;
+
+use crate::config::ModelSpec;
+use crate::kvcache::SeqId;
+use crate::util::rng::Rng;
+
+/// Routing-trace parameters: a Zipf skew exponent and the trace seed.
+/// Follows the workload seeding idiom (`seed ^ salt`) so disjoint streams
+/// never collide with the batch/arrival generators.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoutingSpec {
+    /// Zipf skew exponent `s`: rank `r` has weight `1/(r+1)^s`.
+    /// `0.0` = uniform routing (every expert equally likely).
+    pub zipf_s: f64,
+    /// Seed of the routing trace (mixed per token, layer, and request).
+    pub seed: u64,
+}
+
+/// Salt XORed into the routing seed, after the `0xB417C0DE` (batch) /
+/// `0xA881_0B5E` (arrivals) idiom.
+pub const ROUTING_SALT: u64 = 0x0E_C5E7_0E_C5E7;
+
+impl RoutingSpec {
+    /// Uniform routing with a fixed seed — the identity-preserving
+    /// default.
+    pub fn uniform() -> RoutingSpec {
+        RoutingSpec { zipf_s: 0.0, seed: 0 }
+    }
+
+    pub fn zipf(s: f64, seed: u64) -> RoutingSpec {
+        assert!(s >= 0.0 && s.is_finite(), "Zipf exponent must be finite and >= 0");
+        RoutingSpec { zipf_s: s, seed }
+    }
+
+    /// Exact-zero sentinel, like `HostPlanCost::is_zero`: `0.0` is the
+    /// constructed "uniform" value, not a computed quantity.
+    pub fn is_uniform(&self) -> bool {
+        self.zipf_s == 0.0 // pallas-lint: allow(float-eq)
+    }
+}
+
+/// Normalized Zipf rank weights: `w[r] ∝ 1/(r+1)^s`, summing to 1.
+pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    assert!(n > 0);
+    let mut w: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
+    let total: f64 = w.iter().sum();
+    for x in &mut w {
+        *x /= total;
+    }
+    w
+}
+
+/// Per-rank probability that a rank is in some token's top-k draw
+/// (sampling without replacement is approximated by k independent draws
+/// with rejection, matching [`ExpertRouter::experts_for`] in expectation):
+/// `q_r = 1 - (1 - w_r)^k`.
+pub fn rank_inclusion_probs(weights: &[f64], top_k: usize) -> Vec<f64> {
+    assert!(top_k >= 1 && top_k <= weights.len());
+    weights.iter().map(|&w| 1.0 - (1.0 - w).powi(top_k as i32)).collect()
+}
+
+/// Per-rank probability that a rank is activated by *at least one* of
+/// `n_tokens` tokens in a pass: `a_r = 1 - (1 - q_r)^n`.
+pub fn rank_activation_probs(weights: &[f64], top_k: usize, n_tokens: usize) -> Vec<f64> {
+    rank_inclusion_probs(weights, top_k)
+        .into_iter()
+        .map(|q| 1.0 - (1.0 - q).powi(n_tokens.min(i32::MAX as usize) as i32))
+        .collect()
+}
+
+/// SplitMix64 finalizer (same constants as `util::rng`'s seeding stage) —
+/// used to mix the (seed, request, position, layer) coordinates into an
+/// independent per-token stream seed.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The deterministic routing oracle for one model + routing spec.
+#[derive(Debug, Clone)]
+pub struct ExpertRouter {
+    n_layers: usize,
+    n_experts: usize,
+    top_k: usize,
+    spec: RoutingSpec,
+    /// Cumulative rank weights (inverse-CDF sampling).
+    cum: Vec<f64>,
+    /// Per-layer rank → expert-id permutation (hot experts differ per
+    /// layer). `perm[layer][rank]`.
+    perm: Vec<Vec<usize>>,
+}
+
+impl ExpertRouter {
+    pub fn new(model: &ModelSpec, spec: RoutingSpec) -> ExpertRouter {
+        assert!(
+            model.top_k >= 1 && model.top_k <= model.n_experts,
+            "top_k {} must lie in [1, n_experts={}]",
+            model.top_k,
+            model.n_experts
+        );
+        let weights = zipf_weights(model.n_experts, spec.zipf_s);
+        let mut cum = Vec::with_capacity(model.n_experts);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w;
+            cum.push(acc);
+        }
+        // Per-layer rank→expert permutation, seeded off the trace seed so
+        // the same spec always maps the same experts hot.
+        let perm: Vec<Vec<usize>> = (0..model.n_layers)
+            .map(|layer| {
+                let mut ids: Vec<usize> = (0..model.n_experts).collect();
+                let mut rng = Rng::new(mix64(
+                    (spec.seed ^ ROUTING_SALT)
+                        .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(layer as u64)),
+                ));
+                rng.shuffle(&mut ids);
+                ids
+            })
+            .collect();
+        ExpertRouter {
+            n_layers: model.n_layers,
+            n_experts: model.n_experts,
+            top_k: model.top_k,
+            spec,
+            cum,
+            perm,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn top_k(&self) -> usize {
+        self.top_k
+    }
+
+    pub fn spec(&self) -> RoutingSpec {
+        self.spec
+    }
+
+    /// Expert ids of one layer in hot → cold popularity order (rank 0
+    /// first). The pinning policy and the popularity-predicted prefetch
+    /// read this.
+    pub fn popularity(&self, layer: usize) -> &[usize] {
+        &self.perm[layer]
+    }
+
+    /// The `n` most popular experts of a layer, as a set — the predicted
+    /// activation set used when a transfer must be staged before the
+    /// pass's routing is known.
+    pub fn predicted(&self, layer: usize, n: usize) -> BTreeSet<usize> {
+        self.perm[layer].iter().copied().take(n.min(self.n_experts)).collect()
+    }
+
+    /// Expected number of distinct experts a pass of `n_tokens` tokens
+    /// activates in one layer (rank-activation model).
+    pub fn expected_activated(&self, n_tokens: usize) -> f64 {
+        let w = zipf_weights(self.n_experts, self.spec.zipf_s);
+        rank_activation_probs(&w, self.top_k, n_tokens).iter().sum()
+    }
+
+    /// How many experts to predict for a stage streamed before its pass's
+    /// routing is known: the expected activation count, rounded up. Both
+    /// the engine and the simulator derive the prediction width through
+    /// this so their byte accounting mirrors exactly.
+    pub fn predicted_count(&self, n_tokens: usize) -> usize {
+        (self.expected_activated(n_tokens.max(1)).ceil() as usize).clamp(1, self.n_experts)
+    }
+
+    /// The top-k expert set of one token — sorted, distinct, and a pure
+    /// function of `(spec.seed, req, pos, layer)`. Same seed ⇒
+    /// bit-identical traces.
+    pub fn experts_for(&self, req: SeqId, pos: usize, layer: usize) -> Vec<usize> {
+        let stream = mix64(
+            (self.spec.seed ^ ROUTING_SALT)
+                .wrapping_add(req.wrapping_mul(0xA24B_AED4_963E_E407))
+                .wrapping_add((pos as u64).wrapping_mul(0x9FB2_1C65_1E98_DF25))
+                .wrapping_add((layer as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)),
+        );
+        let mut rng = Rng::new(stream);
+        let mut picked: Vec<usize> = Vec::with_capacity(self.top_k);
+        while picked.len() < self.top_k {
+            let u = rng.f64();
+            let rank = self.cum.partition_point(|&c| c < u).min(self.n_experts - 1);
+            let e = self.perm[layer][rank];
+            if !picked.contains(&e) {
+                picked.push(e);
+            }
+        }
+        picked.sort_unstable();
+        picked
+    }
+
+    /// Union the activated expert sets of a pass's token rows, per layer.
+    /// `rows` are `(request id, logical token position)` pairs — decode
+    /// rows feed one position each; prefill chunks feed a position range.
+    pub fn route_rows<I>(&self, rows: I) -> PassRouting
+    where
+        I: IntoIterator<Item = (SeqId, usize)>,
+    {
+        let mut per_layer: Vec<BTreeSet<usize>> =
+            (0..self.n_layers).map(|_| BTreeSet::new()).collect();
+        for (req, pos) in rows {
+            for (layer, set) in per_layer.iter_mut().enumerate() {
+                set.extend(self.experts_for(req, pos, layer));
+            }
+        }
+        PassRouting { per_layer }
+    }
+}
+
+/// The activated-expert sets of one pass, per layer — the routing state
+/// the engine's speculate/commit snapshot carries and the simulator
+/// recomputes on the virtual clock.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PassRouting {
+    pub per_layer: Vec<BTreeSet<usize>>,
+}
+
+impl PassRouting {
+    pub fn is_empty(&self) -> bool {
+        self.per_layer.iter().all(|s| s.is_empty())
+    }
+
+    /// Activated experts of one layer (empty set past the known layers —
+    /// callers treat unknown as "predict").
+    pub fn activated(&self, layer: usize) -> Option<&BTreeSet<usize>> {
+        self.per_layer.get(layer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(s: f64, seed: u64) -> ExpertRouter {
+        ExpertRouter::new(&ModelSpec::mixtral_8x7b(), RoutingSpec::zipf(s, seed))
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let a = router(1.1, 42);
+        let b = router(1.1, 42);
+        for layer in 0..4 {
+            assert_eq!(a.popularity(layer), b.popularity(layer));
+            for req in 0..20u64 {
+                for pos in 0..8 {
+                    assert_eq!(
+                        a.experts_for(req, pos, layer),
+                        b.experts_for(req, pos, layer),
+                        "req {req} pos {pos} layer {layer}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = router(1.1, 42);
+        let b = router(1.1, 43);
+        let differs = (0..50u64).any(|req| {
+            (0..8).any(|pos| a.experts_for(req, pos, 0) != b.experts_for(req, pos, 0))
+        });
+        assert!(differs, "seed must steer the trace");
+    }
+
+    #[test]
+    fn expert_sets_are_sorted_distinct_topk() {
+        let r = router(1.3, 7);
+        for req in 0..30u64 {
+            for layer in 0..r.n_layers() {
+                let e = r.experts_for(req, req as usize % 11, layer);
+                assert_eq!(e.len(), r.top_k());
+                assert!(e.windows(2).all(|w| w[0] < w[1]), "sorted+distinct: {e:?}");
+                assert!(e.iter().all(|&x| x < r.n_experts()));
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_on_hot_experts() {
+        let r = router(1.5, 11);
+        let layer = 3;
+        let hot = r.popularity(layer)[0];
+        let cold = r.popularity(layer)[r.n_experts() - 1];
+        let (mut hot_hits, mut cold_hits) = (0usize, 0usize);
+        for req in 0..400u64 {
+            let e = r.experts_for(req, 0, layer);
+            hot_hits += usize::from(e.contains(&hot));
+            cold_hits += usize::from(e.contains(&cold));
+        }
+        assert!(
+            hot_hits > 3 * cold_hits.max(1),
+            "hot {hot_hits} vs cold {cold_hits}: skew must concentrate mass"
+        );
+    }
+
+    #[test]
+    fn uniform_routing_spreads_mass() {
+        let r = router(0.0, 11);
+        assert!(r.spec().is_uniform());
+        let mut hits = vec![0usize; r.n_experts()];
+        for req in 0..800u64 {
+            for &e in &r.experts_for(req, 0, 0) {
+                hits[e] += 1;
+            }
+        }
+        let (min, max) = (hits.iter().min().unwrap(), hits.iter().max().unwrap());
+        assert!(*max < 2 * *min, "uniform spread: {hits:?}");
+    }
+
+    #[test]
+    fn hot_experts_differ_across_layers() {
+        let r = router(1.2, 9);
+        let heads: BTreeSet<usize> = (0..r.n_layers()).map(|l| r.popularity(l)[0]).collect();
+        assert!(heads.len() > 1, "per-layer permutation must vary the hot expert");
+    }
+
+    #[test]
+    fn route_rows_unions_per_layer() {
+        let r = router(1.2, 5);
+        let routing = r.route_rows([(0u64, 0usize), (1, 0), (2, 0)]);
+        assert_eq!(routing.per_layer.len(), r.n_layers());
+        for layer in 0..r.n_layers() {
+            let set = routing.activated(layer).unwrap();
+            assert!(set.len() >= r.top_k(), "union of 3 tokens covers >= top_k");
+            let mut expect = BTreeSet::new();
+            for req in 0..3u64 {
+                expect.extend(r.experts_for(req, 0, layer));
+            }
+            assert_eq!(*set, expect);
+        }
+        assert!(PassRouting::default().is_empty());
+        assert!(!routing.is_empty());
+    }
+
+    #[test]
+    fn zipf_weight_math() {
+        let w = zipf_weights(8, 0.0);
+        assert!(w.iter().all(|&x| (x - 0.125).abs() < 1e-12), "uniform weights");
+        let w = zipf_weights(8, 1.0);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[0] > w[7] * 7.9 && w[0] < w[7] * 8.1, "1/r ratio");
+        let q = rank_inclusion_probs(&w, 2);
+        assert!(q.iter().all(|&x| x > 0.0 && x < 1.0));
+        assert!(q[0] > q[7]);
+        let a1 = rank_activation_probs(&w, 2, 1);
+        let a64 = rank_activation_probs(&w, 2, 64);
+        for r in 0..8 {
+            assert!((a1[r] - q[r]).abs() < 1e-12, "n=1 activation is inclusion");
+            assert!(a64[r] > a1[r], "more tokens activate more");
+        }
+    }
+}

@@ -11,6 +11,6 @@ impl PassRecord {
     }
 
     pub fn to_csv(&self) -> String {
-        format!("{},{}", self.io_time, self.shadow_time)
+        format!("io_time,shadow_time\n{},{}", self.io_time, self.shadow_time)
     }
 }

@@ -1,5 +1,6 @@
 // Fixture: a lane field missing from the partition must fire twice
-// (lanes_total and to_csv) — the PR 1/PR 2 drift bug class.
+// (lanes_total and to_csv) — the PR 1/PR 2 drift bug class — and a lane
+// summed into the CSV row but unnamed in the header string fires once.
 pub struct PassRecord {
     pub io_time: f64,
     pub gpu_time: f64,
@@ -13,6 +14,6 @@ impl PassRecord {
     }
 
     pub fn to_csv(&self) -> String {
-        format!("{},{},{}", self.io_time, self.gpu_time, self.kv_blocks_used)
+        format!("io_time,kv\n{},{},{}", self.io_time, self.gpu_time, self.kv_blocks_used)
     }
 }

@@ -10,6 +10,6 @@ impl PassRecord {
     }
 
     pub fn to_csv(&self) -> String {
-        format!("{},{}", self.io_time, self.gpu_time)
+        format!("io_time,gpu_time\n{},{}", self.io_time, self.gpu_time)
     }
 }
