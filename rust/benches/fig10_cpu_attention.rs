@@ -1,24 +1,41 @@
-//! Fig. 10: decode flash attention — hand-optimized kernel vs the
-//! auto-vectorized baseline, in KV-cache tokens attended per second,
-//! with thread scaling and the system throughput-requirement line.
+//! Fig. 10: decode flash attention across the full tier ladder — scalar
+//! baseline, portable unrolled kernel, explicit AVX2+FMA bodies, the
+//! runtime dispatcher, and the work-stealing thread pool — in KV-cache
+//! tokens attended per second (per core), plus the partition-size sweep
+//! and the paper's projected 40-core bandwidth-saturation curve.
 //!
 //! The paper measures 4.7x single-thread and 3.1x full-thread gains on
-//! AVX-512; this box has one core, so the measured part is single-core
-//! and the thread-scaling curve is projected with the paper's memory-
-//! bandwidth-saturation model calibrated by the single-core measurement
-//! (DESIGN.md §1 substitution table).
+//! AVX-512; what this box measures depends on its core count and ISA, so
+//! the 40-core curve is projected with the paper's memory-bandwidth-
+//! saturation model calibrated by the single-core measurement (DESIGN.md
+//! §1 substitution table).
+//!
+//! Maintains the committed `BENCH_cpu_attention.json` at the repo root
+//! (versioned, with environment metadata). Run modes:
+//!
+//! ```text
+//! cargo bench --bench fig10_cpu_attention            # measure + rewrite artifact
+//! cargo bench --bench fig10_cpu_attention -- --check # CI: assert measured >= committed budgets
+//! ```
+//!
+//! `--check` budgets are deliberately generous floors (>= 2x headroom on
+//! any plausible runner) so shared-runner noise cannot flake the lane;
+//! they catch order-of-magnitude regressions, not percent-level drift.
 
 use moe_lens::config::{MachineSpec, ModelSpec};
-use moe_lens::cpuattn::{decode_attention, AttnShape, DecodeQuery, ThreadPool, Tier};
+use moe_lens::cpuattn::{
+    decode_attention, decode_attention_tuned, simd_available, AttnShape, AttnTuning,
+    DecodeQuery, ThreadPool, Tier,
+};
 use moe_lens::kvcache::{KvLayout, PagedKvCache, SeqId};
 use moe_lens::perfmodel::Stage1Model;
 use moe_lens::util::bench::{banner, Table};
-use moe_lens::util::rng::Rng;
+use moe_lens::util::json::{obj, Json};
 
 /// Build a cache with `n_seq` sequences of `ctx` tokens (Mixtral-8x7B
 /// head geometry at small scale: GQA group 4).
 fn setup(n_seq: usize, ctx: usize, shape: AttnShape) -> (PagedKvCache, Vec<Vec<f32>>) {
-    let mut rng = Rng::new(99);
+    let mut rng = moe_lens::util::rng::Rng::new(99);
     let kv_dim = shape.kv_dim();
     let blocks = n_seq * ctx.div_ceil(16) + 1;
     let mut cache = PagedKvCache::new(KvLayout::new(16, blocks), 1, kv_dim);
@@ -46,47 +63,125 @@ fn tokens_per_sec<F: FnMut()>(n_seq: usize, ctx: usize, reps: usize, mut f: F) -
     (n_seq * ctx * reps) as f64 / t0.elapsed().as_secs_f64()
 }
 
+const ARTIFACT: &str = "BENCH_cpu_attention.json";
+
+/// Generous budget floors (Mtok/s, per core for the single-thread tiers,
+/// total for the threaded row). Any 2015+ x86 or arm64 core sustains
+/// several times these on the bench shape; tripping one means the kernel
+/// (or the build) regressed by an order of magnitude.
+const BUDGETS: &[(&str, f64)] = &[
+    ("scalar_mtok_s_core_min", 0.02),
+    ("unrolled_mtok_s_core_min", 0.05),
+    ("simd_mtok_s_core_min", 0.05),
+    ("dispatch_mtok_s_core_min", 0.05),
+    ("threaded_total_mtok_s_min", 0.05),
+];
+
+fn artifact_path() -> String {
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/.."))
+        .unwrap_or_else(|_| "..".into());
+    format!("{root}/{ARTIFACT}")
+}
+
 fn main() {
-    banner("fig10", "decode attention: intrinsics-style vs auto-vectorized (KV tok/s)");
+    let check_mode = std::env::args().any(|a| a == "--check");
+    banner("fig10", "decode attention tier ladder (KV tok/s per core)");
     let shape = AttnShape { n_heads: 32, n_kv_heads: 8, head_dim: 128 };
-    let (n_seq, ctx, reps) = (24usize, 192usize, 3usize);
+    let (n_seq, ctx) = (24usize, 192usize);
+    let reps = if check_mode { 2 } else { 3 };
     let (cache, qs) = setup(n_seq, ctx, shape);
     let queries: Vec<DecodeQuery> =
         qs.iter().enumerate().map(|(i, q)| DecodeQuery { seq: i as SeqId, q }).collect();
     let mut out = vec![0f32; n_seq * shape.q_dim()];
 
-    let scalar = tokens_per_sec(n_seq, ctx, reps, || {
-        decode_attention(&cache, 0, shape, &queries, &mut out, Tier::Scalar)
-    });
-    let optimized = tokens_per_sec(n_seq, ctx, reps, || {
-        decode_attention(&cache, 0, shape, &queries, &mut out, Tier::Optimized)
-    });
-    let single_gain = optimized / scalar;
-
-    let mut t = Table::new(&["threads", "autovec_Mtok_s", "optimized_Mtok_s", "gain"]);
-    t.row(&[
-        "1 (measured)".into(),
-        format!("{:.2}", scalar / 1e6),
-        format!("{:.2}", optimized / 1e6),
-        format!("{single_gain:.2}x"),
-    ]);
-
-    // Thread tiers on this box (1 core: expect flat), then the projected
-    // 40-core curve: linear until the socket's memory bandwidth cap.
-    for n_threads in [2usize, 4] {
-        let pool = ThreadPool::new(n_threads);
+    // --- single-thread tier ladder -------------------------------------
+    let tiers = [
+        ("scalar", Tier::Scalar),
+        ("unrolled", Tier::Unrolled),
+        ("simd", Tier::Simd),
+        ("dispatch", Tier::Optimized),
+    ];
+    let mut tier_tok = Vec::new();
+    let mut t = Table::new(&["tier", "Mtok/s/core", "gain vs scalar"]);
+    for (name, tier) in tiers {
         let tput = tokens_per_sec(n_seq, ctx, reps, || {
-            pool.decode_attention(&cache, 0, shape, &queries, &mut out)
+            decode_attention(&cache, 0, shape, &queries, &mut out, tier)
         });
+        tier_tok.push((name, tput));
+        let base = tier_tok[0].1;
         t.row(&[
-            format!("{n_threads} (this box)"),
-            "-".into(),
-            format!("{:.2}", tput / 1e6),
-            format!("{:.2}x vs scalar", tput / scalar),
+            name.to_string(),
+            format!("{:.3}", tput / 1e6),
+            format!("{:.2}x", tput / base),
         ]);
     }
     t.print();
+    t.print_csv("fig10_tiers");
+    let scalar = tier_tok[0].1;
+    let unrolled = tier_tok[1].1;
+    let simd = tier_tok[2].1;
+    let dispatch = tier_tok[3].1;
+    let single_gain = dispatch / scalar;
 
+    if simd_available() && simd <= unrolled {
+        // Wall-clock comparisons on shared runners are noisy; per repo
+        // precedent this is a WARN, not an assert.
+        println!(
+            "WARN: simd tier ({:.3} Mtok/s) did not beat unrolled ({:.3} Mtok/s) \
+             despite AVX2 being available",
+            simd / 1e6,
+            unrolled / 1e6
+        );
+    }
+
+    // --- thread scaling (work-stealing pool) ---------------------------
+    let auto_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut thread_rows = Vec::new();
+    let mut t = Table::new(&["threads", "Mtok/s", "Mtok/s/core", "gain vs scalar"]);
+    let sweep: &[usize] = if check_mode { &[0] } else { &[1, 2, 4, 8, 0] };
+    for &n_threads in sweep {
+        let pool = ThreadPool::new(n_threads);
+        let n = pool.n_threads();
+        let tput = tokens_per_sec(n_seq, ctx, reps, || {
+            pool.decode_attention(&cache, 0, shape, &queries, &mut out)
+        });
+        thread_rows.push((n, n_threads == 0, tput));
+        t.row(&[
+            if n_threads == 0 { format!("{n} (auto)") } else { n.to_string() },
+            format!("{:.3}", tput / 1e6),
+            format!("{:.3}", tput / n as f64 / 1e6),
+            format!("{:.2}x", tput / scalar),
+        ]);
+    }
+    t.print();
+    t.print_csv("fig10_threads");
+    let threaded_total = thread_rows.last().map(|&(_, _, t)| t).unwrap_or(0.0);
+
+    // --- KV partition-size sweep (mistral.rs hard-codes 512) -----------
+    let mut part_rows = Vec::new();
+    if !check_mode {
+        let mut t = Table::new(&["partition", "Mtok/s/core"]);
+        for partition in [64usize, 128, 256, 512, 1024, 4096] {
+            let tput = tokens_per_sec(n_seq, ctx, reps, || {
+                decode_attention_tuned(
+                    &cache,
+                    0,
+                    shape,
+                    &queries,
+                    &mut out,
+                    Tier::Optimized,
+                    AttnTuning { partition },
+                )
+            });
+            part_rows.push((partition, tput));
+            t.row(&[partition.to_string(), format!("{:.3}", tput / 1e6)]);
+        }
+        t.print();
+        t.print_csv("fig10_partition");
+    }
+
+    // --- projected 40-core socket (paper testbed, bw-capped) -----------
     banner("fig10b", "projected 40-core socket (paper testbed, bw-capped)");
     let model = ModelSpec::mixtral_8x7b();
     let machine = MachineSpec::paper_testbed();
@@ -139,4 +234,113 @@ fn main() {
     assert!(single_gain > 1.2, "optimized kernel must beat the scalar baseline");
     assert!(opt_at_full >= req_tok, "projected optimized kernel must meet the requirement");
     assert!(auto_at_full < req_tok, "projected autovec baseline must miss the requirement");
+
+    // --- artifact: check against the committed baseline, or rewrite ----
+    let path = artifact_path();
+    if check_mode {
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {path}: {e} — commit the bench artifact"));
+        let doc = Json::parse(&text).expect("parse committed artifact");
+        let budgets = doc.req("budgets");
+        let measured = [
+            ("scalar_mtok_s_core_min", scalar),
+            ("unrolled_mtok_s_core_min", unrolled),
+            ("simd_mtok_s_core_min", simd),
+            ("dispatch_mtok_s_core_min", dispatch),
+            ("threaded_total_mtok_s_min", threaded_total),
+        ];
+        for (key, tok_s) in measured {
+            let floor = budgets.req(key).as_f64().expect("budget is a number");
+            let got = tok_s / 1e6;
+            assert!(
+                got >= floor,
+                "budget {key}: measured {got:.4} Mtok/s under committed floor {floor:.4}"
+            );
+            println!("check {key}: {got:.3} Mtok/s >= floor {floor:.3}  ok");
+        }
+        println!("--check passed against {path}");
+        return;
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::Str("cpu_attention".into())),
+        ("version", Json::Num(1.0)),
+        (
+            "environment",
+            obj(vec![
+                ("os", Json::Str(std::env::consts::OS.into())),
+                ("arch", Json::Str(std::env::consts::ARCH.into())),
+                ("simd_available", Json::Bool(simd_available())),
+                ("threads_available", Json::Num(auto_threads as f64)),
+                (
+                    "note",
+                    Json::Str(
+                        "refresh with `cargo bench --bench fig10_cpu_attention` from rust/; \
+                         budgets are generous floors for `--check` on shared runners"
+                            .into(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "shape",
+            obj(vec![
+                ("n_heads", Json::Num(shape.n_heads as f64)),
+                ("n_kv_heads", Json::Num(shape.n_kv_heads as f64)),
+                ("head_dim", Json::Num(shape.head_dim as f64)),
+                ("n_seq", Json::Num(n_seq as f64)),
+                ("ctx", Json::Num(ctx as f64)),
+            ]),
+        ),
+        (
+            "tiers",
+            Json::Arr(
+                tier_tok
+                    .iter()
+                    .map(|&(name, tok)| {
+                        obj(vec![
+                            ("tier", Json::Str(name.into())),
+                            ("mtok_s_core", Json::Num(tok / 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "threads",
+            Json::Arr(
+                thread_rows
+                    .iter()
+                    .map(|&(n, auto, tok)| {
+                        obj(vec![
+                            ("threads", Json::Num(n as f64)),
+                            ("auto", Json::Bool(auto)),
+                            ("mtok_s", Json::Num(tok / 1e6)),
+                            ("mtok_s_core", Json::Num(tok / n as f64 / 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "partition_sweep",
+            Json::Arr(
+                part_rows
+                    .iter()
+                    .map(|&(p, tok)| {
+                        obj(vec![
+                            ("partition", Json::Num(p as f64)),
+                            ("mtok_s_core", Json::Num(tok / 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "budgets",
+            obj(BUDGETS.iter().map(|&(k, v)| (k, Json::Num(v))).collect()),
+        ),
+    ]);
+    std::fs::write(&path, format!("{doc}\n")).expect("write bench artifact");
+    println!("wrote {path}");
 }

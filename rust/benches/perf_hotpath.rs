@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use moe_lens::cpuattn::{decode_attention, AttnShape, DecodeQuery, Tier};
+use moe_lens::cpuattn::{decode_attention, AttnShape, DecodeQuery, ThreadPool, Tier};
 use moe_lens::engine::{EngineConfig, ServingEngine};
 use moe_lens::kvcache::{KvLayout, PagedKvCache, PagedLayout, SeqId};
 use moe_lens::model::Request;
@@ -180,14 +180,34 @@ fn main() -> anyhow::Result<()> {
     let queries: Vec<DecodeQuery> =
         qs.iter().enumerate().map(|(i, q)| DecodeQuery { seq: i as SeqId, q }).collect();
     let mut out = vec![0f32; n_seq * shape.q_dim()];
-    let mut t = Table::new(&["kernel", "Mtok/s", "GB/s (KV scan)"]);
-    for (name, tier) in [("scalar", Tier::Scalar), ("optimized", Tier::Optimized)] {
+    let mut t = Table::new(&["kernel", "Mtok/s/core", "GB/s (KV scan)"]);
+    let ladder = [
+        ("scalar", Tier::Scalar),
+        ("unrolled", Tier::Unrolled),
+        ("simd", Tier::Simd),
+        ("dispatch", Tier::Optimized),
+    ];
+    for (name, tier) in ladder {
         let st = bench(1, Duration::from_millis(600), || {
             decode_attention(&cache, 0, shape, &queries, &mut out, tier)
         });
         let toks = (n_seq * ctx) as f64 / st.mean.as_secs_f64();
         let bytes = toks * (2 * kv_dim * 2) as f64;
         t.row(&[name.into(), format!("{:.2}", toks / 1e6), format!("{:.2}", bytes / 1e9)]);
+    }
+    {
+        let pool = ThreadPool::new(0);
+        let st = bench(1, Duration::from_millis(600), || {
+            pool.decode_attention(&cache, 0, shape, &queries, &mut out)
+        });
+        let toks = (n_seq * ctx) as f64 / st.mean.as_secs_f64();
+        let per_core = toks / pool.n_threads() as f64;
+        let bytes = toks * (2 * kv_dim * 2) as f64;
+        t.row(&[
+            format!("threaded x{}", pool.n_threads()),
+            format!("{:.2}", per_core / 1e6),
+            format!("{:.2}", bytes / 1e9),
+        ]);
     }
     t.print();
     t.print_csv("perf_attn");

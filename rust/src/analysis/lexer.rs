@@ -260,6 +260,32 @@ pub fn allows(lines: &[Line], lineno: usize, rule: &str) -> bool {
     false
 }
 
+/// Does 0-based line `idx` carry a `Safety:` comment — on the line
+/// itself, or on the contiguous comment block ending directly above it?
+/// A code line directly above counts only via its trailing comment; a
+/// blank line breaks the block (the justification must visibly attach to
+/// the `unsafe` it covers).
+pub fn has_safety_doc(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].comment.contains("Safety:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.comment.contains("Safety:") {
+            return true;
+        }
+        if !l.code.trim().is_empty() {
+            return false; // code line: its trailing comment was just checked
+        }
+        if l.comment.is_empty() {
+            return false; // blank line breaks the comment block
+        }
+    }
+    false
+}
+
 /// Positions (char indices) where `pat` occurs in `line` with identifier
 /// boundaries on both sides — so `overlap_time` does not match inside
 /// `host_overlap_time`.
@@ -357,6 +383,30 @@ mod tests {
         assert!(allows(&lines, 1, "unchecked-cast"));
         assert!(!allows(&lines, 1, "panic-policy"));
         assert!(!allows(&lines, 2, "float-eq"), "allow reaches one line only");
+    }
+
+    #[test]
+    fn safety_doc_attachment() {
+        let lines = scrub(
+            "unsafe { a() } // Safety: same line\n\
+             // Safety: line above\n\
+             unsafe { b() }\n\
+             // Safety: a multi-line justification that\n\
+             // spills onto a second comment line.\n\
+             unsafe { c() }\n\
+             // Safety: detached by a blank line\n\
+             \n\
+             unsafe { d() }\n\
+             let x = 1; // Safety: trailing on the code line above\n\
+             unsafe { e() }\n\
+             unsafe { f() }",
+        );
+        assert!(has_safety_doc(&lines, 0), "same line");
+        assert!(has_safety_doc(&lines, 2), "line directly above");
+        assert!(has_safety_doc(&lines, 5), "comment block ending above");
+        assert!(!has_safety_doc(&lines, 8), "blank line breaks the block");
+        assert!(has_safety_doc(&lines, 10), "trailing comment on code line above");
+        assert!(!has_safety_doc(&lines, 11), "undocumented");
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! `pallas-lint`: repo-native static analysis.
 //!
-//! A zero-dependency lexical linter enforcing six invariants that clippy
+//! A zero-dependency lexical linter enforcing seven invariants that clippy
 //! cannot express (see `rules`): wall-clock leakage into virtual-clock
 //! code, unordered iteration, `PassRecord` lane-partition drift, unchecked
 //! numeric casts in accounting paths, panic policy in library hot paths,
-//! and float equality. Pre-existing violations live in a committed
+//! float equality, and undocumented `unsafe` use sites. Pre-existing
+//! violations live in a committed
 //! per-file-per-rule ratchet baseline (`lint-baseline.json`, see
 //! `baseline`): `pallas-lint --check` fails only when a count increases
 //! (or the baseline goes stale), so new code is held to the standard
@@ -121,6 +122,20 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
         if rel.starts_with("src/") && !in_test[idx] {
             for _ in rules::float_eq_positions(code) {
                 raw.push((idx, Rule::FloatEq, "==/!= on float".to_string()));
+            }
+        }
+        // Unlike the rules above, this one also applies inside #[cfg(test)]
+        // regions: an unsound unsafe block corrupts test verdicts too.
+        if rel.starts_with("src/") {
+            let sites = rules::unsafe_sites(code);
+            if !sites.is_empty() && !lexer::has_safety_doc(&lines, idx) {
+                for _ in sites {
+                    raw.push((
+                        idx,
+                        Rule::UndocumentedUnsafe,
+                        "unsafe without // Safety:".to_string(),
+                    ));
+                }
             }
         }
     }

@@ -1,4 +1,4 @@
-//! The six repo-specific lint rules and their detection logic.
+//! The seven repo-specific lint rules and their detection logic.
 //!
 //! Each rule encodes an invariant the ROADMAP's engine/simulator/cost-model
 //! agreement rests on; see the README's "Static analysis & invariants"
@@ -25,16 +25,20 @@ pub enum Rule {
     PanicPolicy,
     /// Direct `==` / `!=` against a float literal.
     FloatEq,
+    /// An `unsafe` block or `unsafe impl` in `src/` without a
+    /// `// Safety:` comment on it or on the comment block directly above.
+    UndocumentedUnsafe,
 }
 
 impl Rule {
-    pub const ALL: [Rule; 6] = [
+    pub const ALL: [Rule; 7] = [
         Rule::WallClockInSim,
         Rule::UnorderedIteration,
         Rule::LanePartition,
         Rule::UncheckedCast,
         Rule::PanicPolicy,
         Rule::FloatEq,
+        Rule::UndocumentedUnsafe,
     ];
 
     pub fn name(self) -> &'static str {
@@ -45,6 +49,7 @@ impl Rule {
             Rule::UncheckedCast => "unchecked-cast",
             Rule::PanicPolicy => "panic-policy",
             Rule::FloatEq => "float-eq",
+            Rule::UndocumentedUnsafe => "undocumented-unsafe",
         }
     }
 
@@ -194,6 +199,26 @@ pub fn cast_sites(code: &str) -> usize {
             matches!(ty.as_str(), "u64" | "usize" | "f64")
         })
         .count()
+}
+
+// ---------------------------------------------------------------------------
+// undocumented-unsafe
+// ---------------------------------------------------------------------------
+
+/// Char positions of `unsafe` keywords that open a block or an `unsafe
+/// impl` on a scrubbed line. Declarations (`unsafe fn` / `unsafe trait` /
+/// `unsafe extern`) are the *callee* side of the contract — their `#
+/// Safety` doc section is rustdoc's (and clippy's) concern — so they are
+/// exempt; every *use* site must carry a `// Safety:` comment.
+pub fn unsafe_sites(code: &str) -> Vec<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    ident_occurrences(code, "unsafe")
+        .into_iter()
+        .filter(|&k| {
+            let next = token_right(&chars, k + 6);
+            !matches!(next.as_str(), "fn" | "trait" | "extern")
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -384,6 +409,17 @@ mod tests {
         assert_eq!(cast_sites("let x = n as u32;"), 0, "widening to u32 not flagged");
         assert_eq!(cast_sites("let y = b as usize + 1;"), 1);
         assert_eq!(cast_sites("alias u64"), 0, "ident boundary");
+    }
+
+    #[test]
+    fn unsafe_site_detection() {
+        assert_eq!(unsafe_sites("let x = unsafe { *p };").len(), 1);
+        assert_eq!(unsafe_sites("unsafe impl Send for Batch {}").len(), 1);
+        assert_eq!(unsafe_sites("unsafe").len(), 1, "block opening on next line");
+        assert_eq!(unsafe_sites("pub unsafe fn dot(q: &[f32]) -> f32 {").len(), 0);
+        assert_eq!(unsafe_sites("unsafe trait Zeroable {}").len(), 0);
+        assert_eq!(unsafe_sites("unsafe extern \"C\" {}").len(), 0);
+        assert_eq!(unsafe_sites("let unsafer = 1;").len(), 0, "ident boundary");
     }
 
     fn lanes(src: &str) -> Vec<(usize, String, &'static str)> {

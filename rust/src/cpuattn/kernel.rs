@@ -1,24 +1,38 @@
-//! The decode-attention kernel bodies: scalar baseline vs hand-optimized.
+//! The decode-attention kernel bodies: the §6.6 tier ladder.
 //!
-//! Both consume the cache as contiguous `[tokens × kv_dim]` BF16 runs
-//! (one run per KV block) and keep flash-decode running state, so they
-//! stream the KV cache exactly once per query group — the §5.3 arithmetic
-//! intensity the performance model assumes (`I_cpu_attn ≈ 1` FLOP/byte on
-//! the dot, ditto on the saxpby).
+//! All tiers consume the cache as contiguous `[tokens × kv_dim]` BF16
+//! runs (one run per KV block) and keep flash-decode running state, so
+//! they stream the KV cache exactly once per query group — the §5.3
+//! arithmetic intensity the performance model assumes (`I_cpu_attn ≈ 1`
+//! FLOP/byte on the dot, ditto on the saxpby).
 
-use super::AttnShape;
+use super::{AttnShape, AttnTuning};
 use crate::kvcache::{PagedKvCache, SeqId};
 use crate::util::bf16::bf16_to_f32;
 
-/// Kernel tier (§6.6's ladder). `Threaded` shards [`Tier::Optimized`]
-/// across a [`super::ThreadPool`]; within one thread it is identical.
+/// Kernel tier (§6.6's optimization ladder). The threaded rung shards
+/// [`Tier::Optimized`] across a [`super::ThreadPool`]; within one thread
+/// it is identical.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Tier {
+    /// Straightforward loops, one query head at a time — whatever LLVM
+    /// auto-vectorizes.
     Scalar,
+    /// The portable hand-optimized kernel: GQA-grouped partitioned KV
+    /// walks, staged f32 tiles, 8-lane unrolled dot/saxpby bodies.
+    Unrolled,
+    /// Explicit AVX2+FMA bodies on the BF16 rows (`simd.rs`), falling
+    /// back to [`Tier::Unrolled`] when the host lacks the features or
+    /// the build is not x86_64.
+    Simd,
+    /// Best available single-thread kernel: runtime-dispatches to the
+    /// SIMD bodies where supported, the unrolled kernel otherwise. The
+    /// engine and the thread pool use this.
     Optimized,
 }
 
 /// Attend one query against one sequence's cached context (all heads).
+#[allow(clippy::too_many_arguments)]
 pub(super) fn attend_one(
     cache: &PagedKvCache,
     layer: usize,
@@ -27,16 +41,26 @@ pub(super) fn attend_one(
     q: &[f32],
     out: &mut [f32],
     tier: Tier,
+    tuning: AttnTuning,
 ) {
     match tier {
         Tier::Scalar => attend_scalar(cache, layer, shape, seq, q, out),
-        Tier::Optimized => attend_optimized(cache, layer, shape, seq, q, out),
+        Tier::Unrolled => attend_unrolled(cache, layer, shape, seq, q, out, tuning),
+        Tier::Simd | Tier::Optimized => {
+            #[cfg(target_arch = "x86_64")]
+            if super::simd::simd_available() {
+                return super::simd::attend_simd(cache, layer, shape, seq, q, out, tuning);
+            }
+            attend_unrolled(cache, layer, shape, seq, q, out, tuning)
+        }
     }
 }
 
 // ---------------------------------------------------------------------------
 // Scalar baseline ("auto-vectorized"): head-major loops, one KV pass per
 // *query* head (so a GQA group re-reads its KV s times), plain indexing.
+// The accumulator is a stack tile (not a per-head heap Vec) so the tier
+// measures the algorithm, not the allocator.
 // ---------------------------------------------------------------------------
 
 fn attend_scalar(
@@ -48,15 +72,17 @@ fn attend_scalar(
     out: &mut [f32],
 ) {
     let hd = shape.head_dim;
+    assert!(hd <= MAX_HD, "head_dim {hd} exceeds kernel tile size");
     let kv_dim = shape.kv_dim();
     let group = shape.gqa_group();
     let scale = 1.0 / (hd as f32).sqrt();
+    let mut acc = [0f32; MAX_HD];
     for h in 0..shape.n_heads {
         let kvh = h / group;
         let qh = &q[h * hd..(h + 1) * hd];
         let mut m = f32::NEG_INFINITY;
         let mut denom = 0f32;
-        let mut acc = vec![0f32; hd];
+        acc[..hd].fill(0.0);
         cache.walk_context(seq, layer, |k_run, v_run, n| {
             for t in 0..n {
                 let kt = &k_run[t * kv_dim + kvh * hd..t * kv_dim + (kvh + 1) * hd];
@@ -68,7 +94,7 @@ fn attend_scalar(
                 let s = dot * scale;
                 if s > m {
                     let corr = (m - s).exp();
-                    for a in acc.iter_mut() {
+                    for a in acc[..hd].iter_mut() {
                         *a *= corr;
                     }
                     denom *= corr;
@@ -89,20 +115,16 @@ fn attend_scalar(
 }
 
 // ---------------------------------------------------------------------------
-// Optimized kernel: one KV pass per *group* (all s query heads share the
-// loaded K/V), stack-staged f32 tiles, 8-lane unrolled dot / saxpby.
+// Unrolled kernel (the portable fallback): one KV pass per *group* (all s
+// query heads share the loaded K/V), stack-staged f32 tiles, 8-lane
+// unrolled dot / saxpy bodies. The walk is partitioned KV-head-major —
+// `tuning.partition` rows of one head's strip at a time, next row
+// prefetched — exactly the loop structure of the SIMD tier, so the two
+// differ only in the vector bodies.
 // ---------------------------------------------------------------------------
 
 /// Max head_dim the stack tiles support (covers all paper models: 128).
-const MAX_HD: usize = 256;
-
-/// Flash running state for one GQA group of `s` query heads.
-struct GroupState {
-    m: Vec<f32>,
-    denom: Vec<f32>,
-    /// [s][hd] accumulators, flattened.
-    acc: Vec<f32>,
-}
+pub(super) const MAX_HD: usize = 256;
 
 #[inline(always)]
 fn dot_unrolled(a: &[f32], b: &[f32], n: usize) -> f32 {
@@ -156,70 +178,72 @@ fn upconvert(dst: &mut [f32], src: &[u16], n: usize) {
     }
 }
 
-fn attend_optimized(
+fn attend_unrolled(
     cache: &PagedKvCache,
     layer: usize,
     shape: AttnShape,
     seq: SeqId,
     q: &[f32],
     out: &mut [f32],
+    tuning: AttnTuning,
 ) {
     let hd = shape.head_dim;
     assert!(hd <= MAX_HD, "head_dim {hd} exceeds kernel tile size");
     let kv_dim = shape.kv_dim();
     let group = shape.gqa_group();
     let scale = 1.0 / (hd as f32).sqrt();
+    let nh = shape.n_heads;
+    let part = tuning.partition.max(1);
 
-    let mut states: Vec<GroupState> = (0..shape.n_kv_heads)
-        .map(|_| GroupState {
-            m: vec![f32::NEG_INFINITY; group],
-            denom: vec![0.0; group],
-            acc: vec![0.0; group * hd],
-        })
-        .collect();
+    let mut m = vec![f32::NEG_INFINITY; nh];
+    let mut denom = vec![0f32; nh];
+    let mut acc = vec![0f32; nh * hd];
 
     let mut k_tile = [0f32; MAX_HD];
     let mut v_tile = [0f32; MAX_HD];
 
     cache.walk_context(seq, layer, |k_run, v_run, n| {
-        for t in 0..n {
-            let row = t * kv_dim;
+        let mut t0 = 0usize;
+        while t0 < n {
+            let t1 = (t0 + part).min(n);
             for kvh in 0..shape.n_kv_heads {
-                let off = row + kvh * hd;
-                upconvert(&mut k_tile, &k_run[off..off + hd], hd);
-                upconvert(&mut v_tile, &v_run[off..off + hd], hd);
-                let st = &mut states[kvh];
-                for gi in 0..group {
-                    let h = kvh * group + gi;
-                    let qh = &q[h * hd..(h + 1) * hd];
-                    let s = dot_unrolled(qh, &k_tile, hd) * scale;
-                    let acc = &mut st.acc[gi * hd..(gi + 1) * hd];
-                    if s > st.m[gi] {
-                        let corr = (st.m[gi] - s).exp();
-                        for a in acc.iter_mut() {
-                            *a *= corr;
-                        }
-                        st.denom[gi] *= corr;
-                        st.m[gi] = s;
+                for t in t0..t1 {
+                    let off = t * kv_dim + kvh * hd;
+                    if t + 1 < t1 {
+                        super::simd::prefetch_row(&k_run[off + kv_dim..off + kv_dim + hd]);
+                        super::simd::prefetch_row(&v_run[off + kv_dim..off + kv_dim + hd]);
                     }
-                    let w = (s - st.m[gi]).exp();
-                    st.denom[gi] += w;
-                    saxpy_unrolled(acc, &v_tile, w, hd);
+                    upconvert(&mut k_tile, &k_run[off..off + hd], hd);
+                    upconvert(&mut v_tile, &v_run[off..off + hd], hd);
+                    for gi in 0..group {
+                        let h = kvh * group + gi;
+                        let qh = &q[h * hd..(h + 1) * hd];
+                        let s = dot_unrolled(qh, &k_tile, hd) * scale;
+                        let acch = &mut acc[h * hd..(h + 1) * hd];
+                        if s > m[h] {
+                            let corr = (m[h] - s).exp();
+                            for a in acch.iter_mut() {
+                                *a *= corr;
+                            }
+                            denom[h] *= corr;
+                            m[h] = s;
+                        }
+                        let w = (s - m[h]).exp();
+                        denom[h] += w;
+                        saxpy_unrolled(acch, &v_tile, w, hd);
+                    }
                 }
             }
+            t0 = t1;
         }
     });
 
-    for kvh in 0..shape.n_kv_heads {
-        let st = &states[kvh];
-        for gi in 0..group {
-            let h = kvh * group + gi;
-            let inv = 1.0 / st.denom[gi];
-            let acc = &st.acc[gi * hd..(gi + 1) * hd];
-            let dst = &mut out[h * hd..(h + 1) * hd];
-            for d in 0..hd {
-                dst[d] = acc[d] * inv;
-            }
+    for h in 0..nh {
+        let inv = 1.0 / denom[h];
+        let src = &acc[h * hd..(h + 1) * hd];
+        let dst = &mut out[h * hd..(h + 1) * hd];
+        for d in 0..hd {
+            dst[d] = src[d] * inv;
         }
     }
 }
@@ -250,21 +274,23 @@ pub fn decode_attention_dense(
 
     // Stage through a single-layer paged cache with block_size = l_max so
     // every sequence is one contiguous run — zero-cost adapter that keeps
-    // one kernel implementation.
+    // one kernel implementation. BF16 bits go in verbatim via the bulk
+    // run writer (no per-token f32 round trip).
     let mut cache =
         PagedKvCache::new(KvLayout::new(l_max, lens.len()), 1, kv_dim);
     for (i, &len) in lens.iter().enumerate() {
         let id = i as SeqId;
         cache.register(id);
         cache.grow(id, len);
-        for pos in 0..len {
-            let base = (i * l_max + pos) * kv_dim;
-            let kf: Vec<f32> =
-                k_bits[base..base + kv_dim].iter().map(|&b| bf16_to_f32(b)).collect();
-            let vf: Vec<f32> =
-                v_bits[base..base + kv_dim].iter().map(|&b| bf16_to_f32(b)).collect();
-            cache.write(id, 0, pos, &kf, &vf);
-        }
+        let base = i * l_max * kv_dim;
+        cache.write_run(
+            id,
+            0,
+            0,
+            len,
+            &k_bits[base..base + len * kv_dim],
+            &v_bits[base..base + len * kv_dim],
+        );
     }
     for (i, _) in lens.iter().enumerate() {
         attend_one(
@@ -275,6 +301,7 @@ pub fn decode_attention_dense(
             &q[i * q_dim..(i + 1) * q_dim],
             &mut out[i * q_dim..(i + 1) * q_dim],
             tier,
+            AttnTuning::default(),
         );
     }
 }

@@ -1,27 +1,40 @@
 //! CPU decode attention (§6.6) — the host-side half of the hybrid system.
 //!
 //! The paper's CPU Task (C): flash-decode attention over the paged BF16
-//! KV cache, computed in f32. Three tiers reproduce §6.6's optimization
-//! ladder:
+//! KV cache, computed in f32. Four rungs reproduce (and extend) §6.6's
+//! optimization ladder:
 //!
 //! * [`Tier::Scalar`] — the "auto-vectorized" baseline: straightforward
 //!   loops, one query head at a time, whatever LLVM makes of them.
-//! * [`Tier::Optimized`] — the hand-optimized kernel: GQA-grouped KV
-//!   walks (one cache pass serves all `s` query heads of a group),
-//!   8-lane unrolled dot/saxpby bodies shaped for the vector units, and
+//! * [`Tier::Unrolled`] — the portable hand-optimized kernel:
+//!   GQA-grouped KV walks (one cache pass serves all `s` query heads of
+//!   a group), 8-lane unrolled dot/saxpby bodies shaped for the vector
+//!   units, partitioned strips with software prefetch, and
 //!   block-contiguous strides from the paged store.
-//! * [`Tier::Threaded`] — the optimized kernel sharded over worker
-//!   threads by sequence (scales until the memory controller saturates —
-//!   Fig. 10's knee).
+//! * [`Tier::Simd`] — explicit `std::arch` AVX2+FMA bodies operating on
+//!   the BF16 rows directly (see [`simd`]), behind runtime
+//!   `is_x86_feature_detected!` dispatch with the unrolled kernel as
+//!   the portable fallback. [`Tier::Optimized`] is the silent-upgrade
+//!   alias the engine uses: SIMD where the host supports it, unrolled
+//!   everywhere else.
+//! * Threaded — the optimized kernel sharded over a work-stealing
+//!   [`ThreadPool`] by sequence (scales until the memory controller
+//!   saturates — Fig. 10's knee).
+//!
+//! Tuning knobs ([`AttnTuning`]) thread through every rung; the swept
+//! evidence lives in `benches/fig10_cpu_attention.rs`, which maintains
+//! the committed `BENCH_cpu_attention.json` artifact.
 //!
 //! Numerics: BF16 loads are up-converted to f32 (§5.3); the softmax is
 //! the running-max/running-sum flash form, matching the JAX oracle
 //! `kernels/ref.py::ref_decode_attention` bit-for-bit in structure.
 
 mod kernel;
+pub mod simd;
 mod threaded;
 
 pub use kernel::{decode_attention_dense, Tier};
+pub use simd::simd_available;
 pub use threaded::ThreadPool;
 
 use crate::kvcache::{PagedKvCache, SeqId};
@@ -55,11 +68,29 @@ impl AttnShape {
     }
 }
 
+/// Kernel tuning knobs, threaded through every tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnTuning {
+    /// KV rows walked per partition: the unrolled/SIMD tiers process one
+    /// KV head's strip for `partition` consecutive rows before moving to
+    /// the next head, bounding the working set per sweep. mistral.rs's
+    /// paged attention hard-codes 512; ours is swept in
+    /// `benches/fig10_cpu_attention.rs`. Partitioning never changes the
+    /// per-head update order, so results are bit-identical across values.
+    pub partition: usize,
+}
+
+impl Default for AttnTuning {
+    fn default() -> Self {
+        AttnTuning { partition: 512 }
+    }
+}
+
 /// Decode attention for a batch of queries against the paged cache, one
-/// layer. Writes each result (`n_heads * head_dim` f32) into `out`
-/// (concatenated, query-major). The scalar/optimized tiers run on the
-/// caller's thread; use [`ThreadPool::decode_attention`] for the threaded
-/// tier.
+/// layer, at default tuning. Writes each result (`n_heads * head_dim`
+/// f32) into `out` (concatenated, query-major). The single-thread tiers
+/// run on the caller's thread; use [`ThreadPool::decode_attention`] for
+/// the threaded rung.
 pub fn decode_attention(
     cache: &PagedKvCache,
     layer: usize,
@@ -68,13 +99,26 @@ pub fn decode_attention(
     out: &mut [f32],
     tier: Tier,
 ) {
+    decode_attention_tuned(cache, layer, shape, queries, out, tier, AttnTuning::default());
+}
+
+/// [`decode_attention`] with explicit tuning (the bench sweeps this).
+pub fn decode_attention_tuned(
+    cache: &PagedKvCache,
+    layer: usize,
+    shape: AttnShape,
+    queries: &[DecodeQuery],
+    out: &mut [f32],
+    tier: Tier,
+    tuning: AttnTuning,
+) {
     let q_dim = shape.q_dim();
     assert_eq!(out.len(), queries.len() * q_dim);
     assert_eq!(cache.kv_dim(), shape.kv_dim());
     for (qi, query) in queries.iter().enumerate() {
         assert_eq!(query.q.len(), q_dim);
         let dst = &mut out[qi * q_dim..(qi + 1) * q_dim];
-        kernel::attend_one(cache, layer, shape, query.seq, query.q, dst, tier);
+        kernel::attend_one(cache, layer, shape, query.seq, query.q, dst, tier, tuning);
     }
 }
 
@@ -192,8 +236,57 @@ mod tests {
     }
 
     #[test]
+    fn unrolled_matches_oracle() {
+        check_tier(Tier::Unrolled);
+    }
+
+    #[test]
+    fn simd_matches_oracle() {
+        // On non-AVX2 hosts this exercises the portable fallback path of
+        // the dispatcher — still worth running.
+        check_tier(Tier::Simd);
+    }
+
+    #[test]
     fn optimized_matches_oracle() {
         check_tier(Tier::Optimized);
+    }
+
+    #[test]
+    fn partition_size_is_bit_invariant() {
+        // Partitioning reorders the walk across heads, never within one
+        // head's token sequence, so every partition size must produce
+        // bit-identical output for every tier that honors it.
+        let shape = AttnShape { n_heads: 8, n_kv_heads: 2, head_dim: 32 };
+        let mut rng = Rng::new(21);
+        let lens = [53usize, 9, 1];
+        let (cache, _) = build_cache(shape, &lens, 8, &mut rng);
+        let qs: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|_| (0..shape.q_dim()).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        let queries: Vec<DecodeQuery> = qs
+            .iter()
+            .enumerate()
+            .map(|(i, q)| DecodeQuery { seq: i as SeqId, q })
+            .collect();
+        for tier in [Tier::Unrolled, Tier::Simd, Tier::Optimized] {
+            let mut base = vec![0f32; queries.len() * shape.q_dim()];
+            decode_attention(&cache, 0, shape, &queries, &mut base, tier);
+            for partition in [1usize, 3, 8, 64, 4096] {
+                let mut out = vec![0f32; queries.len() * shape.q_dim()];
+                decode_attention_tuned(
+                    &cache,
+                    0,
+                    shape,
+                    &queries,
+                    &mut out,
+                    tier,
+                    AttnTuning { partition },
+                );
+                assert_eq!(out, base, "tier {tier:?} partition {partition}");
+            }
+        }
     }
 
     #[test]

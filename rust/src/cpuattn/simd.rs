@@ -1,0 +1,354 @@
+//! Explicit AVX2(+FMA) kernel bodies operating on BF16 rows directly.
+//!
+//! The portable unrolled kernel (`kernel.rs`) stages every K/V row through
+//! f32 tiles; this tier instead widens 8 BF16 lanes at a time inside the
+//! FMA chain (zero-extend `u16` → `u32`, shift left 16, reinterpret as
+//! f32 — BF16 *is* the top half of f32) so the dot and the flash update
+//! read the cache bits with no staging pass. Dispatch is at runtime:
+//! [`simd_available`] checks `is_x86_feature_detected!("avx2")` + `fma`
+//! once per call site, and `kernel::attend_one` silently falls back to
+//! the unrolled tier on non-x86 builds or pre-AVX2 hosts, so numerics
+//! stay within the shared 1e-4 parity tolerance everywhere (see
+//! `tests/cpuattn_parity.rs`).
+
+use super::{AttnShape, AttnTuning};
+use crate::kvcache::{PagedKvCache, SeqId};
+
+/// Can [`Tier::Simd`](super::Tier::Simd) run its intrinsics bodies on
+/// this host? Always `false` off x86_64.
+#[inline]
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        x86::available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Hint the head of `row` (up to 4 cache lines) into L1 ahead of use —
+/// `_mm_prefetch` on x86_64 (SSE is baseline there, no detection needed),
+/// a no-op elsewhere. Prefetch is advisory: wrong or late hints cost
+/// nothing but the slot.
+#[inline(always)]
+pub fn prefetch_row(row: &[u16]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let p = row.as_ptr().cast::<i8>();
+        let bytes = row.len().saturating_mul(2).min(256);
+        let mut off = 0usize;
+        while off < bytes {
+            // Safety: `off < bytes <= row.len() * 2` keeps the pointer in
+            // bounds of the slice allocation; prefetch reads nothing
+            // architecturally (it cannot fault) and SSE is part of the
+            // x86_64 baseline.
+            unsafe {
+                std::arch::x86_64::_mm_prefetch::<{ std::arch::x86_64::_MM_HINT_T0 }>(p.add(off))
+            };
+            off += 64;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = row;
+}
+
+/// Widen a BF16 row into f32, dispatching to the AVX2 body when the host
+/// supports it and to the portable shift loop otherwise. The two paths
+/// are bit-identical (both are the same 16-bit left shift), so callers
+/// may mix them freely.
+pub fn upconvert_bf16(dst: &mut [f32], src: &[u16]) {
+    assert!(dst.len() >= src.len());
+    #[cfg(target_arch = "x86_64")]
+    if x86::available() {
+        // Safety: `available()` verified AVX2 just above; lengths are
+        // checked by the assert.
+        unsafe { x86::upconvert(dst, src) };
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32::from_bits((s as u32) << 16);
+    }
+}
+
+/// The AVX2+FMA bodies. Compiled only on x86_64; every entry point is an
+/// `unsafe fn` gated on [`available`] — the caller promises the CPU
+/// features, the bodies promise the slice bounds they document.
+#[cfg(target_arch = "x86_64")]
+pub mod x86 {
+    use std::arch::x86_64::*;
+
+    use crate::util::bf16::bf16_to_f32;
+
+    /// Does this host have the AVX2 + FMA these bodies require?
+    #[inline]
+    pub fn available() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    /// Widen 8 BF16 values at `p` into 8 f32 lanes: zero-extend
+    /// `u16 → u32`, shift left 16 (BF16 bits are the high half of f32),
+    /// reinterpret as floats. This is the upconvert building block every
+    /// body below fuses into its load.
+    ///
+    /// # Safety
+    /// `p` must point at 8 readable `u16`s and the caller must have
+    /// verified AVX2 support via [`available`].
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen8(p: *const u16) -> __m256 {
+        let halves = _mm_loadu_si128(p.cast::<__m128i>());
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(halves)))
+    }
+
+    /// Horizontal sum of 8 f32 lanes.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support via [`available`].
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Dot product of an f32 query row against a BF16 K row: two
+    /// independent 8-lane FMA chains (16 elements per step), an 8-wide
+    /// step, then a scalar tail for odd head_dims.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support via [`available`] and
+    /// pass equal-length slices.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_bf16(q: &[f32], k: &[u16]) -> f32 {
+        debug_assert_eq!(q.len(), k.len());
+        let n = q.len();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(q.as_ptr().add(i)),
+                widen8(k.as_ptr().add(i)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(q.as_ptr().add(i + 8)),
+                widen8(k.as_ptr().add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(q.as_ptr().add(i)),
+                widen8(k.as_ptr().add(i)),
+                acc0,
+            );
+            i += 8;
+        }
+        let mut dot = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            dot += q[i] * bf16_to_f32(k[i]);
+            i += 1;
+        }
+        dot
+    }
+
+    /// Fused flash update `acc = a*acc + b*widen(v)` over a BF16 V row —
+    /// the rescale-on-new-max and the weighted accumulate in one pass
+    /// (`a` is 1.0 on the common no-new-max step, so the fold is exact
+    /// there).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support via [`available`] and
+    /// pass equal-length slices.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn saxpby_bf16(acc: &mut [f32], v: &[u16], a: f32, b: f32) {
+        debug_assert_eq!(acc.len(), v.len());
+        let n = acc.len();
+        let av = _mm256_set1_ps(a);
+        let bv = _mm256_set1_ps(b);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let cur = _mm256_mul_ps(av, _mm256_loadu_ps(acc.as_ptr().add(i)));
+            let upd = _mm256_fmadd_ps(bv, widen8(v.as_ptr().add(i)), cur);
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), upd);
+            i += 8;
+        }
+        while i < n {
+            acc[i] = a * acc[i] + b * bf16_to_f32(v[i]);
+            i += 1;
+        }
+    }
+
+    /// Slice-level upconvert: widen `src` BF16 into `dst` f32, 8 lanes at
+    /// a time. Bit-identical to the portable shift loop.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support via [`available`] and pass
+    /// `dst.len() >= src.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn upconvert(dst: &mut [f32], src: &[u16]) {
+        debug_assert!(dst.len() >= src.len());
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), widen8(src.as_ptr().add(i)));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = bf16_to_f32(src[i]);
+            i += 1;
+        }
+    }
+}
+
+/// The SIMD-tier flash-decode body: same partitioned, KV-head-major walk
+/// as the unrolled kernel (so the tiers differ only in the vector
+/// bodies), with the next row of the current head strip prefetched one
+/// token ahead. Only reachable through `kernel::attend_one` after a
+/// [`simd_available`] check.
+#[cfg(target_arch = "x86_64")]
+pub(super) fn attend_simd(
+    cache: &PagedKvCache,
+    layer: usize,
+    shape: AttnShape,
+    seq: SeqId,
+    q: &[f32],
+    out: &mut [f32],
+    tuning: AttnTuning,
+) {
+    debug_assert!(x86::available());
+    let hd = shape.head_dim;
+    assert!(hd <= super::kernel::MAX_HD, "head_dim {hd} exceeds kernel tile size");
+    let kv_dim = shape.kv_dim();
+    let group = shape.gqa_group();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let nh = shape.n_heads;
+    let part = tuning.partition.max(1);
+
+    let mut m = vec![f32::NEG_INFINITY; nh];
+    let mut denom = vec![0f32; nh];
+    let mut acc = vec![0f32; nh * hd];
+
+    cache.walk_context(seq, layer, |k_run, v_run, n| {
+        let mut t0 = 0usize;
+        while t0 < n {
+            let t1 = (t0 + part).min(n);
+            for kvh in 0..shape.n_kv_heads {
+                for t in t0..t1 {
+                    let off = t * kv_dim + kvh * hd;
+                    if t + 1 < t1 {
+                        prefetch_row(&k_run[off + kv_dim..off + kv_dim + hd]);
+                        prefetch_row(&v_run[off + kv_dim..off + kv_dim + hd]);
+                    }
+                    let k_row = &k_run[off..off + hd];
+                    let v_row = &v_run[off..off + hd];
+                    for gi in 0..group {
+                        let h = kvh * group + gi;
+                        let qh = &q[h * hd..(h + 1) * hd];
+                        // Safety: `attend_one` dispatches here only after
+                        // `simd_available()` confirmed AVX2+FMA; rows and
+                        // `qh` are all `hd` long.
+                        let s = unsafe { x86::dot_bf16(qh, k_row) } * scale;
+                        let mut corr = 1.0f32;
+                        if s > m[h] {
+                            corr = (m[h] - s).exp();
+                            denom[h] *= corr;
+                            m[h] = s;
+                        }
+                        let w = (s - m[h]).exp();
+                        denom[h] += w;
+                        // Safety: same dispatch guarantee as the dot; the
+                        // accumulator window and `v_row` are `hd` long.
+                        unsafe {
+                            x86::saxpby_bf16(&mut acc[h * hd..(h + 1) * hd], v_row, corr, w)
+                        };
+                    }
+                }
+            }
+            t0 = t1;
+        }
+    });
+
+    for h in 0..nh {
+        let inv = 1.0 / denom[h];
+        let src = &acc[h * hd..(h + 1) * hd];
+        let dst = &mut out[h * hd..(h + 1) * hd];
+        for d in 0..hd {
+            dst[d] = src[d] * inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bf16::{bf16_to_f32, f32_to_bf16};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn upconvert_dispatch_is_exact() {
+        let mut rng = Rng::new(5);
+        let src: Vec<u16> =
+            (0..37).map(|_| f32_to_bf16(rng.f32() * 8.0 - 4.0)).collect();
+        let mut dst = vec![0f32; 37];
+        upconvert_bf16(&mut dst, &src);
+        for (d, &s) in dst.iter().zip(&src) {
+            assert_eq!(d.to_bits(), bf16_to_f32(s).to_bits());
+        }
+    }
+
+    #[test]
+    fn prefetch_row_is_safe_on_any_slice() {
+        prefetch_row(&[]);
+        prefetch_row(&[1u16]);
+        prefetch_row(&[0u16; 4096]);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_trio_matches_scalar_reference() {
+        if !x86::available() {
+            return; // pre-AVX2 host: the dispatch tests still cover fallback
+        }
+        let mut rng = Rng::new(77);
+        // Odd lengths exercise the 16-wide, 8-wide, and scalar tails.
+        for n in [1usize, 7, 8, 9, 16, 23, 64, 127, 128, 160] {
+            let q: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let k: Vec<u16> =
+                (0..n).map(|_| f32_to_bf16(rng.f32() * 2.0 - 1.0)).collect();
+            let naive: f32 =
+                q.iter().zip(&k).map(|(x, &y)| x * bf16_to_f32(y)).sum();
+            // Safety: `available()` checked at the top of the test.
+            let fast = unsafe { x86::dot_bf16(&q, &k) };
+            assert!(
+                (naive - fast).abs() <= 1e-4 * naive.abs().max(1.0),
+                "n={n}: {naive} vs {fast}"
+            );
+
+            let mut acc: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let mut want = acc.clone();
+            let (a, b) = (0.25f32, 1.75f32);
+            for (w, &v) in want.iter_mut().zip(&k) {
+                *w = a * *w + b * bf16_to_f32(v);
+            }
+            // Safety: `available()` checked at the top of the test.
+            unsafe { x86::saxpby_bf16(&mut acc, &k, a, b) };
+            for (x, y) in acc.iter().zip(&want) {
+                assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0), "n={n}: {x} vs {y}");
+            }
+
+            let mut up = vec![0f32; n];
+            // Safety: `available()` checked at the top of the test.
+            unsafe { x86::upconvert(&mut up, &k) };
+            for (x, &y) in up.iter().zip(&k) {
+                assert_eq!(x.to_bits(), bf16_to_f32(y).to_bits(), "n={n}");
+            }
+        }
+    }
+}

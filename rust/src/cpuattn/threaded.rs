@@ -1,40 +1,59 @@
-//! Thread-sharded decode attention (§6.6's full-thread tier).
+//! Work-stealing thread-sharded decode attention (§6.6's full-thread
+//! rung).
 //!
-//! A long-lived worker pool (std threads + channels; the offline crate set
-//! has no rayon) shards decode queries by sequence. Work items carry raw
-//! pointers bounded by the call's scope — the pool joins a completion
-//! latch before `decode_attention` returns, upholding the borrow.
+//! The previous pool funneled every job through one contended
+//! `Mutex<Receiver>`; this one gives each long-lived worker (std threads
+//! + channels; the offline crate set has no rayon or crossbeam-deque) a
+//! private injector channel. A batch is *announced* to every worker once
+//! (`Arc<Batch>`), and the actual work — query indices — is claimed in
+//! chunks straight off a shared atomic cursor. Stealing is implicit:
+//! whichever worker drains its chunk first claims the next from the same
+//! cursor, so skewed context lengths balance without any queue traffic
+//! or locks on the hot path. The announcing call blocks on a completion
+//! latch before returning, upholding the borrows behind the batch's raw
+//! pointers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use super::kernel::{attend_one, Tier};
-use super::{AttnShape, DecodeQuery};
+use super::kernel::attend_one;
+use super::{AttnShape, AttnTuning, DecodeQuery, Tier};
 use crate::kvcache::PagedKvCache;
 
-/// A batch-scoped work item: attend queries `lo..hi` of the batch.
-struct Job {
-    ctx: *const BatchCtx,
-    lo: usize,
-    hi: usize,
-}
-// Safety: `BatchCtx` outlives all jobs of a batch (completion latch), and
-// disjoint `lo..hi` ranges write disjoint `out` regions.
-unsafe impl Send for Job {}
-
-struct BatchCtx {
+/// One announced batch: the shared claim cursor plus raw views of the
+/// caller's borrows. Heap-allocated behind `Arc` so a worker that
+/// dequeues the announcement *after* the batch completed still reads a
+/// live cursor — it observes `next >= n` and never touches the raw
+/// pointers.
+struct Batch {
     cache: *const PagedKvCache,
     shape: AttnShape,
     layer: usize,
-    queries: *const [DecodeQueryRaw],
+    tuning: AttnTuning,
+    queries: *const DecodeQueryRaw,
+    n: usize,
     out: *mut f32,
     q_dim: usize,
+    /// Next unclaimed query index — the work-stealing cursor.
+    next: AtomicUsize,
+    /// Queries claimed per `fetch_add` (~ n / (threads * 4)).
+    chunk: usize,
+    /// Queries not yet completed; reaching zero trips the latch.
     remaining: AtomicUsize,
     done: (Mutex<bool>, Condvar),
 }
-unsafe impl Sync for BatchCtx {}
+
+// Safety: the raw pointers are dereferenced only under a claimed index
+// `< n`, which (see `run_batch`) can only happen while the announcing
+// call still blocks on the latch — so the borrows behind them are live —
+// and disjoint claimed ranges write disjoint `out` regions.
+unsafe impl Send for Batch {}
+// Safety: cross-thread shared state is the atomics and the latch, which
+// synchronize themselves; the raw pointers are covered by the `Send`
+// reasoning above.
+unsafe impl Sync for Batch {}
 
 struct DecodeQueryRaw {
     seq: crate::kvcache::SeqId,
@@ -42,34 +61,42 @@ struct DecodeQueryRaw {
     q_len: usize,
 }
 
-/// Long-lived worker pool for the threaded attention tier.
+/// Long-lived work-stealing worker pool for the threaded attention rung.
 pub struct ThreadPool {
-    tx: Sender<Job>,
+    injectors: Vec<Sender<Arc<Batch>>>,
     workers: Vec<JoinHandle<()>>,
     n_threads: usize,
 }
 
 impl ThreadPool {
-    /// Spawn `n_threads` workers (>= 1).
+    /// Spawn `n_threads` workers; `0` sizes the pool from
+    /// `std::thread::available_parallelism` (the `serve --attn-threads 0`
+    /// default).
     pub fn new(n_threads: usize) -> Self {
-        let n_threads = n_threads.max(1);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..n_threads)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
-                std::thread::spawn(move || worker_loop(rx))
-            })
-            .collect();
-        ThreadPool { tx, workers, n_threads }
+        let n_threads = if n_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            n_threads
+        };
+        let mut injectors = Vec::with_capacity(n_threads);
+        let mut workers = Vec::with_capacity(n_threads);
+        for _ in 0..n_threads {
+            let (tx, rx) = channel::<Arc<Batch>>();
+            injectors.push(tx);
+            workers.push(std::thread::spawn(move || worker_loop(rx)));
+        }
+        ThreadPool { injectors, workers, n_threads }
     }
 
     pub fn n_threads(&self) -> usize {
         self.n_threads
     }
 
-    /// Threaded decode attention over the batch: shards sequences across
-    /// the pool and blocks until every result is written to `out`.
+    /// Threaded decode attention over the batch at default tuning: shards
+    /// sequences across the pool and blocks until every result is written
+    /// to `out`. Output is bit-identical to the single-thread
+    /// [`Tier::Optimized`] kernel — per-sequence work is deterministic
+    /// and claimed ranges are disjoint.
     pub fn decode_attention(
         &self,
         cache: &PagedKvCache,
@@ -77,6 +104,19 @@ impl ThreadPool {
         shape: AttnShape,
         queries: &[DecodeQuery],
         out: &mut [f32],
+    ) {
+        self.decode_attention_tuned(cache, layer, shape, queries, out, AttnTuning::default());
+    }
+
+    /// [`ThreadPool::decode_attention`] with explicit kernel tuning.
+    pub fn decode_attention_tuned(
+        &self,
+        cache: &PagedKvCache,
+        layer: usize,
+        shape: AttnShape,
+        queries: &[DecodeQuery],
+        out: &mut [f32],
+        tuning: AttnTuning,
     ) {
         let q_dim = shape.q_dim();
         assert_eq!(out.len(), queries.len() * q_dim);
@@ -88,31 +128,33 @@ impl ThreadPool {
             .map(|q| DecodeQueryRaw { seq: q.seq, q_ptr: q.q.as_ptr(), q_len: q.q.len() })
             .collect();
 
-        // Chunk so each worker gets ~2 jobs (cheap dynamic balancing for
-        // skewed context lengths).
         let n = queries.len();
-        let chunk = n.div_ceil(self.n_threads * 2).max(1);
-        let n_jobs = n.div_ceil(chunk);
-
-        let ctx = BatchCtx {
+        // ~4 claims per worker: coarse enough to keep cursor traffic
+        // negligible, fine enough to steal around skewed context lengths.
+        let chunk = n.div_ceil(self.n_threads * 4).max(1);
+        let batch = Arc::new(Batch {
             cache,
             shape,
             layer,
-            queries: raw.as_slice(),
+            tuning,
+            queries: raw.as_ptr(),
+            n,
             out: out.as_mut_ptr(),
             q_dim,
-            remaining: AtomicUsize::new(n_jobs),
+            next: AtomicUsize::new(0),
+            chunk,
+            remaining: AtomicUsize::new(n),
             done: (Mutex::new(false), Condvar::new()),
-        };
+        });
 
-        for j in 0..n_jobs {
-            let lo = j * chunk;
-            let hi = ((j + 1) * chunk).min(n);
-            self.tx.send(Job { ctx: &ctx, lo, hi }).expect("pool alive");
+        for tx in &self.injectors {
+            tx.send(Arc::clone(&batch)).expect("worker alive");
         }
 
-        // Completion latch: wait for all jobs of *this* batch.
-        let (lock, cvar) = &ctx.done;
+        // Completion latch: every query of *this* batch is written (and
+        // every claimed chunk retired) before the borrows behind the raw
+        // pointers end.
+        let (lock, cvar) = &batch.done;
         let mut finished = lock.lock().unwrap();
         while !*finished {
             finished = cvar.wait(finished).unwrap();
@@ -122,38 +164,58 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        // Closing the channel ends the worker loops.
-        let (tx, _) = channel();
-        drop(std::mem::replace(&mut self.tx, tx));
+        // Closing every injector channel ends the worker loops.
+        self.injectors.clear();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+fn worker_loop(rx: Receiver<Arc<Batch>>) {
+    while let Ok(batch) = rx.recv() {
+        run_batch(&batch);
+    }
+}
+
+/// Claim and run chunks of `b` until the cursor is drained. The safety
+/// invariant throughout: a claim with `start < n` means at least `end -
+/// start` completions are still outstanding (`remaining` cannot reach
+/// zero until *this* worker's `fetch_sub` below), so the announcing call
+/// is parked on the latch and the borrows behind the raw pointers are
+/// live for the whole chunk.
+fn run_batch(b: &Batch) {
     loop {
-        let job = match rx.lock().unwrap().recv() {
-            Ok(j) => j,
-            Err(_) => return, // pool dropped
-        };
-        // Safety: see `Job`.
-        let ctx = unsafe { &*job.ctx };
-        let queries = unsafe { &*ctx.queries };
-        let cache = unsafe { &*ctx.cache };
-        for i in job.lo..job.hi {
-            let q = &queries[i];
-            let qs = unsafe { std::slice::from_raw_parts(q.q_ptr, q.q_len) };
-            let dst = unsafe {
-                std::slice::from_raw_parts_mut(ctx.out.add(i * ctx.q_dim), ctx.q_dim)
-            };
-            attend_one(cache, ctx.layer, ctx.shape, q.seq, qs, dst, Tier::Optimized);
+        let start = b.next.fetch_add(b.chunk, Ordering::Relaxed);
+        if start >= b.n {
+            return;
         }
-        if ctx.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let (lock, cvar) = &ctx.done;
+        let end = (start + b.chunk).min(b.n);
+        // Safety: claim invariant above — the caller's `&PagedKvCache`
+        // borrow is live while we hold an unretired claim.
+        let cache = unsafe { &*b.cache };
+        // Safety: claim invariant; `queries` points at the caller's Vec
+        // of `n` contiguous raw query records.
+        let queries = unsafe { std::slice::from_raw_parts(b.queries, b.n) };
+        for i in start..end {
+            let q = &queries[i];
+            // Safety: claim invariant; `q_ptr`/`q_len` view the caller's
+            // i-th query slice.
+            let qs = unsafe { std::slice::from_raw_parts(q.q_ptr, q.q_len) };
+            // Safety: claim invariant, plus exclusivity — the cursor
+            // hands index `i` to exactly one worker, so this `q_dim`
+            // window of `out` is written by us alone.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(b.out.add(i * b.q_dim), b.q_dim)
+            };
+            attend_one(cache, b.layer, b.shape, q.seq, qs, dst, Tier::Optimized, b.tuning);
+        }
+        let claimed = end - start;
+        if b.remaining.fetch_sub(claimed, Ordering::AcqRel) == claimed {
+            let (lock, cvar) = &b.done;
             // Notify while *holding* the lock: the waiter cannot observe
-            // `true` and destroy `ctx` until we release the guard, so the
-            // condvar outlives this notify (it is a stack-scoped latch).
+            // `true` and drop its `Arc` until we release the guard, and
+            // our own `Arc` keeps the latch storage alive regardless.
             let mut finished = lock.lock().unwrap();
             *finished = true;
             cvar.notify_all();
@@ -207,6 +269,12 @@ mod tests {
     }
 
     #[test]
+    fn zero_thread_count_sizes_from_available_parallelism() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.n_threads() >= 1);
+    }
+
+    #[test]
     fn empty_batch_is_noop() {
         let pool = ThreadPool::new(2);
         let shape = AttnShape { n_heads: 2, n_kv_heads: 1, head_dim: 8 };
@@ -215,7 +283,7 @@ mod tests {
             1,
             shape.kv_dim(),
         );
-        let mut out = [];
+        let mut out: [f32; 0] = [];
         pool.decode_attention(&cache, 0, shape, &[], &mut out);
     }
 

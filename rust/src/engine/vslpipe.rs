@@ -84,7 +84,8 @@ pub struct EngineConfig {
     /// Data-mover packet size (§6.5; scaled down from 100 MB for the
     /// small artifacts).
     pub packet_bytes: usize,
-    /// CPU attention worker threads.
+    /// CPU attention worker threads (0 = size the pool from
+    /// `std::thread::available_parallelism`).
     pub attn_threads: usize,
     /// Scheduler token budget per pass (buckets of `n_tok` are opened as
     /// needed up to this).
@@ -139,7 +140,7 @@ impl EngineConfig {
             // §6.5's no-head-of-line-blocking property at small-model
             // scale (paper-scale default stays 100 MB).
             packet_bytes: 8 << 20,
-            attn_threads: 2,
+            attn_threads: 0,
             token_budget: 0, // 0 => 2 buckets (set at load)
             admission: AdmissionPolicy::default(),
             victim: VictimPolicy::default(),

@@ -8,6 +8,7 @@
 
 use super::layout::{KvLayout, PagedLayout, SeqId};
 use crate::util::bf16::f32_to_bf16;
+use crate::util::cast::u64_usize;
 
 /// Per-layer K/V pools.
 struct LayerPool {
@@ -89,6 +90,39 @@ impl PagedKvCache {
         for i in 0..self.kv_dim {
             pool.k[base + i] = f32_to_bf16(k[i]);
             pool.v[base + i] = f32_to_bf16(v[i]);
+        }
+    }
+
+    /// Bulk write of `n` consecutive tokens' K/V (raw BF16 bits) starting
+    /// at position `pos` (previously reserved via [`grow`]). Runs are
+    /// split at block boundaries and copied with `copy_from_slice`; bits
+    /// are stored verbatim, so staging adapters that already hold BF16
+    /// avoid the per-token f32 round-trip of [`write`].
+    pub fn write_run(
+        &mut self,
+        id: SeqId,
+        layer: usize,
+        pos: usize,
+        n: usize,
+        k_bits: &[u16],
+        v_bits: &[u16],
+    ) {
+        assert_eq!(k_bits.len(), n * self.kv_dim);
+        assert_eq!(v_bits.len(), n * self.kv_dim);
+        let bs = self.layout.layout().block_size;
+        let kv_dim = self.kv_dim;
+        let table = self.layout.table(id);
+        let pool = &mut self.pools[layer];
+        let mut done = 0usize;
+        while done < n {
+            let (block, slot) = table.locate(pos + done, bs);
+            let seg = (bs - slot).min(n - done);
+            let dst = (u64_usize(u64::from(block)) * bs + slot) * kv_dim;
+            let src = done * kv_dim;
+            let len = seg * kv_dim;
+            pool.k[dst..dst + len].copy_from_slice(&k_bits[src..src + len]);
+            pool.v[dst..dst + len].copy_from_slice(&v_bits[src..src + len]);
+            done += seg;
         }
     }
 
@@ -179,6 +213,44 @@ mod tests {
             runs.push(n);
         });
         assert_eq!(runs, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn write_run_matches_per_token_writes_across_blocks() {
+        use crate::util::bf16::f32_to_bf16;
+        let mut a = cache();
+        let mut b = cache();
+        for c in [&mut a, &mut b] {
+            c.register(1);
+            c.register(2);
+            c.grow(1, 3);
+            c.grow(2, 2);
+            c.grow(1, 7); // seq 1 spans non-adjacent blocks: 4 + 4 + 2 slots
+        }
+        let mut rng = Rng::new(5);
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..10)
+            .map(|_| {
+                let k: Vec<f32> = (0..6).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                let v: Vec<f32> = (0..6).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                (k, v)
+            })
+            .collect();
+        for (pos, (k, v)) in toks.iter().enumerate() {
+            a.write(1, 0, pos, k, v);
+        }
+        let k_bits: Vec<u16> =
+            toks.iter().flat_map(|(k, _)| k.iter().map(|&x| f32_to_bf16(x))).collect();
+        let v_bits: Vec<u16> =
+            toks.iter().flat_map(|(_, v)| v.iter().map(|&x| f32_to_bf16(x))).collect();
+        // one bulk call covering all three discontiguous blocks, plus a
+        // partial overwrite starting mid-block
+        b.write_run(1, 0, 0, 10, &k_bits, &v_bits);
+        assert_eq!(a.gather_context(1, 0), b.gather_context(1, 0));
+        b.write_run(1, 0, 3, 4, &k_bits[..4 * 6], &v_bits[..4 * 6]);
+        for (pos, (k, v)) in toks.iter().take(4).enumerate() {
+            a.write(1, 0, pos + 3, k, v);
+        }
+        assert_eq!(a.gather_context(1, 0), b.gather_context(1, 0));
     }
 
     #[test]

@@ -24,7 +24,7 @@ USAGE: moe-lens <COMMAND> [OPTIONS]
 COMMANDS:
   serve      serve requests through the real PJRT engine
              --model tiny|small  --requests N  --prompt N  --gen N
-             --kv-blocks N  --block-size N  --attn-threads N
+             --kv-blocks N  --block-size N  --attn-threads N (0 = all cores)
              [--link-gbps F] [--trace-csv PATH]
              online mode (reports TTFT/TPOT/e2e p50+p99 and goodput):
              [--arrival poisson|burst|trace] [--arrival-rate F]

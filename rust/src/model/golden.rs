@@ -164,7 +164,7 @@ mod tests {
             n_kv_heads: d.n_kv_heads,
             head_dim: d.head_dim,
         };
-        for tier in [Tier::Scalar, Tier::Optimized] {
+        for tier in [Tier::Scalar, Tier::Unrolled, Tier::Simd, Tier::Optimized] {
             let mut out = vec![0f32; d.out.len()];
             decode_attention_dense(
                 shape, &d.q, &d.k_bits, &d.v_bits, &d.ctx_lens, d.l_max, &mut out, tier,

@@ -1,0 +1,4 @@
+// Fixture: the rule scopes to src/ only — bench code is exempt.
+pub fn bench_peek(p: *const u32) -> u32 {
+    unsafe { *p }
+}

@@ -1,0 +1,5 @@
+// Fixture: allow suppresses undocumented-unsafe at audited sites.
+pub fn audited(p: *const u32) -> u32 {
+    // pallas-lint: allow(undocumented-unsafe) — audited in review
+    unsafe { *p }
+}

@@ -1,0 +1,19 @@
+// Fixture: unsafe blocks and impls without a Safety comment must fire.
+pub fn read_raw(p: *const u32) -> u32 {
+    unsafe { *p }
+}
+
+pub struct RawHolder(pub *const u32);
+
+unsafe impl Send for RawHolder {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unsafe_in_tests_is_not_exempt() {
+        let x = 7u32;
+        // an unsound block corrupts test verdicts too, so no test carve-out
+        let y = unsafe { *(&x as *const u32) };
+        assert_eq!(y, 7);
+    }
+}

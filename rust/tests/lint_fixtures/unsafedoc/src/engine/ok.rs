@@ -1,0 +1,31 @@
+// Fixture: documented unsafe sites and declaration-side unsafe are clean.
+pub fn same_line(p: *const u32) -> u32 {
+    unsafe { *p } // Safety: caller passes a live, aligned pointer
+}
+
+pub fn line_above(p: *const u32) -> u32 {
+    // Safety: caller passes a live, aligned pointer
+    unsafe { *p }
+}
+
+pub fn block_above(p: *const u32) -> u32 {
+    // Safety: the pointer is produced from a reference two frames up and
+    // outlives this call; alignment is guaranteed by the source type.
+    unsafe { *p }
+}
+
+/// # Safety
+/// `p` must be live and aligned.
+pub unsafe fn decl_side(p: *const u32) -> u32 {
+    // Safety: forwarded contract — see the function's Safety section.
+    unsafe { *p }
+}
+
+/// # Safety
+/// Implementors promise their bytes are plain old data.
+pub unsafe trait PlainOldData {}
+
+pub struct DocumentedHolder(pub *const u32);
+
+// Safety: the pointer is only dereferenced under the owner's lock.
+unsafe impl Send for DocumentedHolder {}

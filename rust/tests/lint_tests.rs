@@ -114,6 +114,20 @@ fn float_eq_fires_on_literal_compares_not_strings() {
 }
 
 #[test]
+fn undocumented_unsafe_fires_in_src_including_tests() {
+    let got = scan_group("unsafedoc");
+    // bad.rs: a bare block, an `unsafe impl`, and a block under
+    // #[cfg(test)] (no test carve-out for this rule). ok.rs (documented
+    // sites + decl-side unsafe), allowed.rs, and benches/outscope.rs
+    // (rule scopes to src/) contribute nothing.
+    assert_eq!(got.len(), 3, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/engine/bad.rs");
+        assert_eq!(*rule, Rule::UndocumentedUnsafe);
+    }
+}
+
+#[test]
 fn fixture_corpus_is_excluded_from_the_default_scan() {
     let files = collect_files(crate_root()).expect("walk crate");
     assert!(!files.is_empty());
