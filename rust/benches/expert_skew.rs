@@ -11,6 +11,16 @@
 //! the tracking assert tie the analytic model to the simulated machine.
 //!
 //! Emits BENCH_expert_skew.json at the repo root for plotting.
+//!
+//! ```text
+//! cargo bench --bench expert_skew              # full sweep + rewrite artifact
+//! cargo bench --bench expert_skew -- --check   # CI: assert >= committed floors
+//! ```
+//!
+//! The sweep runs on the virtual clock, so the checked ratios are
+//! deterministic; the committed budget floors are still generous (the
+//! rule they enforce is "pinning must win at all", not a percent-level
+//! target) so cost-model retuning doesn't thrash CI.
 
 use moe_lens::config::ModelSpec;
 use moe_lens::metrics::Trace;
@@ -25,7 +35,28 @@ fn exposed_io(trace: &Trace) -> f64 {
     trace.passes.iter().map(|p| p.io_time).sum()
 }
 
+const ARTIFACT: &str = "BENCH_expert_skew.json";
+
+/// Regression floors for `--check`. The sweep is virtual-clock
+/// deterministic, but the floors stay loose on purpose: they gate
+/// "expert pinning stopped winning" and "throughput collapsed", not
+/// cost-model retunes.
+const BUDGETS: &[(&str, f64)] = &[
+    ("sim_speedup_zipf12_pinned1_min", 1.001),
+    ("hrm_speedup_zipf12_pinned1_min", 1.001),
+    ("io_reduction_zipf12_pinned4_min", 1.001),
+    ("gen_tok_s_blind_min", 1.0),
+];
+
+fn artifact_path() -> String {
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/.."))
+        .unwrap_or_else(|_| "..".into());
+    format!("{root}/{ARTIFACT}")
+}
+
 fn main() {
+    let check_mode = std::env::args().any(|a| a == "--check");
     banner(
         "expert_skew",
         "goodput & exposed weight IO vs Zipf routing skew and pinned-set size",
@@ -52,6 +83,8 @@ fn main() {
     ]);
     let mut rows_json: Vec<Json> = Vec::new();
     let mut tracked: Option<(f64, f64)> = None; // (sim_gain, pred_gain)
+    let mut blind_gen: Option<f64> = None; // gen tok/s at zipf 0, pinned 0
+    let mut io_reduction: Option<f64> = None; // blind/pinned IO at zipf 1.2, pinned 4
 
     for &zipf_s in &[0.0f64, 1.0, 1.2] {
         // (sim exposed IO, sim wall, hrm iter) at pinned = 0 — the
@@ -88,6 +121,9 @@ fn main() {
                 ("pass_tokens", Json::Num(budget as f64)),
             ]));
 
+            if blind_gen.is_none() {
+                blind_gen = Some(report.generation_throughput);
+            }
             match blind {
                 None => blind = Some((io, report.wall_secs, hrm_iter)),
                 Some((io0, wall0, iter0)) => {
@@ -105,6 +141,9 @@ fn main() {
                     if zipf_s >= 1.2 && pinned == 1 {
                         tracked =
                             Some((wall0 / report.wall_secs, iter0 / hrm_iter));
+                    }
+                    if zipf_s >= 1.2 && pinned == 4 {
+                        io_reduction = Some(io0 / io);
                     }
                 }
             }
@@ -127,18 +166,56 @@ fn main() {
         "HRM prediction {pred_gain:.3}x must track simulated {sim_gain:.3}x"
     );
 
-    let root = std::env::var("CARGO_MANIFEST_DIR")
-        .map(|d| format!("{d}/.."))
-        .unwrap_or_else(|_| "..".into());
-    let path = format!("{root}/BENCH_expert_skew.json");
+    // --- artifact: check against the committed floors, or rewrite -----
+    let path = artifact_path();
+    if check_mode {
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {path}: {e} — commit the bench artifact"));
+        let doc = Json::parse(&text).expect("parse committed artifact");
+        let budgets = doc.req("budgets");
+        let measured = [
+            ("sim_speedup_zipf12_pinned1_min", sim_gain),
+            ("hrm_speedup_zipf12_pinned1_min", pred_gain),
+            (
+                "io_reduction_zipf12_pinned4_min",
+                io_reduction.expect("zipf 1.2 / pinned 4 row ran"),
+            ),
+            ("gen_tok_s_blind_min", blind_gen.expect("blind row ran")),
+        ];
+        for (key, got) in measured {
+            let floor = budgets.req(key).as_f64().expect("budget is a number");
+            assert!(
+                got >= floor,
+                "budget {key}: measured {got:.4} under committed floor {floor:.4}"
+            );
+            println!("check {key}: {got:.3} >= floor {floor:.3}  ok");
+        }
+        println!("--check passed against {path}");
+        return;
+    }
+
     let doc = obj(vec![
         ("bench", Json::Str("expert_skew".into())),
+        ("version", Json::Num(1.0)),
         ("model", Json::Str(model.name.to_string())),
         ("p", Json::Num(p as f64)),
         ("g", Json::Num(g as f64)),
         ("requests", Json::Num(k as f64)),
         ("kv_gb", Json::Num(kv_gb as f64)),
         ("rows", Json::Arr(rows_json)),
+        (
+            "budgets",
+            obj(BUDGETS.iter().map(|&(bk, v)| (bk, Json::Num(v))).collect()),
+        ),
+        (
+            "note",
+            Json::Str(
+                "refresh with `cargo bench --bench expert_skew` from rust/; the \
+                 sweep is virtual-clock deterministic, budgets gate direction \
+                 (pinning must win), not percent-level drift"
+                    .into(),
+            ),
+        ),
     ]);
     std::fs::write(&path, format!("{doc}\n")).expect("write bench artifact");
     println!("wrote {path}");

@@ -11,8 +11,10 @@
 //! `'`.
 //!
 //! Comment *text* is kept separately per line because suppression
-//! directives live in comments: `// pallas-lint: allow(<rule>)` on the
-//! violating line or the line directly above it.
+//! directives live in comments: e.g. `// pallas-lint: allow(float-eq)`
+//! on the violating line or the line directly above it. Directive names
+//! are validated against the rule set at scan time, so this example must
+//! name a real rule.
 
 /// One source line after scrubbing.
 #[derive(Debug, Clone, Default)]
@@ -241,7 +243,7 @@ pub fn test_regions(lines: &[Line]) -> Vec<bool> {
 }
 
 /// Is a violation of `rule` on 0-based line `lineno` suppressed by a
-/// `pallas-lint: allow(…)` directive on that line or the line above?
+/// `pallas-lint: allow` directive on that line or the line above?
 pub fn allows(lines: &[Line], lineno: usize, rule: &str) -> bool {
     let lo = lineno.saturating_sub(1);
     for line in &lines[lo..=lineno.min(lines.len() - 1)] {
@@ -260,20 +262,38 @@ pub fn allows(lines: &[Line], lineno: usize, rule: &str) -> bool {
     false
 }
 
-/// Does 0-based line `idx` carry a `Safety:` comment — on the line
-/// itself, or on the contiguous comment block ending directly above it?
-/// A code line directly above counts only via its trailing comment; a
-/// blank line breaks the block (the justification must visibly attach to
-/// the `unsafe` it covers).
-pub fn has_safety_doc(lines: &[Line], idx: usize) -> bool {
-    if lines[idx].comment.contains("Safety:") {
+/// Does `comment` contain `marker` *as a justification marker* — i.e. not
+/// immediately followed by another `:`? The guard matters for markers
+/// ending in a colon: a comment that merely *mentions*
+/// `Ordering::Relaxed` contains the substring `Ordering:` but is path
+/// syntax, not a justification.
+fn comment_has_marker(comment: &str, marker: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(k) = comment[start..].find(marker) {
+        let end = start + k + marker.len();
+        if !comment[end..].starts_with(':') {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// Does 0-based line `idx` carry a `marker` justification comment — on
+/// the line itself, or on the contiguous comment block ending directly
+/// above it? A code line directly above counts only via its trailing
+/// comment; a blank line breaks the block (the justification must
+/// visibly attach to the site it covers). Used with `"Safety:"` for
+/// unsafe blocks and `"Ordering:"` for atomic memory orderings.
+pub fn has_marker_doc(lines: &[Line], idx: usize, marker: &str) -> bool {
+    if comment_has_marker(&lines[idx].comment, marker) {
         return true;
     }
     let mut j = idx;
     while j > 0 {
         j -= 1;
         let l = &lines[j];
-        if l.comment.contains("Safety:") {
+        if comment_has_marker(&l.comment, marker) {
             return true;
         }
         if !l.code.trim().is_empty() {
@@ -284,6 +304,11 @@ pub fn has_safety_doc(lines: &[Line], idx: usize) -> bool {
         }
     }
     false
+}
+
+/// `has_marker_doc` specialized to the `// Safety:` discipline.
+pub fn has_safety_doc(lines: &[Line], idx: usize) -> bool {
+    has_marker_doc(lines, idx, "Safety:")
 }
 
 /// Positions (char indices) where `pat` occurs in `line` with identifier
@@ -407,6 +432,25 @@ mod tests {
         assert!(!has_safety_doc(&lines, 8), "blank line breaks the block");
         assert!(has_safety_doc(&lines, 10), "trailing comment on code line above");
         assert!(!has_safety_doc(&lines, 11), "undocumented");
+    }
+
+    #[test]
+    fn marker_doc_rejects_path_syntax() {
+        // A comment *mentioning* Ordering::Relaxed contains "Ordering:"
+        // as a substring but is path syntax, not a justification.
+        let lines = scrub(
+            "// uses Ordering::Relaxed here\n\
+             x.store(1, Ordering::Relaxed);\n\
+             // Ordering: counter, no other memory depends on it\n\
+             y.store(1, Ordering::Relaxed);\n\
+             z.store(1, Ordering::Relaxed); // Ordering: same-line form\n\
+             // mentions Ordering::Relaxed but then — Ordering: justified\n\
+             w.store(1, Ordering::Relaxed);",
+        );
+        assert!(!has_marker_doc(&lines, 1, "Ordering:"), "path mention is not a doc");
+        assert!(has_marker_doc(&lines, 3, "Ordering:"), "line above");
+        assert!(has_marker_doc(&lines, 4, "Ordering:"), "same line");
+        assert!(has_marker_doc(&lines, 6, "Ordering:"), "marker after a path mention");
     }
 
     #[test]

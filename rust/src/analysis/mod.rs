@@ -1,15 +1,24 @@
 //! `pallas-lint`: repo-native static analysis.
 //!
-//! A zero-dependency lexical linter enforcing seven invariants that clippy
-//! cannot express (see `rules`): wall-clock leakage into virtual-clock
-//! code, unordered iteration, `PassRecord` lane-partition drift, unchecked
-//! numeric casts in accounting paths, panic policy in library hot paths,
-//! float equality, and undocumented `unsafe` use sites. Pre-existing
-//! violations live in a committed
+//! A zero-dependency linter enforcing eleven invariants that clippy
+//! cannot express (see `rules`). Seven are line-lexical: wall-clock
+//! leakage into virtual-clock code, unordered iteration, `PassRecord`
+//! lane-partition drift, unchecked numeric casts in accounting paths,
+//! panic policy in library hot paths, float equality, and undocumented
+//! `unsafe` use sites. Four run on a token stream (see `tokens`):
+//! undocumented relaxed atomic orderings, iteration-order hazards,
+//! f32→f64 precision laundering, and `thread::spawn` outside the
+//! blessed seams. Pre-existing violations live in a committed
 //! per-file-per-rule ratchet baseline (`lint-baseline.json`, see
 //! `baseline`): `pallas-lint --check` fails only when a count increases
 //! (or the baseline goes stale), so new code is held to the standard
-//! immediately while old debt burns down monotonically.
+//! immediately while old debt burns down monotonically. The baseline is
+//! empty as of the v2 burn-down; `--check --deny-baseline` keeps it that
+//! way.
+//!
+//! An allow directive naming an unknown rule is a hard error, not a
+//! silent no-op — a typo'd `pallas-lint: allow` directive would
+//! otherwise un-suppress nothing today and shadow a real rule tomorrow.
 //!
 //! Run it from the crate root:
 //!
@@ -22,6 +31,7 @@
 pub mod baseline;
 pub mod lexer;
 pub mod rules;
+pub mod tokens;
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -79,10 +89,43 @@ pub fn rel_path(root: &Path, file: &Path) -> String {
     rel.to_string_lossy().replace('\\', "/")
 }
 
+/// Reject allow directives naming unknown rules: a typo would otherwise
+/// suppress nothing silently and shadow a future rule of that name.
+fn validate_allows(rel: &str, lines: &[lexer::Line]) -> io::Result<()> {
+    const PREFIX: &str = "pallas-lint: allow(";
+    for (idx, line) in lines.iter().enumerate() {
+        let comment = &line.comment;
+        let mut start = 0usize;
+        while let Some(k) = comment[start..].find(PREFIX) {
+            let names_start = start + k + PREFIX.len();
+            let rest = &comment[names_start..];
+            let Some(close) = rest.find(')') else {
+                break;
+            };
+            for name in rest[..close].split(',') {
+                let name = name.trim();
+                if Rule::from_name(name).is_none() {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!(
+                            "{rel}:{}: unknown rule '{name}' in allow directive",
+                            idx + 1
+                        ),
+                    ));
+                }
+            }
+            start = names_start + close;
+        }
+    }
+    Ok(())
+}
+
 /// Scan one file's source text, applying every rule in its scope and
-/// filtering out violations suppressed by allow directives.
-pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
+/// filtering out violations suppressed by allow directives. Errors if an
+/// allow directive names an unknown rule.
+pub fn scan_source(rel: &str, src: &str) -> io::Result<Vec<Violation>> {
     let lines = lexer::scrub(src);
+    validate_allows(rel, &lines)?;
     let in_test = lexer::test_regions(&lines);
     let mut raw: Vec<(usize, Rule, String)> = Vec::new();
 
@@ -143,7 +186,56 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
         raw.push((idx, Rule::LanePartition, format!("{name} missing from {missing}")));
     }
 
-    raw.into_iter()
+    // Token-stream rules (v2). All four exempt #[cfg(test)] regions:
+    // tests replay recorded traces single-threaded, so ordering, visit
+    // order, and precision there cannot corrupt a shipped artifact.
+    let atomic = rules::in_modules(rel, rules::ATOMIC_MODULES);
+    let nondet = rules::in_modules(rel, rules::NONDET_MODULES);
+    let precision = rules::in_modules(rel, rules::PRECISION_MODULES);
+    let spawn_scope = rel.starts_with("src/");
+    if atomic || nondet || precision || spawn_scope {
+        let toks = tokens::tokenize(&lines);
+        if atomic {
+            for (idx, variant) in rules::atomic_ordering_sites(&toks) {
+                if !in_test[idx] && !lexer::has_marker_doc(&lines, idx, "Ordering:") {
+                    raw.push((
+                        idx,
+                        Rule::AtomicOrdering,
+                        format!("Ordering::{variant} without // Ordering:"),
+                    ));
+                }
+            }
+        }
+        if nondet {
+            for (idx, detail) in rules::nondet_order_sites(&toks) {
+                if !in_test[idx] {
+                    raw.push((idx, Rule::NondeterministicOrder, detail));
+                }
+            }
+        }
+        if precision {
+            for (idx, detail) in rules::precision_sites(&toks) {
+                if !in_test[idx] {
+                    raw.push((idx, Rule::PrecisionLaundering, detail));
+                }
+            }
+        }
+        if spawn_scope {
+            for idx in rules::unblessed_spawn_sites(&toks) {
+                if !in_test[idx] {
+                    raw.push((
+                        idx,
+                        Rule::ThreadSpawnPolicy,
+                        "thread::spawn outside PlannerWorker/ThreadPool".to_string(),
+                    ));
+                }
+            }
+        }
+    }
+
+    raw.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    Ok(raw
+        .into_iter()
         .filter(|&(idx, rule, _)| !lexer::allows(&lines, idx, rule.name()))
         .map(|(idx, rule, detail)| Violation {
             file: rel.to_string(),
@@ -151,7 +243,7 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Violation> {
             rule,
             detail,
         })
-        .collect()
+        .collect())
 }
 
 /// Scan the whole crate tree under `root`.
@@ -160,9 +252,15 @@ pub fn scan_root(root: &Path) -> io::Result<Vec<Violation>> {
     for file in collect_files(root)? {
         let src = fs::read_to_string(&file)?;
         let rel = rel_path(root, &file);
-        all.extend(scan_source(&rel, &src));
+        all.extend(scan_source(&rel, &src)?);
     }
     Ok(all)
+}
+
+/// Canonicalize a lint root so baseline keys agree between invocations
+/// from different working directories (and across `..`-laden paths).
+pub fn canonical_root(root: &Path) -> io::Result<PathBuf> {
+    fs::canonicalize(root)
 }
 
 /// Aggregate violations into the per-file-per-rule ratchet counts.

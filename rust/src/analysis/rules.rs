@@ -1,10 +1,16 @@
-//! The seven repo-specific lint rules and their detection logic.
+//! The eleven repo-specific lint rules and their detection logic.
 //!
 //! Each rule encodes an invariant the ROADMAP's engine/simulator/cost-model
 //! agreement rests on; see the README's "Static analysis & invariants"
-//! section for the rationale and the per-rule scopes.
+//! section for the rationale and the per-rule scopes. The first seven
+//! rules are line-lexical (they match scrubbed line text); the v2 rules
+//! (atomic-ordering, nondeterministic-order, precision-laundering,
+//! thread-spawn-policy) run on the token stream from [`super::tokens`]
+//! because they need adjacency, call-argument spans, or `fn`/`impl`
+//! membership.
 
 use super::lexer::{ident_occurrences, is_ident_char, Line};
+use super::tokens::{fn_spans, impl_spans, matching_paren, TokKind, Token};
 
 /// A lint rule. Names are the stable identifiers used in allow
 /// directives and the ratchet baseline.
@@ -28,10 +34,30 @@ pub enum Rule {
     /// An `unsafe` block or `unsafe impl` in `src/` without a
     /// `// Safety:` comment on it or on the comment block directly above.
     UndocumentedUnsafe,
+    /// A relaxed-family atomic ordering (`Ordering::Relaxed` / `Acquire`
+    /// / `Release` / `AcqRel`) in concurrency modules without an
+    /// `// Ordering:` justification comment — the same discipline
+    /// `// Safety:` enforces for unsafe blocks. `SeqCst` is exempt: it
+    /// is the conservative default and needs no argument.
+    AtomicOrdering,
+    /// Iteration-order hazards in deterministic modules:
+    /// `Vec::swap_remove` (reorders the tail), float-keyed
+    /// `sort_unstable_by`/`_key` (unstable among ties), and `retain`
+    /// closures with side effects (visit order becomes observable).
+    NondeterministicOrder,
+    /// f32 precision laundered into f64 in accounting modules: an f32
+    /// value (parameter, `let` binding, or direct `as f32` result)
+    /// widened to f64 reads as full precision downstream but carries
+    /// only 24 bits; float literals truncated via `as f32` likewise.
+    PrecisionLaundering,
+    /// `std::thread::spawn` outside the blessed seams (`PlannerWorker`,
+    /// `ThreadPool`) — ad-hoc threads bypass the join/panic-propagation
+    /// discipline those impls provide.
+    ThreadSpawnPolicy,
 }
 
 impl Rule {
-    pub const ALL: [Rule; 7] = [
+    pub const ALL: [Rule; 11] = [
         Rule::WallClockInSim,
         Rule::UnorderedIteration,
         Rule::LanePartition,
@@ -39,6 +65,10 @@ impl Rule {
         Rule::PanicPolicy,
         Rule::FloatEq,
         Rule::UndocumentedUnsafe,
+        Rule::AtomicOrdering,
+        Rule::NondeterministicOrder,
+        Rule::PrecisionLaundering,
+        Rule::ThreadSpawnPolicy,
     ];
 
     pub fn name(self) -> &'static str {
@@ -50,6 +80,10 @@ impl Rule {
             Rule::PanicPolicy => "panic-policy",
             Rule::FloatEq => "float-eq",
             Rule::UndocumentedUnsafe => "undocumented-unsafe",
+            Rule::AtomicOrdering => "atomic-ordering",
+            Rule::NondeterministicOrder => "nondeterministic-order",
+            Rule::PrecisionLaundering => "precision-laundering",
+            Rule::ThreadSpawnPolicy => "thread-spawn-policy",
         }
     }
 
@@ -78,6 +112,19 @@ pub const DET_MODULES: &[&str] =
 pub const CAST_MODULES: &[&str] = &["metrics", "perfmodel", "simhw", "sched", "kvcache"];
 /// Library hot paths (panic-policy scope).
 pub const PANIC_MODULES: &[&str] = &["engine", "sched", "kvcache", "transfer"];
+/// Concurrency modules (atomic-ordering scope): every relaxed-family
+/// ordering here must argue why it is sound.
+pub const ATOMIC_MODULES: &[&str] = &["cpuattn", "engine", "transfer"];
+/// Deterministic-order modules (nondeterministic-order scope): replay
+/// and golden traces depend on container visit order here.
+pub const NONDET_MODULES: &[&str] = &["sched", "simhw", "kvcache", "workload"];
+/// Accounting modules where f32→f64 laundering corrupts cost arithmetic
+/// (precision-laundering scope).
+pub const PRECISION_MODULES: &[&str] = &["perfmodel", "metrics"];
+/// Impl blocks allowed to call `std::thread::spawn`
+/// (thread-spawn-policy): the planner worker and the CPU-attention
+/// thread pool own thread lifetimes and panic propagation.
+pub const BLESSED_SPAWN_IMPLS: &[&str] = &["PlannerWorker", "ThreadPool"];
 
 /// Does `rel` (crate-relative path) live in one of `modules` under src/?
 pub fn in_modules(rel: &str, modules: &[&str]) -> bool {
@@ -365,10 +412,219 @@ pub fn lane_partition(lines: &[Line], src: &str) -> Vec<(usize, String, &'static
     out
 }
 
+// ---------------------------------------------------------------------------
+// atomic-ordering (token stream)
+// ---------------------------------------------------------------------------
+
+/// (0-based line, variant name) of every relaxed-family atomic ordering
+/// use: the token triple `Ordering` `::` `<variant>`. `SeqCst` is exempt.
+pub fn atomic_ordering_sites(tokens: &[Token]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if t.ident("Ordering")
+            && tokens.get(i + 1).is_some_and(|t| t.punct("::"))
+            && tokens.get(i + 2).is_some_and(|t| {
+                t.kind == TokKind::Ident
+                    && matches!(t.text.as_str(), "Relaxed" | "Acquire" | "Release" | "AcqRel")
+            })
+        {
+            out.push((t.line, tokens[i + 2].text.clone()));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// nondeterministic-order (token stream)
+// ---------------------------------------------------------------------------
+
+/// The argument token range of a call whose `(` is expected at
+/// `open_idx`, exclusive of both parens. `None` if the next token is not
+/// an open paren (e.g. the method name is a path, not a call).
+fn call_args(tokens: &[Token], open_idx: usize) -> Option<std::ops::Range<usize>> {
+    if !tokens.get(open_idx)?.punct("(") {
+        return None;
+    }
+    let close = matching_paren(tokens, open_idx)?;
+    Some(open_idx + 1..close)
+}
+
+/// Idents in a sort comparator that betray a float key.
+fn float_keyed(tokens: &[Token], args: std::ops::Range<usize>) -> bool {
+    tokens[args].iter().any(|t| {
+        t.kind == TokKind::Float
+            || (t.kind == TokKind::Ident
+                && matches!(t.text.as_str(), "partial_cmp" | "total_cmp" | "f32" | "f64"))
+    })
+}
+
+/// Assignment operators or mutating calls inside a `retain` closure —
+/// side effects make the (unspecified) visit order observable.
+fn retain_side_effects(tokens: &[Token], args: std::ops::Range<usize>) -> bool {
+    tokens[args].iter().any(|t| match t.kind {
+        TokKind::Punct => matches!(t.text.as_str(), "=" | "+=" | "-=" | "*=" | "/=" | "%="),
+        TokKind::Ident => matches!(
+            t.text.as_str(),
+            "push" | "insert" | "remove" | "swap_remove" | "pop" | "send" | "extend"
+        ),
+        _ => false,
+    })
+}
+
+/// (0-based line, detail) of iteration-order hazards: `swap_remove`
+/// anywhere, float-keyed `sort_unstable_by`/`_key`, and `retain`
+/// closures with side effects. Int-keyed unstable sorts and pure
+/// `retain` predicates are fine (equal keys are interchangeable; visit
+/// order is unobservable).
+pub fn nondet_order_sites(tokens: &[Token]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if !t.punct(".") {
+            continue;
+        }
+        let Some(m) = tokens.get(i + 1) else { continue };
+        if m.kind != TokKind::Ident {
+            continue;
+        }
+        match m.text.as_str() {
+            "swap_remove" => out.push((m.line, "swap_remove reorders the tail".to_string())),
+            "sort_unstable_by" | "sort_unstable_by_key" => {
+                if let Some(args) = call_args(tokens, i + 2) {
+                    if float_keyed(tokens, args) {
+                        out.push((m.line, format!("float-keyed {} is unstable among ties", m.text)));
+                    }
+                }
+            }
+            "retain" => {
+                if let Some(args) = call_args(tokens, i + 2) {
+                    if retain_side_effects(tokens, args) {
+                        out.push((m.line, "retain closure with side effects".to_string()));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// precision-laundering (token stream)
+// ---------------------------------------------------------------------------
+
+/// (0-based line, detail) of f32 precision laundered into f64, tracked
+/// across `let` bindings within each `fn` span:
+/// - an f32-typed parameter or `let` binding later cast `as f64`;
+/// - a direct `as f32 as f64` double cast;
+/// - a float literal truncated via `as f32`.
+pub fn precision_sites(tokens: &[Token]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for span in fn_spans(tokens) {
+        if span.open_tok.is_none() {
+            continue;
+        }
+        // Taint set: (name, token index after which uses count).
+        let mut tainted: Vec<(String, usize)> = Vec::new();
+        // f32 parameters: `name : [&|mut]* f32` in the signature.
+        for j in span.signature() {
+            if !tokens[j].ident("f32") {
+                continue;
+            }
+            let mut k = j;
+            while k > span.fn_tok && (tokens[k - 1].punct("&") || tokens[k - 1].ident("mut")) {
+                k -= 1;
+            }
+            if k >= span.fn_tok + 2
+                && tokens[k - 1].punct(":")
+                && tokens[k - 2].kind == TokKind::Ident
+            {
+                tainted.push((tokens[k - 2].text.clone(), j));
+            }
+        }
+        let body = span.body();
+        // f32 `let` bindings: any `f32` mention in the statement (type
+        // annotation or `as f32` in the initializer) taints the name.
+        for j in body.clone() {
+            if !tokens[j].ident("let") {
+                continue;
+            }
+            let mut k = j + 1;
+            if tokens.get(k).is_some_and(|t| t.ident("mut")) {
+                k += 1;
+            }
+            let Some(nm) = tokens.get(k).filter(|t| t.kind == TokKind::Ident) else {
+                continue;
+            };
+            let mut e = k;
+            while e < body.end && !tokens[e].punct(";") {
+                e += 1;
+            }
+            if (k + 1..e).any(|x| tokens[x].ident("f32")) {
+                tainted.push((nm.text.clone(), e));
+            }
+        }
+        for j in body.clone() {
+            if tokens[j].ident("as") && tokens.get(j + 1).is_some_and(|t| t.ident("f64")) {
+                let p = &tokens[j - 1];
+                if p.ident("f32") {
+                    out.push((tokens[j].line, "f32 value widened straight to f64".to_string()));
+                } else if p.kind == TokKind::Ident
+                    && tainted.iter().any(|(n, bind)| *n == p.text && *bind < j)
+                {
+                    out.push((tokens[j].line, format!("f32 `{}` widened to f64", p.text)));
+                }
+            }
+            if tokens[j].kind == TokKind::Float
+                && tokens.get(j + 1).is_some_and(|t| t.ident("as"))
+                && tokens.get(j + 2).is_some_and(|t| t.ident("f32"))
+            {
+                out.push((
+                    tokens[j].line,
+                    format!("float literal `{}` truncated to f32", tokens[j].text),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// thread-spawn-policy (token stream)
+// ---------------------------------------------------------------------------
+
+/// 0-based lines of `thread` `::` `spawn` call sites that are not inside
+/// an `impl` block mentioning one of [`BLESSED_SPAWN_IMPLS`]. Scoped
+/// `s.spawn(...)` (`std::thread::scope`) is deliberately not matched:
+/// scope guarantees the join.
+pub fn unblessed_spawn_sites(tokens: &[Token]) -> Vec<usize> {
+    let impls = impl_spans(tokens);
+    let mut out = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if t.ident("thread")
+            && tokens.get(i + 1).is_some_and(|t| t.punct("::"))
+            && tokens.get(i + 2).is_some_and(|t| t.ident("spawn"))
+        {
+            let blessed = impls.iter().any(|s| {
+                s.tok_range.contains(&i)
+                    && BLESSED_SPAWN_IMPLS.iter().any(|b| s.mentions(b))
+            });
+            if !blessed {
+                out.push(t.line);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::analysis::lexer::scrub;
+    use crate::analysis::tokens::tokenize;
+
+    fn toks(src: &str) -> Vec<Token> {
+        tokenize(&scrub(src))
+    }
 
     #[test]
     fn rule_names_round_trip() {
@@ -497,5 +753,145 @@ impl PassRecord {
     fn no_passrecord_no_findings() {
         assert!(lanes("pub struct Other { pub t_time: f64 }").is_empty());
         assert!(lanes("pub struct PassRecordX { pub a_time: f64 }").is_empty());
+    }
+
+    #[test]
+    fn atomic_ordering_detection() {
+        let v = atomic_ordering_sites(&toks(
+            "x.store(1, Ordering::Relaxed);\n\
+             x.load(Ordering::Acquire);\n\
+             x.store(2, Ordering::Release);\n\
+             x.fetch_sub(1, Ordering::AcqRel);\n\
+             x.load(Ordering::SeqCst);\n\
+             use std::sync::atomic::Ordering;",
+        ));
+        let variants: Vec<&str> = v.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(variants, vec!["Relaxed", "Acquire", "Release", "AcqRel"]);
+        assert_eq!(v[0].0, 0);
+        assert_eq!(v[3].0, 3);
+    }
+
+    #[test]
+    fn nondet_swap_remove() {
+        assert_eq!(nondet_order_sites(&toks("live.swap_remove(i);")).len(), 1);
+        assert!(nondet_order_sites(&toks("live.remove(i);")).is_empty());
+        // Path form (`Vec::swap_remove(&mut v, i)`) has no leading dot —
+        // out of pattern, and the repo never writes it.
+        assert!(nondet_order_sites(&toks("let f = Vec::swap_remove;")).is_empty());
+    }
+
+    #[test]
+    fn nondet_float_sorts() {
+        assert_eq!(
+            nondet_order_sites(&toks("xs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());"))
+                .len(),
+            1
+        );
+        assert_eq!(nondet_order_sites(&toks("xs.sort_unstable_by(f64::total_cmp);")).len(), 1);
+        assert_eq!(nondet_order_sites(&toks("xs.sort_unstable_by_key(|x| x.cost as f64);")).len(), 1);
+        assert!(
+            nondet_order_sites(&toks("xs.sort_unstable_by_key(|x| x.id);")).is_empty(),
+            "int keys: equal keys are interchangeable"
+        );
+        assert!(nondet_order_sites(&toks("xs.sort_unstable();")).is_empty());
+    }
+
+    #[test]
+    fn nondet_retain_side_effects() {
+        assert_eq!(
+            nondet_order_sites(&toks("xs.retain(|x| { dropped += 1; x.live })")).len(),
+            1
+        );
+        assert_eq!(
+            nondet_order_sites(&toks("xs.retain(|x| { log.push(x.id); x.live })")).len(),
+            1
+        );
+        assert!(
+            nondet_order_sites(&toks("xs.retain(|x| x.live && x.len > 0);")).is_empty(),
+            "pure predicate: visit order unobservable"
+        );
+        assert!(
+            nondet_order_sites(&toks("xs.retain(|x| x.id == target);")).is_empty(),
+            "glued == is not an assignment"
+        );
+    }
+
+    #[test]
+    fn precision_tainted_let_binding() {
+        let v = precision_sites(&toks(
+            "fn f(y: f64) -> f64 {\n\
+             let x = y as f32;\n\
+             let clean = y * 2.0;\n\
+             (x as f64) + clean\n\
+             }",
+        ));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].0, 3);
+        assert!(v[0].1.contains("`x`"));
+    }
+
+    #[test]
+    fn precision_tainted_param_and_double_cast() {
+        let v = precision_sites(&toks(
+            "fn g(w: f32, n: usize) -> f64 {\n\
+             w as f64 * n as f64\n\
+             }",
+        ));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].1.contains("`w`"));
+        let v = precision_sites(&toks("fn h(y: f64) -> f64 { y as f32 as f64 }"));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].1.contains("straight"));
+    }
+
+    #[test]
+    fn precision_literal_truncation() {
+        let v = precision_sites(&toks("fn k() -> f32 { 0.1 as f32 }"));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].1.contains("0.1"));
+        assert!(
+            precision_sites(&toks("fn k() -> f32 { 0.5f32 }")).is_empty(),
+            "a typed literal is not a cast"
+        );
+    }
+
+    #[test]
+    fn precision_taint_is_per_fn_and_ordered() {
+        // The taint does not leak across fn spans, and a use *before*
+        // the binding (shadowing in a later statement) does not fire.
+        let v = precision_sites(&toks(
+            "fn a(y: f64) { let x = y as f32; }\n\
+             fn b(x: f64) -> f64 { x as f64 }",
+        ));
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn spawn_blessing() {
+        let bad = unblessed_spawn_sites(&toks(
+            "fn run() { std::thread::spawn(move || work()); }",
+        ));
+        assert_eq!(bad, vec![0]);
+        let ok = unblessed_spawn_sites(&toks(
+            "impl PlannerWorker {\n\
+             fn spawn(self) { std::thread::spawn(move || self.run()); }\n\
+             }\n\
+             impl ThreadPool {\n\
+             pub fn new(n: usize) { std::thread::spawn(move || loop {}); }\n\
+             }",
+        ));
+        assert!(ok.is_empty(), "{ok:?}");
+        // An unrelated impl does not bless.
+        let bad = unblessed_spawn_sites(&toks(
+            "impl DataMover {\n\
+             fn start(&self) { std::thread::spawn(move || pump()); }\n\
+             }",
+        ));
+        assert_eq!(bad, vec![1]);
+        // Scoped spawns are out of pattern by design.
+        let ok = unblessed_spawn_sites(&toks(
+            "fn run() { std::thread::scope(|s| { s.spawn(|| work()); }); }",
+        ));
+        assert!(ok.is_empty(), "{ok:?}");
     }
 }

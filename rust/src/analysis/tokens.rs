@@ -1,0 +1,550 @@
+//! Token-stream layer over the scrubbed source (`pallas-lint` v2).
+//!
+//! The line-lexical rules of v1 match substrings; the concurrency and
+//! dataflow rules added in v2 (atomic-ordering, nondeterministic-order,
+//! precision-laundering, thread-spawn-policy) need *structure*: which
+//! tokens are adjacent, how deep in braces a site sits, which `fn` or
+//! `impl` body it belongs to. This module tokenizes the already-scrubbed
+//! code channel (strings, chars, and comments are spaces by the time we
+//! run, so every token here is real code) into idents, integer/float
+//! literals, and punctuation, each stamped with its source line and brace
+//! depth, plus brace-matched `fn`/`impl` span extraction on top.
+//!
+//! Deliberate simplifications, safe because the scrubber runs first and
+//! the rules only pattern-match short token windows:
+//! - lifetimes surface as plain idents (the scrubber blanks the `'`);
+//! - raw identifiers (`r#type`) are normalized to the bare name;
+//! - shift operators are left as single `<` / `>` tokens so nested
+//!   generics (`Vec<Vec<u8>>`) never glue into a phantom `>>`.
+
+use super::lexer::{is_ident_char, Line};
+
+/// Token classes the rules match on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`let`, `as`, `fn` are idents here).
+    Ident,
+    /// Integer literal, including hex/octal/binary and suffixed forms.
+    Int,
+    /// Float literal (`0.5`, `1e-9`, `2.5f64`, `7f32`).
+    Float,
+    /// Punctuation; common two/three-char operators arrive glued
+    /// (`::`, `->`, `=>`, `==`, `!=`, `<=`, `>=`, `&&`, `||`, `+=`,
+    /// `-=`, `*=`, `/=`, `%=`, `..`, `..=`).
+    Punct,
+}
+
+/// One token of scrubbed code.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 0-based source line the token starts on.
+    pub line: usize,
+    /// Brace depth: a `{` and its matching `}` carry the depth *outside*
+    /// their block; tokens between them sit one deeper.
+    pub depth: i64,
+}
+
+impl Token {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+
+    pub fn ident(&self, text: &str) -> bool {
+        self.is(TokKind::Ident, text)
+    }
+
+    pub fn punct(&self, text: &str) -> bool {
+        self.is(TokKind::Punct, text)
+    }
+}
+
+/// Multi-char operators glued into one `Punct` token, longest first so
+/// `..=` wins over `..` and `..` over `.`.
+const GLUED: &[&str] = &[
+    "..=", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=", "*=", "/=", "%=",
+    "..",
+];
+
+/// Tokenize scrubbed lines into a flat stream with line numbers and
+/// brace depths.
+pub fn tokenize(lines: &[Line]) -> Vec<Token> {
+    let mut out: Vec<Token> = Vec::new();
+    let mut depth: i64 = 0;
+    for (lineno, line) in lines.iter().enumerate() {
+        let chars: Vec<char> = line.code.chars().collect();
+        let n = chars.len();
+        let mut k = 0usize;
+        while k < n {
+            let c = chars[k];
+            if c == ' ' || c == '\t' {
+                k += 1;
+                continue;
+            }
+            if c.is_ascii_alphabetic() || c == '_' {
+                let start = k;
+                while k < n && is_ident_char(chars[k]) {
+                    k += 1;
+                }
+                let mut text: String = chars[start..k].iter().collect();
+                // Raw identifier: `r#name` — normalize to the bare name.
+                if text == "r" && k + 1 < n && chars[k] == '#' && is_ident_char(chars[k + 1]) {
+                    k += 1; // '#'
+                    let rs = k;
+                    while k < n && is_ident_char(chars[k]) {
+                        k += 1;
+                    }
+                    text = chars[rs..k].iter().collect();
+                }
+                out.push(Token { kind: TokKind::Ident, text, line: lineno, depth });
+                continue;
+            }
+            if c.is_ascii_digit() {
+                let start = k;
+                let hex = c == '0'
+                    && k + 1 < n
+                    && matches!(chars[k + 1], 'x' | 'X' | 'b' | 'o');
+                let mut has_dot = false;
+                let mut has_exp = false;
+                k += 1;
+                while k < n {
+                    let ch = chars[k];
+                    if ch.is_ascii_alphanumeric() || ch == '_' {
+                        if !hex && matches!(ch, 'e' | 'E') {
+                            // An exponent only if something numeric follows;
+                            // `123usize` must stay an integer.
+                            let nx = if k + 1 < n { chars[k + 1] } else { '\0' };
+                            if nx.is_ascii_digit() || nx == '+' || nx == '-' {
+                                has_exp = true;
+                            }
+                        }
+                        k += 1;
+                    } else if ch == '.'
+                        && !hex
+                        && !has_dot
+                        && !has_exp
+                        && k + 1 < n
+                        && chars[k + 1].is_ascii_digit()
+                    {
+                        // Decimal point — but `0..n` and `7.max(0)` stop here.
+                        has_dot = true;
+                        k += 1;
+                    } else if matches!(ch, '+' | '-')
+                        && has_exp
+                        && matches!(chars[k - 1], 'e' | 'E')
+                    {
+                        k += 1;
+                    } else {
+                        break;
+                    }
+                }
+                let text: String = chars[start..k].iter().collect();
+                let float = !hex
+                    && (has_dot || has_exp || text.ends_with("f32") || text.ends_with("f64"));
+                let kind = if float { TokKind::Float } else { TokKind::Int };
+                out.push(Token { kind, text, line: lineno, depth });
+                continue;
+            }
+            // Punctuation: glued operators first.
+            let mut glued = None;
+            for op in GLUED {
+                let oc: Vec<char> = op.chars().collect();
+                if k + oc.len() <= n && chars[k..k + oc.len()] == oc[..] {
+                    glued = Some(*op);
+                    break;
+                }
+            }
+            if let Some(op) = glued {
+                out.push(Token {
+                    kind: TokKind::Punct,
+                    text: op.to_string(),
+                    line: lineno,
+                    depth,
+                });
+                k += op.len();
+                continue;
+            }
+            let d = match c {
+                '{' => {
+                    let d = depth;
+                    depth += 1;
+                    d
+                }
+                '}' => {
+                    depth -= 1;
+                    depth
+                }
+                _ => depth,
+            };
+            out.push(Token { kind: TokKind::Punct, text: c.to_string(), line: lineno, depth: d });
+            k += 1;
+        }
+    }
+    out
+}
+
+/// A brace-matched `fn` span in the token stream.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Token index of the `fn` keyword.
+    pub fn_tok: usize,
+    /// Token index of the body-opening `{`, or `None` for a bodyless
+    /// declaration (trait method signature).
+    pub open_tok: Option<usize>,
+    /// Token index just *past* the span: matching `}` + 1, or past the
+    /// terminating `;` for declarations.
+    pub end_tok: usize,
+    pub start_line: usize,
+    pub end_line: usize,
+}
+
+impl FnSpan {
+    /// Body token range (open brace exclusive, close brace exclusive),
+    /// empty for declarations.
+    pub fn body(&self) -> std::ops::Range<usize> {
+        match self.open_tok {
+            Some(o) => o + 1..self.end_tok.saturating_sub(1),
+            None => 0..0,
+        }
+    }
+
+    /// Signature token range: `fn` keyword through the token before the
+    /// body brace (or the terminating `;`).
+    pub fn signature(&self) -> std::ops::Range<usize> {
+        self.fn_tok..self.open_tok.unwrap_or(self.end_tok)
+    }
+}
+
+/// A brace-matched `impl` span.
+#[derive(Debug, Clone)]
+pub struct ImplSpan {
+    /// Every ident in the impl header (`impl<T> Foo for Bar<T>` →
+    /// `[T, Foo, Bar, T]`) — enough to ask "is this an impl of X".
+    pub header_idents: Vec<String>,
+    /// Token range covered by the impl, header included, close brace
+    /// included.
+    pub tok_range: std::ops::Range<usize>,
+    pub start_line: usize,
+    pub end_line: usize,
+}
+
+impl ImplSpan {
+    pub fn mentions(&self, name: &str) -> bool {
+        self.header_idents.iter().any(|h| h == name)
+    }
+}
+
+/// Index of the `}` matching the `{` at `open` (tokens carry their
+/// depth, so the match is the next `}` at the same depth).
+fn matching_brace(tokens: &[Token], open: usize) -> Option<usize> {
+    let d = tokens[open].depth;
+    tokens[open + 1..]
+        .iter()
+        .position(|t| t.punct("}") && t.depth == d)
+        .map(|off| open + 1 + off)
+}
+
+/// Index of the `)` matching the `(` at `open`.
+pub fn matching_paren(tokens: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (off, t) in tokens[open..].iter().enumerate() {
+        if t.punct("(") {
+            depth += 1;
+        } else if t.punct(")") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(open + off);
+            }
+        }
+    }
+    None
+}
+
+/// All named `fn` items (free functions, methods, trait declarations).
+/// `fn` *types* (`fn(usize) -> f64`) have no name ident and are skipped.
+pub fn fn_spans(tokens: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if !t.ident("fn") {
+            continue;
+        }
+        let Some(name_tok) = tokens.get(i + 1) else {
+            continue;
+        };
+        if name_tok.kind != TokKind::Ident {
+            continue;
+        }
+        // First `{` opens the body; a `;` at the fn's own depth first
+        // means a bodyless declaration. Braces nested in const-generic
+        // defaults are rare enough to ignore (the scrubbed repo has none).
+        let mut open = None;
+        let mut end = None;
+        for (off, tk) in tokens[i + 1..].iter().enumerate() {
+            let j = i + 1 + off;
+            if tk.punct("{") {
+                open = Some(j);
+                break;
+            }
+            if tk.punct(";") && tk.depth == t.depth {
+                end = Some(j + 1);
+                break;
+            }
+        }
+        let (open_tok, end_tok) = match open {
+            Some(o) => match matching_brace(tokens, o) {
+                Some(c) => (Some(o), c + 1),
+                None => (Some(o), tokens.len()),
+            },
+            None => match end {
+                Some(e) => (None, e),
+                None => continue,
+            },
+        };
+        out.push(FnSpan {
+            name: name_tok.text.clone(),
+            fn_tok: i,
+            open_tok,
+            end_tok,
+            start_line: t.line,
+            end_line: tokens
+                .get(end_tok.saturating_sub(1))
+                .map(|tk| tk.line)
+                .unwrap_or(t.line),
+        });
+    }
+    out
+}
+
+/// All `impl` blocks with their header idents.
+pub fn impl_spans(tokens: &[Token]) -> Vec<ImplSpan> {
+    let mut out = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if !t.ident("impl") {
+            continue;
+        }
+        let mut open = None;
+        let mut header_idents = Vec::new();
+        for (off, tk) in tokens[i + 1..].iter().enumerate() {
+            let j = i + 1 + off;
+            if tk.punct("{") {
+                open = Some(j);
+                break;
+            }
+            if tk.kind == TokKind::Ident {
+                header_idents.push(tk.text.clone());
+            }
+        }
+        let Some(o) = open else { continue };
+        let close = matching_brace(tokens, o).unwrap_or(tokens.len().saturating_sub(1));
+        out.push(ImplSpan {
+            header_idents,
+            tok_range: i..close + 1,
+            start_line: t.line,
+            end_line: tokens[close].line,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::scrub;
+
+    fn toks(src: &str) -> Vec<Token> {
+        tokenize(&scrub(src))
+    }
+
+    fn texts(src: &str) -> Vec<String> {
+        toks(src).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_numbers_and_puncts() {
+        let t = toks("let x = n_real + 2;");
+        let kinds: Vec<TokKind> = t.iter().map(|t| t.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                TokKind::Ident,
+                TokKind::Ident,
+                TokKind::Punct,
+                TokKind::Ident,
+                TokKind::Punct,
+                TokKind::Int,
+                TokKind::Punct
+            ]
+        );
+        assert_eq!(t[1].text, "x");
+        assert_eq!(t[5].text, "2");
+    }
+
+    #[test]
+    fn float_vs_int_classification() {
+        for (src, kind) in [
+            ("0.5", TokKind::Float),
+            ("1e-9", TokKind::Float),
+            ("1E+4", TokKind::Float),
+            ("2.5f64", TokKind::Float),
+            ("7f32", TokKind::Float),
+            ("1_000.0", TokKind::Float),
+            ("42", TokKind::Int),
+            ("123usize", TokKind::Int),
+            ("1_000u64", TokKind::Int),
+            ("0xFE", TokKind::Int),
+            ("0b1010", TokKind::Int),
+        ] {
+            let t = toks(src);
+            assert_eq!(t.len(), 1, "{src}: {t:?}");
+            assert_eq!(t[0].kind, kind, "{src}");
+            assert_eq!(t[0].text, src);
+        }
+    }
+
+    #[test]
+    fn ranges_and_method_calls_on_ints_split() {
+        assert_eq!(texts("0..n"), vec!["0", "..", "n"]);
+        assert_eq!(texts("0..=7"), vec!["0", "..=", "7"]);
+        assert_eq!(texts("7.max(0)"), vec!["7", ".", "max", "(", "0", ")"]);
+        // Tuple field access: the field index is its own int token.
+        assert_eq!(texts("a.0.total_cmp"), vec!["a", ".", "0", ".", "total_cmp"]);
+    }
+
+    #[test]
+    fn glued_operators() {
+        assert_eq!(texts("a == b != c <= d"), vec!["a", "==", "b", "!=", "c", "<=", "d"]);
+        assert_eq!(texts("x += 1; y -> z => w"), vec!["x", "+=", "1", ";", "y", "->", "z", "=>", "w"]);
+        assert_eq!(texts("Ordering::Relaxed"), vec!["Ordering", "::", "Relaxed"]);
+    }
+
+    #[test]
+    fn nested_generics_stay_single_angles() {
+        // `Vec<Vec<u8>>` must not glue the closing angles into a shift.
+        assert_eq!(
+            texts("let v: Vec<Vec<u8>> = Vec::new();"),
+            vec!["let", "v", ":", "Vec", "<", "Vec", "<", "u8", ">", ">", "=", "Vec", "::", "new", "(", ")", ";"]
+        );
+    }
+
+    #[test]
+    fn turbofish() {
+        assert_eq!(
+            texts("x.collect::<Vec<f64>>()"),
+            vec!["x", ".", "collect", "::", "<", "Vec", "<", "f64", ">", ">", "(", ")"]
+        );
+    }
+
+    #[test]
+    fn raw_idents_normalize() {
+        assert_eq!(texts("let r#type = r#fn + 1;"), vec!["let", "type", "=", "fn", "+", "1", ";"]);
+        // ...while a plain `r` ident survives (no `#` after it).
+        assert_eq!(texts("let r = 1;"), vec!["let", "r", "=", "1", ";"]);
+    }
+
+    #[test]
+    fn lifetimes_surface_as_idents() {
+        // The scrubber blanks the tick; the tokenizer sees a bare ident.
+        assert_eq!(texts("fn f<'a>(x: &'a str) {}"),
+            vec!["fn", "f", "<", "a", ">", "(", "x", ":", "&", "a", "str", ")", "{", "}"]);
+    }
+
+    #[test]
+    fn brace_depth_across_match_arms() {
+        let src = "\
+fn f(x: u32) -> u32 {
+    match x {
+        0 => { 1 }
+        _ => {
+            let y = { 2 };
+            y
+        }
+    }
+}";
+        let t = toks(src);
+        let depth_of = |text: &str| -> Vec<i64> {
+            t.iter().filter(|tk| tk.text == text).map(|tk| tk.depth).collect()
+        };
+        // fn body brace at 0, match at 1, arm braces at 2, inner block 3.
+        assert_eq!(depth_of("match"), vec![1]);
+        assert_eq!(depth_of("1"), vec![3]);
+        assert_eq!(depth_of("2"), vec![4]);
+        assert_eq!(depth_of("y"), vec![3, 3]);
+        // Every open has its close: final depth returns to 0.
+        let opens = t.iter().filter(|tk| tk.punct("{")).count();
+        let closes = t.iter().filter(|tk| tk.punct("}")).count();
+        assert_eq!(opens, closes);
+        // Matching braces carry equal depth.
+        let open_depths: Vec<i64> =
+            t.iter().filter(|tk| tk.punct("{")).map(|tk| tk.depth).collect();
+        let mut close_depths: Vec<i64> =
+            t.iter().filter(|tk| tk.punct("}")).map(|tk| tk.depth).collect();
+        close_depths.reverse();
+        let mut sorted_open = open_depths.clone();
+        sorted_open.sort_unstable();
+        let mut sorted_close = close_depths;
+        sorted_close.sort_unstable();
+        assert_eq!(sorted_open, sorted_close);
+    }
+
+    #[test]
+    fn fn_spans_brace_matched() {
+        let src = "\
+impl Foo {
+    pub fn a(&self) -> usize {
+        if true { 1 } else { 2 }
+    }
+    fn b();
+}
+fn free() {}";
+        let lines = scrub(src);
+        let t = tokenize(&lines);
+        let spans = fn_spans(&t);
+        let names: Vec<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "free"]);
+        assert_eq!((spans[0].start_line, spans[0].end_line), (1, 3));
+        assert!(spans[1].open_tok.is_none(), "declaration has no body");
+        assert_eq!((spans[2].start_line, spans[2].end_line), (6, 6));
+        // Body range excludes the braces themselves.
+        let body: Vec<&str> =
+            t[spans[2].body()].iter().map(|tk| tk.text.as_str()).collect();
+        assert!(body.is_empty(), "empty body: {body:?}");
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_spans() {
+        let spans = fn_spans(&toks("let f: fn(usize) -> f64 = g;"));
+        assert!(spans.is_empty(), "{spans:?}");
+    }
+
+    #[test]
+    fn impl_spans_capture_header_idents() {
+        let src = "\
+impl<T: Clone> Planner for Pool<T> {
+    fn go(&self) { spawn(); }
+}
+impl Other {
+    fn x() {}
+}";
+        let t = toks(src);
+        let spans = impl_spans(&t);
+        assert_eq!(spans.len(), 2);
+        assert!(spans[0].mentions("Planner") && spans[0].mentions("Pool"));
+        assert!(!spans[0].mentions("Other"));
+        assert_eq!((spans[0].start_line, spans[0].end_line), (0, 2));
+        assert!(spans[1].mentions("Other"));
+        // The spawn token is covered by span 0, not span 1.
+        let spawn_idx = t.iter().position(|tk| tk.ident("spawn")).unwrap();
+        assert!(spans[0].tok_range.contains(&spawn_idx));
+        assert!(!spans[1].tok_range.contains(&spawn_idx));
+    }
+
+    #[test]
+    fn matching_paren_nests() {
+        let t = toks("f(a, g(b, c), d)");
+        let open = t.iter().position(|tk| tk.punct("(")).unwrap();
+        let close = matching_paren(&t, open).unwrap();
+        assert_eq!(t[close..].len(), 1, "outermost close is the last token");
+    }
+}

@@ -1,18 +1,24 @@
 //! `pallas-lint` — repo-native static analysis with a ratchet baseline.
 //!
 //! Scans `src/`, `benches/`, `tests/`, and `examples/` for violations of
-//! the six repo-specific rules (see `moe_lens::analysis`) and compares
+//! the eleven repo-specific rules (see `moe_lens::analysis`) and compares
 //! the per-file-per-rule counts against the committed
 //! `lint-baseline.json`.
 //!
 //! Modes:
 //! - `--check` (default): exit nonzero if any count increased over the
 //!   baseline, or if the baseline is stale (counts above actual).
+//! - `--deny-baseline` (with `--check`): additionally fail if the
+//!   baseline carries *any* debt. The ratchet burned to zero in v2;
+//!   this keeps it there — CI passes the flag so reintroducing debt via
+//!   `--update-baseline` cannot land.
 //! - `--list`: print every current violation (baselined or not).
 //! - `--update-baseline`: rewrite the baseline from the actual counts,
 //!   refusing to raise any entry.
 //! - `--root <dir>`: crate root to scan (defaults to
-//!   `$CARGO_MANIFEST_DIR`, which `cargo run` sets, then `.`).
+//!   `$CARGO_MANIFEST_DIR`, which `cargo run` sets, then `.`). The root
+//!   is canonicalized so baseline keys agree regardless of the invoking
+//!   working directory.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -27,13 +33,14 @@ enum Mode {
 
 fn usage() {
     eprintln!(
-        "usage: pallas-lint [--check | --list | --update-baseline] [--root <dir>]\n\
+        "usage: pallas-lint [--check | --list | --update-baseline] [--deny-baseline] [--root <dir>]\n\
          see the README's \"Static analysis & invariants\" section"
     );
 }
 
 fn main() -> ExitCode {
     let mut mode = Mode::Check;
+    let mut deny_baseline = false;
     let mut root: Option<PathBuf> = None;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -41,6 +48,7 @@ fn main() -> ExitCode {
             "--check" => mode = Mode::Check,
             "--list" => mode = Mode::List,
             "--update-baseline" => mode = Mode::Update,
+            "--deny-baseline" => deny_baseline = true,
             "--root" => match args.next() {
                 Some(dir) => root = Some(PathBuf::from(dir)),
                 None => {
@@ -62,6 +70,13 @@ fn main() -> ExitCode {
     let root = root
         .or_else(|| std::env::var_os("CARGO_MANIFEST_DIR").map(PathBuf::from))
         .unwrap_or_else(|| PathBuf::from("."));
+    let root = match analysis::canonical_root(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: cannot canonicalize root {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
 
     let violations = match analysis::scan_root(&root) {
         Ok(v) => v,
@@ -125,6 +140,20 @@ fn main() -> ExitCode {
                 }
             };
             let report = base.check(&actual);
+            if deny_baseline && !base.files.is_empty() {
+                eprintln!(
+                    "pallas-lint: --deny-baseline: the baseline carries {} violation(s) \
+                     across {} file(s); the ratchet must stay at zero:",
+                    base.total(),
+                    base.files.len()
+                );
+                for (file, rules) in &base.files {
+                    for (rule, n) in rules {
+                        eprintln!("  {file} / {rule}: {n}");
+                    }
+                }
+                return ExitCode::FAILURE;
+            }
             if report.is_clean() {
                 println!(
                     "pallas-lint: clean ({} baselined violation(s) across {} file(s))",

@@ -186,6 +186,9 @@ fn worker_loop(rx: Receiver<Arc<Batch>>) {
 /// live for the whole chunk.
 fn run_batch(b: &Batch) {
     loop {
+        // Ordering: the cursor only partitions indices — each RMW is
+        // atomic, and no worker reads memory published by another's
+        // claim, so no acquire/release pairing is needed here.
         let start = b.next.fetch_add(b.chunk, Ordering::Relaxed);
         if start >= b.n {
             return;
@@ -211,6 +214,10 @@ fn run_batch(b: &Batch) {
             attend_one(cache, b.layer, b.shape, q.seq, qs, dst, Tier::Optimized, b.tuning);
         }
         let claimed = end - start;
+        // Ordering: AcqRel makes every worker's `out` writes visible to
+        // whichever worker observes zero remaining (release on each
+        // retire, acquire on the read) before it trips the latch the
+        // caller is parked on.
         if b.remaining.fetch_sub(claimed, Ordering::AcqRel) == claimed {
             let (lock, cvar) = &b.done;
             // Notify while *holding* the lock: the waiter cannot observe

@@ -141,17 +141,21 @@ pub fn pack_plan(plan: &PassPlan, sched: &Scheduler, n_tok: usize) -> Vec<Bucket
         // The fed token: the most recently generated one (pos>prompt) or
         // the last prompt token (first decode step never happens here —
         // completing prefill chunks yield it — so generated is non-empty).
-        let token = *seq.generated.last().expect("decode implies a generated token");
+        let Some(&token) = seq.generated.last() else {
+            panic!("decoding sequence {id} has no generated token to feed")
+        };
         if buckets.iter().all(|b| b.free() == 0) {
             buckets.push(Bucket::new(n_tok));
         }
-        let bi = buckets
+        let Some(bi) = buckets
             .iter()
             .enumerate()
             .filter(|(_, b)| b.free() > 0)
             .min_by_key(|(_, b)| b.rows.len())
             .map(|(i, _)| i)
-            .unwrap();
+        else {
+            panic!("no bucket with a free row after pre-open")
+        };
         buckets[bi].rows.push(Row { seq: id, kind: RowKind::Decode, token, pos, yields: true });
     }
 

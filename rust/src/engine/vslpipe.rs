@@ -885,12 +885,16 @@ impl ServingEngine {
         let token_of: BTreeMap<SeqId, i32> = tokens.iter().copied().collect();
         let d = self.pjrt.config.d_model;
         for &(id, gen_idx, _) in &placeholders {
-            let tok = *token_of.get(&id).expect("placeholder sequence must have yielded");
+            let Some(&tok) = token_of.get(&id) else {
+                panic!("placeholder sequence {id} did not yield a token")
+            };
             sched.patch_generated(id, gen_idx, tok);
         }
         for &(bi, ri) in &patches {
             let id = buckets[bi].rows[ri].seq;
-            let tok = *token_of.get(&id).expect("patched row's sequence must have yielded");
+            let Some(&tok) = token_of.get(&id) else {
+                panic!("patched row's sequence {id} did not yield a token")
+            };
             buckets[bi].rows[ri].token = tok;
             buckets[bi].ids[ri] = tok;
             let row = tok as usize * d;
@@ -943,7 +947,11 @@ impl ServingEngine {
              outside the arrival stream would yield tokens the latency \
              tracker has no arrival record for"
         );
-        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("non-NaN arrival times"));
+        anyhow::ensure!(
+            arrivals.iter().all(|(t, _)| t.is_finite()),
+            "non-finite arrival timestamp in arrival stream"
+        );
+        arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
         for (_, r) in &arrivals {
             self.validate(r)?;
         }
@@ -961,7 +969,7 @@ impl ServingEngine {
         loop {
             let now = self.run_clock.elapsed().as_secs_f64();
             while pending.front().is_some_and(|(t, _)| *t <= now) {
-                let (t, r) = pending.pop_front().unwrap();
+                let Some((t, r)) = pending.pop_front() else { break };
                 tracker.arrived(r.id, t);
                 self.sched.submit_at(r, t);
             }
@@ -1198,6 +1206,8 @@ impl ServingEngine {
                 let handle = s.spawn(move || {
                     let t0 = std::time::Instant::now();
                     pool.decode_attention(cache, layer, shape, queries_ref, cpu_out_ref);
+                    // Ordering: the only reader loads after this scoped
+                    // thread is joined, which already orders the store.
                     cpu_nanos.store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 });
                 // GPU lane: packed flash attention per bucket. Pure-decode
@@ -1225,11 +1235,15 @@ impl ServingEngine {
                     prefill_attn.push(to_f32(&outs[0])?);
                 }
                 gpu_lane = gpu_clock.elapsed().as_secs_f64();
-                handle.join().expect("attention thread");
+                if handle.join().is_err() {
+                    anyhow::bail!("CPU attention thread panicked");
+                }
                 Ok(())
             })?;
             let phase_wall = phase_clock.elapsed().as_secs_f64();
             clock.lap(); // resync: the phase is accounted below
+            // Ordering: the scope above joined the writer thread, which
+            // sequences this load after the store.
             let cpu_busy = cpu_nanos.load(Ordering::Relaxed) as f64 / 1e9;
             let both_busy = gpu_lane.min(cpu_busy);
             times.overlap += both_busy;

@@ -7,6 +7,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::cast::u32_usize;
+
 /// Sequence identifier (assigned by the scheduler).
 pub type SeqId = u64;
 
@@ -83,7 +85,7 @@ impl BlockAllocator {
         // check stays on in release builds (one compare per released
         // block). The double-free scan is O(free-list) and release runs
         // per block per finished sequence, so it stays debug-only.
-        assert!((block as usize) < self.layout.n_blocks);
+        assert!(u32_usize(block) < self.layout.n_blocks);
         debug_assert!(!self.free.contains(&block), "double free of block {block}");
         self.free.push(block);
     }
@@ -181,14 +183,19 @@ impl PagedLayout {
     /// trigger.
     pub fn grow(&mut self, id: SeqId, extra: usize) -> Option<usize> {
         let layout = self.alloc.layout();
-        let t = self.tables.get_mut(&id).expect("unknown sequence");
+        let Some(t) = self.tables.get_mut(&id) else {
+            panic!("grow: unknown sequence {id}")
+        };
         let target = layout.blocks_for(t.len + extra);
         let need = target - t.blocks.len();
         if need > self.alloc.free.len() {
             return None;
         }
         for _ in 0..need {
-            t.blocks.push(self.alloc.alloc().unwrap());
+            let Some(block) = self.alloc.alloc() else {
+                panic!("free list exhausted after fit check ({need} blocks)")
+            };
+            t.blocks.push(block);
         }
         let first = t.len;
         t.len += extra;
@@ -198,7 +205,9 @@ impl PagedLayout {
     /// Drop a sequence and release its blocks (decode-completion GC or
     /// preemption eviction). Returns how many blocks were freed.
     pub fn release(&mut self, id: SeqId) -> usize {
-        let t = self.tables.remove(&id).expect("unknown sequence");
+        let Some(t) = self.tables.remove(&id) else {
+            panic!("release: unknown sequence {id}")
+        };
         let n = t.blocks.len();
         for b in t.blocks {
             self.alloc.release(b);
@@ -219,13 +228,13 @@ impl PagedLayout {
                 t.len
             );
             for &b in &t.blocks {
-                assert!(owner[b as usize].is_none(), "block {b} double-owned");
-                owner[b as usize] = Some(id);
+                assert!(owner[u32_usize(b)].is_none(), "block {b} double-owned");
+                owner[u32_usize(b)] = Some(id);
             }
         }
         for &b in &self.alloc.free {
-            assert!(owner[b as usize].is_none(), "free block {b} is owned");
-            owner[b as usize] = Some(u64::MAX);
+            assert!(owner[u32_usize(b)].is_none(), "free block {b} is owned");
+            owner[u32_usize(b)] = Some(u64::MAX);
         }
         assert!(owner.iter().all(|o| o.is_some()), "leaked block");
     }
@@ -338,7 +347,10 @@ mod tests {
                     }
                     _ if !live.is_empty() => {
                         let i = rng.below(live.len() as u64) as usize;
-                        let id = live.swap_remove(i);
+                        // Order-preserving removal: the seeded replay of
+                        // this property walk must visit sequences in a
+                        // stable order (nondeterministic-order rule).
+                        let id = live.remove(i);
                         c.release(id);
                     }
                     _ => {}

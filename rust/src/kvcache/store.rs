@@ -8,7 +8,7 @@
 
 use super::layout::{KvLayout, PagedLayout, SeqId};
 use crate::util::bf16::f32_to_bf16;
-use crate::util::cast::u64_usize;
+use crate::util::cast::{u32_usize, u64_usize};
 
 /// Per-layer K/V pools.
 struct LayerPool {
@@ -85,7 +85,7 @@ impl PagedKvCache {
         assert_eq!(v.len(), self.kv_dim);
         let bs = self.layout.layout().block_size;
         let (block, slot) = self.layout.table(id).locate(pos, bs);
-        let base = (block as usize * bs + slot) * self.kv_dim;
+        let base = (u32_usize(block) * bs + slot) * self.kv_dim;
         let pool = &mut self.pools[layer];
         for i in 0..self.kv_dim {
             pool.k[base + i] = f32_to_bf16(k[i]);
@@ -143,7 +143,7 @@ impl PagedKvCache {
                 break;
             }
             let run = remaining.min(bs);
-            let base = block as usize * bs * self.kv_dim;
+            let base = u32_usize(block) * bs * self.kv_dim;
             let len = run * self.kv_dim;
             f(&pool.k[base..base + len], &pool.v[base..base + len], run);
             remaining -= run;

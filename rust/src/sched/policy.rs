@@ -18,6 +18,7 @@
 
 use crate::config::{MachineSpec, ModelSpec};
 use crate::model::{Request, Sequence};
+use crate::util::cast::usize_f64;
 
 /// Safety margin applied to the predicted service time before admitting
 /// against a deadline. The analytic estimate ignores memory-controller
@@ -131,7 +132,7 @@ impl ServiceModel {
     /// (`n_real`) — the §6.3 identity the simulator's clock runs on.
     pub fn from_costs(delta_secs: f64, token_budget: usize) -> Self {
         ServiceModel {
-            prefill_secs_per_token: delta_secs / token_budget.max(1) as f64,
+            prefill_secs_per_token: delta_secs / usize_f64(token_budget.max(1)),
             decode_secs_per_iter: delta_secs,
         }
     }
@@ -146,21 +147,21 @@ impl ServiceModel {
 
     /// Predicted service time for a fresh (unstarted) request.
     pub fn predicted_service(&self, req: &Request) -> f64 {
-        req.prompt.len() as f64 * self.prefill_secs_per_token
-            + req.max_gen as f64 * self.decode_secs_per_iter
+        usize_f64(req.prompt.len()) * self.prefill_secs_per_token
+            + usize_f64(req.max_gen) * self.decode_secs_per_iter
     }
 
     /// Predicted time to finish a live sequence from its current state:
     /// remaining (re-)prefill plus remaining decode iterations.
     pub fn predicted_remaining(&self, seq: &Sequence) -> f64 {
-        seq.pending_prefill() as f64 * self.prefill_secs_per_token
-            + seq.remaining_gen() as f64 * self.decode_secs_per_iter
+        usize_f64(seq.pending_prefill()) * self.prefill_secs_per_token
+            + usize_f64(seq.remaining_gen()) * self.decode_secs_per_iter
     }
 
     /// Predicted cost of replaying a sequence's full context after a
     /// preemption (the §6.2 re-prefill).
     pub fn replay_cost(&self, seq: &Sequence) -> f64 {
-        seq.full_prompt_len() as f64 * self.prefill_secs_per_token
+        usize_f64(seq.full_prompt_len()) * self.prefill_secs_per_token
     }
 }
 
@@ -210,7 +211,7 @@ impl ServiceEstimator {
         if total == 0 || !(duration > 0.0) {
             return;
         }
-        Self::fold(self.alpha, &mut self.per_token, duration / total as f64);
+        Self::fold(self.alpha, &mut self.per_token, duration / usize_f64(total));
         if decode_tokens > 0 {
             Self::fold(self.alpha, &mut self.decode_iter, duration);
         }

@@ -6,6 +6,7 @@
 //! measured weight-transfer time. The Resource-Aware Scheduler caps each
 //! pass at `n_real` so prefill admission never over-commits the pipeline.
 
+use crate::util::cast::{f64_usize, usize_f64};
 use crate::util::stats::{line_fit, LineFit};
 
 /// The fitted profile.
@@ -48,12 +49,13 @@ impl PipelineProfiler {
     where
         F: FnMut(usize) -> f64,
     {
+        assert!(!self.sample_points.is_empty(), "profiler needs sample points");
         let mut xs = Vec::new();
         let mut ys = Vec::new();
         for &n in &self.sample_points {
             let mut samples: Vec<f64> = (0..self.reps).map(|_| gpu_time(n)).collect();
-            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            xs.push(n as f64);
+            samples.sort_by(f64::total_cmp);
+            xs.push(usize_f64(n));
             ys.push(samples[samples.len() / 2]);
         }
         let line = line_fit(&xs, &ys);
@@ -61,9 +63,9 @@ impl PipelineProfiler {
         let n_real = if line.slope <= 0.0 {
             // Degenerate (measurement noise floor): fall back to the
             // largest sampled point — the GPU never catches the IO.
-            *self.sample_points.last().unwrap()
+            self.sample_points[self.sample_points.len() - 1]
         } else {
-            (((layer_io_secs - line.intercept) / line.slope).max(1.0)) as usize
+            f64_usize(((layer_io_secs - line.intercept) / line.slope).max(1.0))
         };
         ProfileFit { line, layer_io_secs, n_real }
     }
@@ -74,10 +76,10 @@ impl PipelineProfiler {
         machine: &crate::config::MachineSpec,
         model: &crate::config::ModelSpec,
     ) -> ProfileFit {
-        let per_layer_flops = model.flops_per_token() / model.n_layers as f64;
+        let per_layer_flops = model.flops_per_token() / usize_f64(model.n_layers);
         let slope = per_layer_flops / machine.gpu.bf16_flops;
         let layer_io = machine.transfer_secs(model.layer_bytes());
-        let n_real = (layer_io / slope) as usize;
+        let n_real = f64_usize(layer_io / slope);
         ProfileFit {
             line: LineFit { slope, intercept: 0.0, r2: 1.0 },
             layer_io_secs: layer_io,

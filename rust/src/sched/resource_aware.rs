@@ -5,6 +5,7 @@ use std::collections::{BTreeMap, VecDeque};
 use super::policy::{AdmissionPolicy, DropReason, ServiceModel, VictimPolicy};
 use crate::kvcache::{PagedLayout, SeqId};
 use crate::model::{Request, SeqPhase, Sequence};
+use crate::util::cast::usize_f64;
 
 /// Scheduler tuning.
 #[derive(Debug, Clone, Copy)]
@@ -242,7 +243,9 @@ impl Scheduler {
             }
             mode = SchedMode::Preemption;
             let victim = self.select_victim(now, kv);
-            let mut seq = self.decoding.remove(&victim).unwrap();
+            let Some(mut seq) = self.decoding.remove(&victim) else {
+                panic!("victim {victim} not in the decode set")
+            };
             kv.release(victim);
             seq.preempt();
             self.preemptions += 1;
@@ -254,7 +257,9 @@ impl Scheduler {
 
         // Schedule every surviving decode sequence (oldest first).
         for (&id, _) in self.decoding.iter() {
-            let pos = kv.grow(id, 1).expect("pre-checked block estimate");
+            let Some(pos) = kv.grow(id, 1) else {
+                panic!("decode grow failed after pre-checked block estimate (seq {id})")
+            };
             plan.decode.push((id, pos));
         }
 
@@ -302,7 +307,10 @@ impl Scheduler {
         match self.cfg.victim {
             // Newest = largest id (ids are assigned in admission order).
             VictimPolicy::Newest => {
-                *self.decoding.keys().next_back().expect("need>0 => non-empty")
+                let Some(&id) = self.decoding.keys().next_back() else {
+                    panic!("select_victim on an empty decode set")
+                };
+                id
             }
             // Highest deadline slack net of replay cost. A sequence that
             // progresses on schedule keeps constant slack (the clock and
@@ -339,7 +347,7 @@ impl Scheduler {
                     let fill = if kv.contains(id) {
                         let t = kv.table(id);
                         let slots = (t.blocks.len() * block).max(1);
-                        (t.len as f64 / slots as f64).min(1.0)
+                        (usize_f64(t.len) / usize_f64(slots)).min(1.0)
                     } else {
                         1.0
                     };
@@ -353,7 +361,10 @@ impl Scheduler {
                         best_id = Some(id);
                     }
                 }
-                best_id.expect("need>0 => non-empty")
+                let Some(id) = best_id else {
+                    panic!("select_victim on an empty decode set")
+                };
+                id
             }
         }
     }
@@ -483,9 +494,13 @@ impl Scheduler {
     ) -> Vec<SeqId> {
         let mut newly_finished = Vec::new();
         for &(id, tok) in tokens {
-            let seq = self.decoding.get_mut(&id).expect("token for unknown sequence");
+            let Some(seq) = self.decoding.get_mut(&id) else {
+                panic!("token for unknown sequence {id}")
+            };
             if seq.push_generated(tok) {
-                let seq = self.decoding.remove(&id).unwrap();
+                let Some(seq) = self.decoding.remove(&id) else {
+                    panic!("finished sequence {id} vanished from the decode set")
+                };
                 kv.release(id);
                 self.finished.push(seq);
                 newly_finished.push(id);
@@ -564,12 +579,16 @@ impl Scheduler {
         let mut finished = Vec::new();
         let mut placeholders = Vec::new();
         for &id in yields {
-            let seq = self.decoding.get_mut(&id).expect("yield for unknown sequence");
+            let Some(seq) = self.decoding.get_mut(&id) else {
+                panic!("yield for unknown sequence {id}")
+            };
             let gen_idx = seq.generated.len();
             let logical_pos = seq.req.prompt.len() + gen_idx;
             seq.generated.push(0);
             if seq.generated.len() >= seq.req.max_gen {
-                let mut seq = self.decoding.remove(&id).unwrap();
+                let Some(mut seq) = self.decoding.remove(&id) else {
+                    panic!("finished sequence {id} vanished from the decode set")
+                };
                 seq.phase = SeqPhase::Finished;
                 kv.release(id);
                 finished.push(id);

@@ -22,7 +22,7 @@ use crate::metrics::{LatencyStats, PassRecord, RequestTracker, RunReport, Trace}
 use crate::model::Request;
 use crate::sched::{AdmissionPolicy, PassPlan, SchedConfig, Scheduler, ServiceModel, VictimPolicy};
 use crate::transfer::ResidencyMap;
-use crate::util::cast::usize_u64;
+use crate::util::cast::{u64_f64, u64_usize, usize_f64, usize_u64};
 use crate::workload::{duplicate_id, ExpertRouter, RoutingSpec};
 
 /// Memory-controller contention coefficient: fraction of IO slowdown per
@@ -49,7 +49,7 @@ impl HostPlanCost {
 
     /// Cost of planning/packing/embedding a pass of `tokens` tokens.
     pub fn cost(&self, tokens: usize) -> f64 {
-        self.base_secs + self.per_token_secs * tokens as f64
+        self.base_secs + self.per_token_secs * usize_f64(tokens)
     }
 
     pub fn is_zero(&self) -> bool {
@@ -118,8 +118,7 @@ impl SimConfig {
     }
 
     pub fn n_blocks(&self) -> usize {
-        (self.kv_bytes / (self.block_size as u64 * self.model.kv_bytes_per_token()))
-            as usize
+        u64_usize(self.kv_bytes / (usize_u64(self.block_size) * self.model.kv_bytes_per_token()))
     }
 
     pub fn kv_layout(&self) -> KvLayout {
@@ -159,13 +158,13 @@ impl<'a> CostModel<'a> {
 
     /// GPU GEMM time for `n` tokens.
     pub fn gpu_time(&self, n_tokens: usize) -> f64 {
-        n_tokens as f64 * self.model.flops_per_token() / self.machine.gpu.bf16_flops
+        usize_f64(n_tokens) * self.model.flops_per_token() / self.machine.gpu.bf16_flops
     }
 
     /// CPU decode-attention time for a total of `kv_tokens` context tokens
     /// scanned this iteration.
     pub fn cpu_attn_time(&self, kv_tokens: u64) -> f64 {
-        let bytes = kv_tokens as f64 * self.model.kv_bytes_per_token() as f64;
+        let bytes = u64_f64(kv_tokens) * u64_f64(self.model.kv_bytes_per_token());
         bytes / (self.machine.host.mem_bw * self.cpu_attn_eff)
     }
 
@@ -413,7 +412,7 @@ impl SimMachine {
             // Context tokens scanned by CPU attention: each decode token
             // attends over its sequence's full cache.
             let kv_scanned: u64 =
-                plan.decode.iter().map(|&(id, _)| self.kv.len(id) as u64).sum();
+                plan.decode.iter().map(|&(id, _)| usize_u64(self.kv.len(id))).sum();
             // Expert-granular residency shrinks the weight sweep: pinned
             // experts never cross the link and only activated (or +2
             // predicted) cold experts stream. Disabled (`None`) takes the
@@ -535,7 +534,7 @@ pub fn run_uniform(
     k: usize,
 ) -> (Trace, RunReport) {
     let reqs: Vec<Request> =
-        (0..k).map(|i| Request::new(i as u64, vec![1; p], g)).collect();
+        (0..k).map(|i| Request::new(usize_u64(i), vec![1; p], g)).collect();
     SimMachine::new(cfg).run(reqs)
 }
 

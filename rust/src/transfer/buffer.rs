@@ -45,13 +45,22 @@ impl WeightBuffer {
         layer % 2
     }
 
+    /// Lock a slot, surfacing poisoning (a writer panicked mid-fill, so
+    /// the staged weights cannot be trusted) with slot context.
+    fn lock_slot(&self, idx: usize) -> std::sync::MutexGuard<'_, Slot> {
+        match self.slots[idx].lock() {
+            Ok(guard) => guard,
+            Err(_) => panic!("weight buffer slot {idx} poisoned: a staging writer panicked"),
+        }
+    }
+
     /// Write `src` into the slot for `layer` via `write` (the data mover's
     /// packetized copy loop runs inside the closure).
     pub fn fill<F>(&self, layer: usize, mut write: F)
     where
         F: FnMut(&mut [f32]),
     {
-        let mut slot = self.slots[Self::slot_for(layer)].lock().unwrap();
+        let mut slot = self.lock_slot(Self::slot_for(layer));
         slot.layer = usize::MAX; // invalid while partially written
         write(&mut slot.data);
         slot.layer = layer;
@@ -63,7 +72,7 @@ impl WeightBuffer {
     where
         F: FnOnce(&[f32]) -> R,
     {
-        let slot = self.slots[Self::slot_for(layer)].lock().unwrap();
+        let slot = self.lock_slot(Self::slot_for(layer));
         assert_eq!(
             slot.layer, layer,
             "weight buffer slot {} holds layer {}, wanted {layer} (stage sync bug)",
@@ -75,7 +84,7 @@ impl WeightBuffer {
 
     /// Which layer a slot currently holds (telemetry).
     pub fn resident(&self, slot: usize) -> Option<usize> {
-        let l = self.slots[slot].lock().unwrap().layer;
+        let l = self.lock_slot(slot).layer;
         (l != usize::MAX).then_some(l)
     }
 }

@@ -189,6 +189,11 @@ impl DataMover {
             let shared = Arc::clone(&shared);
             let link = Arc::clone(&link);
             let mode = mode.clone();
+            // The mover owns this thread end-to-end: `shutdown()` closes
+            // the channel and joins the handle stored in `self.worker`,
+            // so lifetime/panic propagation is as disciplined as the
+            // blessed seams without routing weights through ThreadPool.
+            // pallas-lint: allow(thread-spawn-policy)
             std::thread::spawn(move || {
                 let n_layers = weights.n_layers().max(1);
                 while let Ok(req) = rx.recv() {

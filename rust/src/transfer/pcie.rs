@@ -56,10 +56,14 @@ impl PcieLink {
     /// Raise/lower the contention slowdown (engine hook; 1.0 = none).
     pub fn set_contention(&self, factor: f64) {
         assert!(factor >= 1.0);
+        // Ordering: a standalone tuning knob — no other memory is
+        // published with it, and a slightly stale factor only misprices
+        // a transfer already in flight.
         self.slowdown_pct.store((factor * 100.0) as u64, Ordering::Relaxed);
     }
 
     pub fn contention(&self) -> f64 {
+        // Ordering: see set_contention — stale reads are tolerable.
         self.slowdown_pct.load(Ordering::Relaxed) as f64 / 100.0
     }
 
@@ -84,8 +88,11 @@ impl PcieLink {
             LinkTiming::Throttle(_) => std::thread::sleep(cost),
             LinkTiming::Virtual(_) => {}
         }
+        // Ordering: independent monotonic telemetry counters; readers
+        // only ever aggregate totals after the engine quiesces, so no
+        // cross-counter consistency is needed.
         self.bytes.fetch_add(nbytes, Ordering::Relaxed);
-        self.nanos.fetch_add(cost.as_nanos() as u64, Ordering::Relaxed);
+        self.nanos.fetch_add(cost.as_nanos() as u64, Ordering::Relaxed); // Ordering: same counters
     }
 
     /// Charge a data-only transfer (no real copy — used for the small
@@ -95,17 +102,20 @@ impl PcieLink {
         if let LinkTiming::Throttle(_) = self.timing {
             std::thread::sleep(cost);
         }
+        // Ordering: telemetry counters, as in `transfer`.
         self.bytes.fetch_add(nbytes, Ordering::Relaxed);
-        self.nanos.fetch_add(cost.as_nanos() as u64, Ordering::Relaxed);
+        self.nanos.fetch_add(cost.as_nanos() as u64, Ordering::Relaxed); // Ordering: same counters
         cost
     }
 
     pub fn total_bytes(&self) -> u64 {
+        // Ordering: telemetry read after quiesce; see `transfer`.
         self.bytes.load(Ordering::Relaxed)
     }
 
     /// Total link-clock time spent transferring.
     pub fn total_time(&self) -> Duration {
+        // Ordering: telemetry read after quiesce; see `transfer`.
         Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
     }
 

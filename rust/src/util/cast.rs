@@ -56,6 +56,14 @@ pub fn u64_usize(x: u64) -> usize {
     usize::try_from(x).unwrap_or_else(|_| panic!("u64 {x} overflows usize"))
 }
 
+/// Lossless `u32 -> usize` (every supported target has at least 32-bit
+/// pointers). Used for KV block ids, which are `u32` in page tables to
+/// halve their memory footprint.
+#[inline]
+pub fn u32_usize(x: u32) -> usize {
+    x as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

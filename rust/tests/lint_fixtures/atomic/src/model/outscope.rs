@@ -1,0 +1,7 @@
+//! Fixture: model/ is outside the atomic-ordering scope.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(counter: &AtomicUsize) {
+    counter.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,8 @@
+//! Fixture: an allow directive suppresses the rule.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(counter: &AtomicUsize) {
+    // pallas-lint: allow(atomic-ordering)
+    counter.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,10 @@
+//! Fixture: undocumented relaxed-family orderings fire.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+pub fn bump(counter: &AtomicUsize, bytes: &AtomicU64) -> u64 {
+    counter.fetch_add(1, Ordering::Relaxed);
+    // this mentions Ordering::AcqRel but is path syntax, not a doc
+    bytes.fetch_sub(8, Ordering::AcqRel);
+    bytes.load(Ordering::SeqCst)
+}

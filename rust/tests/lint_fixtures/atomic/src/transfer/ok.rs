@@ -1,0 +1,11 @@
+//! Fixture: justified orderings are clean.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+pub fn bump(counter: &AtomicUsize, bytes: &AtomicU64) -> u64 {
+    counter.fetch_add(1, Ordering::Relaxed); // Ordering: telemetry counter, nothing reads it for sync
+    // Ordering: pairs the release in `publish` with the acquire here so
+    // the payload write happens-before this load.
+    let n = bytes.load(Ordering::Acquire);
+    n
+}

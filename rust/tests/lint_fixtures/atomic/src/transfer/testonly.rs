@@ -1,0 +1,13 @@
+//! Fixture: #[cfg(test)] regions are exempt.
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn relaxed_in_tests_is_fine() {
+        let c = AtomicUsize::new(0);
+        c.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+}

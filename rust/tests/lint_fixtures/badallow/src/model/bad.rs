@@ -1,0 +1,7 @@
+//! Fixture: an allow directive naming an unknown rule is a hard error
+//! (a typo would otherwise suppress nothing silently).
+
+pub fn compare(x: f64) -> bool {
+    // pallas-lint: allow(flaot-eq)
+    x == 0.5
+}

@@ -1,0 +1,5 @@
+//! Fixture: model/ is outside the nondeterministic-order scope.
+
+pub fn drain(items: &mut Vec<u64>, i: usize) -> u64 {
+    items.swap_remove(i)
+}

@@ -1,0 +1,7 @@
+//! Fixture: an allow directive suppresses the rule.
+
+pub fn drain(items: &mut Vec<u64>, i: usize) -> u64 {
+    // order is re-established by the caller's sort below
+    // pallas-lint: allow(nondeterministic-order)
+    items.swap_remove(i)
+}

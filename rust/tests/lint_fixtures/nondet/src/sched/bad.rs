@@ -1,0 +1,26 @@
+//! Fixture: iteration-order hazards fire.
+
+pub struct Item {
+    pub id: u64,
+    pub cost: f64,
+    pub live: bool,
+}
+
+pub fn drain(items: &mut Vec<Item>, i: usize) -> Item {
+    items.swap_remove(i)
+}
+
+pub fn rank(items: &mut [Item]) {
+    items.sort_unstable_by(|a, b| a.cost.total_cmp(&b.cost));
+}
+
+pub fn sweep(items: &mut Vec<Item>) -> usize {
+    let mut dropped = 0usize;
+    items.retain(|it| {
+        if !it.live {
+            dropped += 1;
+        }
+        it.live
+    });
+    dropped
+}

@@ -1,0 +1,20 @@
+//! Fixture: order-preserving removal, int-keyed sorts, and pure retain
+//! predicates are clean.
+
+pub struct Item {
+    pub id: u64,
+    pub live: bool,
+}
+
+pub fn drain(items: &mut Vec<Item>, i: usize) -> Item {
+    items.remove(i)
+}
+
+pub fn rank(items: &mut [Item]) {
+    items.sort_unstable_by_key(|it| it.id);
+    items.sort_unstable_by(|a, b| b.id.cmp(&a.id));
+}
+
+pub fn sweep(items: &mut Vec<Item>) {
+    items.retain(|it| it.live && it.id > 0);
+}

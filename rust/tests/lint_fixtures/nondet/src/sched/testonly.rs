@@ -1,0 +1,16 @@
+//! Fixture: #[cfg(test)] regions are exempt.
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn swap_remove_in_tests_is_fine() {
+        let mut v = vec![1u64, 2, 3];
+        assert_eq!(v.swap_remove(0), 1);
+        let mut seen = 0usize;
+        v.retain(|_| {
+            seen += 1;
+            true
+        });
+        assert_eq!(seen, 2);
+    }
+}

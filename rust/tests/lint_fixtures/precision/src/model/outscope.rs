@@ -1,0 +1,6 @@
+//! Fixture: model/ is outside the precision-laundering scope.
+
+pub fn quantized(y: f64) -> f64 {
+    let x = y as f32;
+    x as f64
+}

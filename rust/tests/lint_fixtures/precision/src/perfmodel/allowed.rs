@@ -1,0 +1,7 @@
+//! Fixture: a comma-list allow suppresses both rules on the site.
+
+pub fn quantized(y: f64) -> f64 {
+    let q = y as f32;
+    // pallas-lint: allow(precision-laundering, unchecked-cast)
+    q as f64
+}

@@ -1,0 +1,18 @@
+//! Fixture: f32 precision laundered into f64 fires. The `as f64` sites
+//! also sit in the unchecked-cast scope; those carry a cast allow so the
+//! precision violation is isolated (an allow for one rule must not
+//! suppress another on the same line).
+
+pub fn tainted_let(y: f64) -> f64 {
+    let x = y as f32;
+    let clean = y * 2.0;
+    x as f64 + clean // pallas-lint: allow(unchecked-cast)
+}
+
+pub fn tainted_param(w: f32, n: f64) -> f64 {
+    w as f64 * n // pallas-lint: allow(unchecked-cast)
+}
+
+pub fn truncated_literal() -> f32 {
+    0.1 as f32
+}

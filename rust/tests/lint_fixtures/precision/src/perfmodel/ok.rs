@@ -1,0 +1,10 @@
+//! Fixture: all-f64 arithmetic and typed literals are clean.
+
+pub fn cost(a: f64, b: f64) -> f64 {
+    let scaled = a * 0.5;
+    scaled + b
+}
+
+pub fn typed_literal() -> f32 {
+    0.5f32
+}

@@ -1,0 +1,11 @@
+//! Fixture: #[cfg(test)] regions are exempt.
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn quantization_roundoff_is_bounded() {
+        let y = 1.000_000_1_f64;
+        let x = y as f32;
+        assert!((x as f64 - y).abs() < 1e-6);
+    }
+}

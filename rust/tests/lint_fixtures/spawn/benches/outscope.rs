@@ -1,0 +1,7 @@
+//! Fixture: benches/ is outside the thread-spawn-policy scope (the rule
+//! covers src/ only — bench drivers own their thread lifetimes).
+
+fn main() {
+    let h = std::thread::spawn(|| {});
+    let _ = h.join();
+}

@@ -1,0 +1,7 @@
+//! Fixture: an allow directive suppresses the rule.
+
+pub fn watchdog() {
+    // detached by design: the process exits without joining telemetry
+    // pallas-lint: allow(thread-spawn-policy)
+    std::thread::spawn(|| {});
+}

@@ -1,0 +1,7 @@
+//! Fixture: an ad-hoc thread outside the blessed seams fires.
+
+pub fn fire_and_forget() {
+    std::thread::spawn(move || {
+        let _ = 1 + 1;
+    });
+}

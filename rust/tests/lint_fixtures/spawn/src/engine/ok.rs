@@ -1,0 +1,33 @@
+//! Fixture: the blessed seams (`PlannerWorker`, `ThreadPool`) and scoped
+//! threads are clean.
+
+pub struct PlannerWorker {
+    pub id: usize,
+}
+
+impl PlannerWorker {
+    pub fn spawn(self) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let _ = self.id;
+        })
+    }
+}
+
+pub struct ThreadPool {
+    pub workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let workers = (0..n).map(|_| std::thread::spawn(|| {})).collect();
+        ThreadPool { workers }
+    }
+}
+
+pub fn scoped_fanout(xs: &mut [u64]) {
+    std::thread::scope(|s| {
+        for x in xs.iter_mut() {
+            s.spawn(move || *x += 1);
+        }
+    });
+}

@@ -1,0 +1,10 @@
+//! Fixture: #[cfg(test)] regions are exempt.
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn helper_thread_in_tests_is_fine() {
+        let h = std::thread::spawn(|| 2 + 2);
+        assert_eq!(h.join().ok(), Some(4));
+    }
+}

@@ -128,6 +128,83 @@ fn undocumented_unsafe_fires_in_src_including_tests() {
 }
 
 #[test]
+fn atomic_ordering_requires_justification_comment() {
+    let got = scan_group("atomic");
+    // bad.rs: an undocumented Relaxed and an AcqRel whose neighboring
+    // comment only *mentions* Ordering::AcqRel (path syntax is not a
+    // doc). SeqCst, documented sites (ok.rs), the allow-carrying site,
+    // the #[cfg(test)] region, and model/ (out of scope) are clean.
+    assert_eq!(got.len(), 2, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/transfer/bad.rs");
+        assert_eq!(*rule, Rule::AtomicOrdering);
+    }
+    let details: Vec<&str> = got.iter().map(|(_, _, d)| d.as_str()).collect();
+    assert!(details.contains(&"Ordering::Relaxed without // Ordering:"), "details: {details:?}");
+    assert!(details.contains(&"Ordering::AcqRel without // Ordering:"), "details: {details:?}");
+}
+
+#[test]
+fn nondet_order_flags_hazards_not_pure_uses() {
+    let got = scan_group("nondet");
+    // bad.rs: swap_remove, a float-keyed unstable sort, and a retain
+    // closure with a side effect. ok.rs (order-preserving remove,
+    // int-keyed sorts, pure retain), allowed.rs, testonly.rs, and
+    // model/ contribute nothing.
+    assert_eq!(got.len(), 3, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/sched/bad.rs");
+        assert_eq!(*rule, Rule::NondeterministicOrder);
+    }
+    let details: Vec<&str> = got.iter().map(|(_, _, d)| d.as_str()).collect();
+    assert!(details.contains(&"swap_remove reorders the tail"), "details: {details:?}");
+    assert!(
+        details.contains(&"float-keyed sort_unstable_by is unstable among ties"),
+        "details: {details:?}"
+    );
+    assert!(details.contains(&"retain closure with side effects"), "details: {details:?}");
+}
+
+#[test]
+fn precision_laundering_tracks_taint_across_bindings() {
+    let got = scan_group("precision");
+    // bad.rs: a tainted let binding widened to f64, a tainted f32
+    // parameter widened to f64, and a float literal truncated via `as
+    // f32`. The cast allows on the widening lines must not suppress the
+    // precision rule; the comma-list allow in allowed.rs suppresses
+    // both; testonly.rs and model/ are exempt/out of scope.
+    assert_eq!(got.len(), 3, "violations: {got:?}");
+    for (file, rule, _) in &got {
+        assert_eq!(file, "src/perfmodel/bad.rs");
+        assert_eq!(*rule, Rule::PrecisionLaundering);
+    }
+    let details: Vec<&str> = got.iter().map(|(_, _, d)| d.as_str()).collect();
+    assert!(details.contains(&"f32 `x` widened to f64"), "details: {details:?}");
+    assert!(details.contains(&"f32 `w` widened to f64"), "details: {details:?}");
+    assert!(details.contains(&"float literal `0.1` truncated to f32"), "details: {details:?}");
+}
+
+#[test]
+fn thread_spawn_blessed_only_in_worker_and_pool_impls() {
+    let got = scan_group("spawn");
+    // bad.rs: one ad-hoc spawn. The PlannerWorker/ThreadPool impls, the
+    // scoped spawn, the allow-carrying site, the #[cfg(test)] helper
+    // thread, and benches/ (rule scopes to src/) are clean.
+    assert_eq!(got.len(), 1, "violations: {got:?}");
+    assert_eq!(got[0].0, "src/engine/bad.rs");
+    assert_eq!(got[0].1, Rule::ThreadSpawnPolicy);
+    assert_eq!(got[0].2, "thread::spawn outside PlannerWorker/ThreadPool");
+}
+
+#[test]
+fn unknown_rule_in_allow_directive_is_a_hard_error() {
+    let err = scan_root(&fixture_root("badallow")).expect_err("typo'd allow must not scan clean");
+    let msg = err.to_string();
+    assert!(msg.contains("unknown rule 'flaot-eq'"), "message: {msg}");
+    assert!(msg.contains("src/model/bad.rs:5"), "message: {msg}");
+}
+
+#[test]
 fn fixture_corpus_is_excluded_from_the_default_scan() {
     let files = collect_files(crate_root()).expect("walk crate");
     assert!(!files.is_empty());
@@ -138,24 +215,55 @@ fn fixture_corpus_is_excluded_from_the_default_scan() {
 }
 
 /// The check CI runs: the committed baseline must exactly match the live
-/// tree — no new violations, no stale (overpaid) entries.
+/// tree — no new violations, no stale (overpaid) entries. As of the v2
+/// burn-down the committed baseline is *empty*, so this doubles as a
+/// zero-violations check over the whole tree (`--deny-baseline` enforces
+/// the same in CI).
 #[test]
 fn committed_baseline_is_clean_against_live_tree() {
     let baseline = Baseline::load(&crate_root().join(BASELINE_FILE)).expect("load baseline");
-    let actual = counts(&scan_root(crate_root()).expect("scan crate"));
+    assert_eq!(
+        baseline.total(),
+        0,
+        "the ratchet burned to zero in v2 and must stay there; carried debt: {:?}",
+        baseline.files
+    );
+    let violations = scan_root(crate_root()).expect("scan crate");
+    let actual = counts(&violations);
     let report = baseline.check(&actual);
     if !report.is_clean() {
-        for r in report.regressions.iter().chain(&report.stale) {
-            let kind = if r.actual > r.baseline { "regression" } else { "stale" };
-            eprintln!("{kind}: {} {} baseline {} actual {}", r.file, r.rule, r.baseline, r.actual);
+        for v in &violations {
+            eprintln!("{}:{}: {} ({})", v.file, v.line, v.rule.name(), v.detail);
         }
         panic!(
-            "lint baseline out of date ({} regressions, {} stale) — \
-             run `cargo run --release --bin pallas-lint -- --update-baseline`",
-            report.regressions.len(),
-            report.stale.len()
+            "live tree has {} violation(s) over the empty baseline — fix them or \
+             justify each site with `// pallas-lint: allow(<rule>)`",
+            violations.len()
         );
     }
+}
+
+/// The committed empty-baseline file is byte-identical to what
+/// `--update-baseline` would write, so a refresh is never a diff.
+#[test]
+fn committed_baseline_bytes_are_canonical() {
+    let text = std::fs::read_to_string(crate_root().join(BASELINE_FILE)).expect("read baseline");
+    let parsed = Baseline::parse(&text).expect("parse baseline");
+    assert_eq!(text, parsed.to_pretty_json(), "baseline not in canonical serialized form");
+}
+
+/// `scan_root` through a `..`-laden path produces the same repo-relative
+/// keys once the root is canonicalized (what the binary does for
+/// `--root`), so baselines agree across invoking directories.
+#[test]
+fn canonical_root_normalizes_dotted_paths() {
+    let dotted = fixture_root("spawn").join("..").join("spawn");
+    let canon = moe_lens::analysis::canonical_root(&dotted).expect("canonicalize");
+    assert_eq!(canon, moe_lens::analysis::canonical_root(&fixture_root("spawn")).unwrap());
+    let via_dotted = counts(&scan_root(&canon).expect("scan"));
+    let direct = counts(&scan_root(&fixture_root("spawn")).expect("scan"));
+    assert_eq!(via_dotted, direct);
+    assert!(via_dotted.keys().all(|k| k.starts_with("src/")), "keys: {via_dotted:?}");
 }
 
 /// Ratchet end-to-end: a synthetic new violation on top of the live tree
@@ -178,13 +286,17 @@ fn synthetic_new_violation_fails_check_and_update() {
     assert!(baseline.updated(&actual).is_err(), "update must refuse to raise a count");
 }
 
-/// Ratchet end-to-end: paying down debt makes the committed baseline
-/// stale (check fails) and `--update-baseline` burns it down.
+/// Ratchet end-to-end: paying down debt makes a baseline stale (check
+/// fails) and `--update-baseline` burns it down. The committed baseline
+/// is empty now, so this runs against a synthetic one carrying the
+/// fixture corpus as its debt.
 #[test]
 fn paid_down_debt_goes_stale_and_updates_downward() {
-    let baseline = Baseline::load(&crate_root().join(BASELINE_FILE)).expect("load baseline");
-    let mut actual = counts(&scan_root(crate_root()).expect("scan crate"));
-    // The committed baseline carries real debt; retire one entry.
+    let actual = counts(&scan_root(&fixture_root("nondet")).expect("scan fixture group"));
+    let baseline = Baseline::from_counts(&actual);
+    assert!(baseline.total() > 0, "fixture group must carry debt for this test");
+    assert!(baseline.check(&actual).is_clean());
+    // Retire one violation.
     let (file, rule, old) = baseline
         .files
         .iter()
@@ -192,12 +304,12 @@ fn paid_down_debt_goes_stale_and_updates_downward() {
         .next()
         .expect("baseline has debt");
     assert!(old > 0);
-    let m = actual.get_mut(&file).expect("debt file present in scan");
-    m.insert(rule.clone(), old - 1);
-    let report = baseline.check(&actual);
+    let mut paid = actual.clone();
+    paid.get_mut(&file).expect("debt file present in scan").insert(rule.clone(), old - 1);
+    let report = baseline.check(&paid);
     assert!(report.regressions.is_empty(), "report: {report:?}");
     assert_eq!(report.stale.len(), 1, "report: {report:?}");
-    let refreshed = baseline.updated(&actual).expect("downward update permitted");
+    let refreshed = baseline.updated(&paid).expect("downward update permitted");
     assert!(refreshed.total() < baseline.total());
     let new_count = refreshed.files.get(&file).and_then(|m| m.get(&rule)).copied().unwrap_or(0);
     assert_eq!(new_count, old - 1);
