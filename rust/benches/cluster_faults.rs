@@ -1,0 +1,216 @@
+//! Fault-tolerant cluster serving: crash-recovery goodput vs a
+//! no-failover baseline, and scale-out goodput vs a single replica, on
+//! the simulated paper testbed (Mixtral-8x7B, MTBench shape, 70 GB KV
+//! cache per replica, virtual clock — fully deterministic).
+//!
+//! Two comparisons, each on its own deterministic arrival stream:
+//!
+//! * **Scale-out** — a stream in deep overload, served by one replica
+//!   and by two behind round-robin. Two machines split the pass work, so
+//!   the wall clock (and with it goodput) must improve.
+//! * **Recovery** — an *under-loaded* two-replica cluster where replica 1
+//!   crashes mid-stream. Under-load is the honest regime for this
+//!   comparison: the wall clock is arrival-dominated in both runs, so
+//!   goodput is proportional to completions — which re-routing strictly
+//!   wins, because the no-failover baseline (max_retries = 0) abandons
+//!   every request stranded on the crashed replica. (In deep overload a
+//!   fail-fast baseline can *win* on goodput by shrinking the wall —
+//!   failing work quickly is not fault tolerance.)
+//!
+//! Emits BENCH_cluster_faults.json at the repo root for plotting.
+//!
+//! ```text
+//! cargo bench --bench cluster_faults              # full run + rewrite artifact
+//! cargo bench --bench cluster_faults -- --check   # CI: assert >= committed floors
+//! ```
+
+use moe_lens::cluster::{Cluster, ClusterConfig, ClusterReport, FaultPlan, RouterPolicy};
+use moe_lens::config::ModelSpec;
+use moe_lens::model::Request;
+use moe_lens::simhw::SimConfig;
+use moe_lens::util::bench::{banner, Table};
+use moe_lens::util::json::{obj, Json};
+use moe_lens::workload::ArrivalProcess;
+
+const ARTIFACT: &str = "BENCH_cluster_faults.json";
+
+/// Regression floors for `--check`. Both runs are virtual-clock
+/// deterministic; the floors gate direction ("recovery must beat
+/// abandoning the work", "a second replica must help"), not percent-level
+/// drift.
+const BUDGETS: &[(&str, f64)] = &[
+    ("recovery_over_nofailover_min", 1.0),
+    ("scaleout_2x_over_1x_min", 1.0),
+];
+
+fn artifact_path() -> String {
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/.."))
+        .unwrap_or_else(|_| "..".into());
+    format!("{root}/{ARTIFACT}")
+}
+
+fn stream(k: usize, rate: f64, p: usize, g: usize, seed: u64) -> Vec<(f64, Request)> {
+    let mut rng = moe_lens::util::rng::Rng::new(seed);
+    let times = ArrivalProcess::Poisson { rate }.times(k, &mut rng);
+    times
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| (t, Request::new(moe_lens::util::cast::usize_u64(i), vec![1; p], g)))
+        .collect()
+}
+
+fn run(cfg: ClusterConfig, arrivals: &[(f64, Request)]) -> ClusterReport {
+    Cluster::new(cfg).run_online(arrivals.to_vec(), f64::INFINITY)
+}
+
+fn main() {
+    let check_mode = std::env::args().any(|a| a == "--check");
+    banner(
+        "cluster_faults",
+        "crash-recovery goodput vs no-failover, scale-out goodput vs one replica",
+    );
+    let (p, g) = (98usize, 32usize);
+    let base = SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), 70);
+
+    let mut t = Table::new(&[
+        "scenario",
+        "replicas",
+        "completed",
+        "rerouted",
+        "replayed",
+        "failed",
+        "wall_s",
+        "goodput_req_s",
+    ]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let record = |t: &mut Table, rows: &mut Vec<Json>, name: &str, rep: &ClusterReport| {
+        let wall = rep.traces.iter().map(|tr| tr.wall_secs()).fold(0.0f64, f64::max);
+        t.row(&[
+            name.into(),
+            format!("{}", rep.reports.len()),
+            format!("{}", rep.stats.completed),
+            format!("{}", rep.stats.rerouted),
+            format!("{}", rep.stats.replayed),
+            format!("{}", rep.stats.failed),
+            format!("{wall:.0}"),
+            format!("{:.3}", rep.stats.goodput_rps),
+        ]);
+        rows.push(obj(vec![
+            ("scenario", Json::Str(name.into())),
+            ("replicas", Json::Num(rep.reports.len() as f64)),
+            ("completed", Json::Num(rep.stats.completed as f64)),
+            ("rerouted", Json::Num(rep.stats.rerouted as f64)),
+            ("replayed", Json::Num(rep.stats.replayed as f64)),
+            ("failed", Json::Num(rep.stats.failed as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("goodput_req_s", Json::Num(rep.stats.goodput_rps)),
+        ]));
+    };
+
+    // --- scale-out: deep overload, one replica vs two ------------------
+    let k_over = 2_000usize;
+    let overload = stream(k_over, 500.0, p, g, 0xC1);
+    let one = run(ClusterConfig::new(base.clone(), 1), &overload);
+    let two = run(ClusterConfig::new(base.clone(), 2), &overload);
+    record(&mut t, &mut rows_json, "overload-1x", &one);
+    record(&mut t, &mut rows_json, "overload-2x", &two);
+    assert_eq!(one.stats.completed, k_over, "no deadlines: everything completes");
+    assert_eq!(two.stats.completed, k_over, "no deadlines: everything completes");
+    let scaleout = two.stats.goodput_rps / one.stats.goodput_rps.max(1e-12);
+    assert!(
+        scaleout > 1.0,
+        "two replicas must beat one on overload goodput ({:.3} vs {:.3})",
+        two.stats.goodput_rps,
+        one.stats.goodput_rps
+    );
+
+    // --- recovery: under-loaded pair, replica 1 crashes mid-stream -----
+    let k_rec = 400usize;
+    let underload = stream(k_rec, 2.0, p, g, 0xFA);
+    let faulted = |retries: usize| {
+        let mut cfg = ClusterConfig::new(base.clone(), 2)
+            .with_router(RouterPolicy::Deadline)
+            .with_faults(FaultPlan::parse("crash@100:r1").expect("valid fault spec"));
+        cfg.max_retries = retries;
+        cfg
+    };
+    let recovered = run(faulted(2), &underload);
+    let nofail = run(faulted(0), &underload);
+    record(&mut t, &mut rows_json, "crash-recovered", &recovered);
+    record(&mut t, &mut rows_json, "crash-nofailover", &nofail);
+    t.print();
+    t.print_csv("cluster_faults");
+
+    assert!(
+        nofail.stats.failed > 0,
+        "the crash must strand work for the comparison to mean anything"
+    );
+    assert_eq!(
+        recovered.stats.completed, k_rec,
+        "with retries and no deadlines, every stranded request must recover"
+    );
+    assert!(
+        recovered.stats.rerouted + recovered.stats.replayed > 0,
+        "recovery must actually re-route"
+    );
+    let recovery = recovered.stats.goodput_rps / nofail.stats.goodput_rps.max(1e-12);
+    assert!(
+        recovery > 1.0,
+        "re-route recovery goodput {:.3} must strictly beat no-failover {:.3}",
+        recovered.stats.goodput_rps,
+        nofail.stats.goodput_rps
+    );
+    println!(
+        "\nrecovery goodput gain over no-failover: {recovery:.3}x; \
+         2-replica scale-out over 1: {scaleout:.3}x"
+    );
+
+    // --- artifact: check against the committed floors, or rewrite -----
+    let path = artifact_path();
+    if check_mode {
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {path}: {e} — commit the bench artifact"));
+        let doc = Json::parse(&text).expect("parse committed artifact");
+        let budgets = doc.req("budgets");
+        let measured = [
+            ("recovery_over_nofailover_min", recovery),
+            ("scaleout_2x_over_1x_min", scaleout),
+        ];
+        for (key, got) in measured {
+            let floor = budgets.req(key).as_f64().expect("budget is a number");
+            assert!(
+                got >= floor,
+                "budget {key}: measured {got:.4} under committed floor {floor:.4}"
+            );
+            println!("check {key}: {got:.3} >= floor {floor:.3}  ok");
+        }
+        println!("--check passed against {path}");
+        return;
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::Str("cluster_faults".into())),
+        ("version", Json::Num(1.0)),
+        ("model", Json::Str(ModelSpec::mixtral_8x7b().name.to_string())),
+        ("p", Json::Num(p as f64)),
+        ("g", Json::Num(g as f64)),
+        ("rows", Json::Arr(rows_json)),
+        (
+            "budgets",
+            obj(BUDGETS.iter().map(|&(bk, v)| (bk, Json::Num(v))).collect()),
+        ),
+        (
+            "note",
+            Json::Str(
+                "refresh with `cargo bench --bench cluster_faults` from rust/; \
+                 both comparisons are virtual-clock deterministic, budgets gate \
+                 direction (recovery and scale-out must win), not percent-level \
+                 drift"
+                    .into(),
+            ),
+        ),
+    ]);
+    std::fs::write(&path, format!("{doc}\n")).expect("write bench artifact");
+    println!("wrote {path}");
+}

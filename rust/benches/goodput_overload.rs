@@ -10,16 +10,42 @@
 //! collapses. SLO-aware admission sheds requests whose remaining slack
 //! cannot cover their predicted service time, so the admitted set stays
 //! feasible and goodput saturates near the hardware limit instead.
+//!
+//! Emits BENCH_goodput_overload.json at the repo root for plotting.
+//!
+//! ```text
+//! cargo bench --bench goodput_overload              # full run + rewrite artifact
+//! cargo bench --bench goodput_overload -- --check   # CI: assert >= committed floors
+//! ```
 
 use moe_lens::config::ModelSpec;
 use moe_lens::model::Request;
 use moe_lens::sched::{AdmissionPolicy, VictimPolicy};
 use moe_lens::simhw::{SimConfig, SimMachine};
 use moe_lens::util::bench::{banner, Table};
+use moe_lens::util::json::{obj, Json};
 use moe_lens::util::rng::Rng;
 use moe_lens::workload::{with_deadlines, ArrivalProcess};
 
+const ARTIFACT: &str = "BENCH_goodput_overload.json";
+
+/// Regression floors for `--check`. The run is virtual-clock
+/// deterministic; the floors restate the inline asserts ("SLO admission
+/// must beat FIFO at all") as committed budgets, not percent targets.
+const BUDGETS: &[(&str, f64)] = &[
+    ("slo_over_fifo_min", 1.0),
+    ("weighted_over_fifo_min", 1.0),
+];
+
+fn artifact_path() -> String {
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/.."))
+        .unwrap_or_else(|_| "..".into());
+    format!("{root}/{ARTIFACT}")
+}
+
 fn main() {
+    let check_mode = std::env::args().any(|a| a == "--check");
     banner(
         "goodput_overload",
         "SLO admission & victim policies vs FIFO/newest under >1x saturation load",
@@ -50,6 +76,7 @@ fn main() {
         "goodput_req_s",
     ]);
     let mut goodput = Vec::new();
+    let mut rows_json: Vec<Json> = Vec::new();
     for (admission, victim, a_name, v_name) in [
         (AdmissionPolicy::Fifo, VictimPolicy::Newest, "fifo", "newest"),
         (AdmissionPolicy::slo(), VictimPolicy::Newest, "slo", "newest"),
@@ -71,6 +98,16 @@ fn main() {
             format!("{:.1}", lat.e2e_p99),
             format!("{:.2}", lat.goodput_rps),
         ]);
+        rows_json.push(obj(vec![
+            ("admission", Json::Str(a_name.into())),
+            ("victim", Json::Str(v_name.into())),
+            ("completed", Json::Num(lat.completed as f64)),
+            ("rejected", Json::Num(lat.rejected as f64)),
+            ("expired", Json::Num(lat.expired as f64)),
+            ("wall_s", Json::Num(report.wall_secs)),
+            ("e2e_p99_s", Json::Num(lat.e2e_p99)),
+            ("goodput_req_s", Json::Num(lat.goodput_rps)),
+        ]));
     }
     t.print();
     t.print_csv("goodput_overload");
@@ -89,9 +126,58 @@ fn main() {
         goodput[2],
         goodput[0]
     );
+    let slo_gain = goodput[1] / goodput[0].max(1e-12);
+    let weighted_gain = goodput[2] / goodput[0].max(1e-12);
     println!(
-        "\nSLO admission goodput gain over FIFO: {:.1}x (newest), {:.1}x (weighted)",
-        goodput[1] / goodput[0].max(1e-12),
-        goodput[2] / goodput[0].max(1e-12),
+        "\nSLO admission goodput gain over FIFO: {slo_gain:.1}x (newest), \
+         {weighted_gain:.1}x (weighted)"
     );
+
+    // --- artifact: check against the committed floors, or rewrite -----
+    let path = artifact_path();
+    if check_mode {
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {path}: {e} — commit the bench artifact"));
+        let doc = Json::parse(&text).expect("parse committed artifact");
+        let budgets = doc.req("budgets");
+        let measured =
+            [("slo_over_fifo_min", slo_gain), ("weighted_over_fifo_min", weighted_gain)];
+        for (key, got) in measured {
+            let floor = budgets.req(key).as_f64().expect("budget is a number");
+            assert!(
+                got >= floor,
+                "budget {key}: measured {got:.4} under committed floor {floor:.4}"
+            );
+            println!("check {key}: {got:.3} >= floor {floor:.3}  ok");
+        }
+        println!("--check passed against {path}");
+        return;
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::Str("goodput_overload".into())),
+        ("version", Json::Num(1.0)),
+        ("model", Json::Str(ModelSpec::mixtral_8x7b().name.to_string())),
+        ("p", Json::Num(p as f64)),
+        ("g", Json::Num(g as f64)),
+        ("requests", Json::Num(k as f64)),
+        ("slo_e2e_s", Json::Num(slo)),
+        ("arrival_rate", Json::Num(rate)),
+        ("rows", Json::Arr(rows_json)),
+        (
+            "budgets",
+            obj(BUDGETS.iter().map(|&(bk, v)| (bk, Json::Num(v))).collect()),
+        ),
+        (
+            "note",
+            Json::Str(
+                "refresh with `cargo bench --bench goodput_overload` from rust/; \
+                 the run is virtual-clock deterministic, budgets gate direction \
+                 (SLO policies must beat FIFO), not percent-level drift"
+                    .into(),
+            ),
+        ),
+    ]);
+    std::fs::write(&path, format!("{doc}\n")).expect("write bench artifact");
+    println!("wrote {path}");
 }

@@ -105,9 +105,11 @@ pub struct Violation {
 }
 
 /// Modules whose time must be virtual/replayable (wall-clock and
-/// unordered-iteration scope).
+/// unordered-iteration scope). `cluster` interleaves N replica-local
+/// virtual clocks, so a wall-clock read or an unordered container there
+/// breaks multi-replica replay just as badly as in `simhw`.
 pub const DET_MODULES: &[&str] =
-    &["simhw", "perfmodel", "baselines", "sched", "kvcache", "workload"];
+    &["simhw", "perfmodel", "baselines", "sched", "kvcache", "workload", "cluster"];
 /// Accounting / cost-model modules (unchecked-cast scope).
 pub const CAST_MODULES: &[&str] = &["metrics", "perfmodel", "simhw", "sched", "kvcache"];
 /// Library hot paths (panic-policy scope).
@@ -117,7 +119,7 @@ pub const PANIC_MODULES: &[&str] = &["engine", "sched", "kvcache", "transfer"];
 pub const ATOMIC_MODULES: &[&str] = &["cpuattn", "engine", "transfer"];
 /// Deterministic-order modules (nondeterministic-order scope): replay
 /// and golden traces depend on container visit order here.
-pub const NONDET_MODULES: &[&str] = &["sched", "simhw", "kvcache", "workload"];
+pub const NONDET_MODULES: &[&str] = &["sched", "simhw", "kvcache", "workload", "cluster"];
 /// Accounting modules where f32→f64 laundering corrupts cost arithmetic
 /// (precision-laundering scope).
 pub const PRECISION_MODULES: &[&str] = &["perfmodel", "metrics"];
@@ -638,9 +640,12 @@ mod tests {
     fn module_scoping() {
         assert!(in_modules("src/sched/policy.rs", DET_MODULES));
         assert!(in_modules("src/simhw.rs", DET_MODULES));
+        assert!(in_modules("src/cluster/router.rs", DET_MODULES));
+        assert!(in_modules("src/cluster/mod.rs", NONDET_MODULES));
         assert!(!in_modules("src/schedx/policy.rs", DET_MODULES));
         assert!(!in_modules("src/engine/batch.rs", DET_MODULES));
         assert!(!in_modules("benches/sched/x.rs", DET_MODULES));
+        assert!(!in_modules("src/clusterx/mod.rs", DET_MODULES));
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Deterministic fault injection for the cluster simulator.
+//!
+//! A [`FaultPlan`] is a time-sorted list of per-replica events — crash,
+//! drain, or transient slowdown — applied at pass boundaries of the
+//! target replica's local virtual clock (a fault can't land mid-pass any
+//! more than a real signal can interrupt a CUDA graph launch; the
+//! simulator's passes are atomic). Plans come from three constructors:
+//! explicit events ([`new`](FaultPlan::new)), a CLI spec string
+//! ([`parse`](FaultPlan::parse)), or a seeded generator
+//! ([`random`](FaultPlan::random)) for randomized-but-reproducible
+//! recovery tests. The empty plan ([`none`](FaultPlan::none)) is the
+//! default everywhere and leaves the cluster's behavior f64-identical to
+//! fault-free serving.
+
+use std::collections::VecDeque;
+
+use crate::util::cast::usize_f64;
+use crate::util::Rng;
+
+/// What happens to the target replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The replica dies at the next pass boundary: queued and in-flight
+    /// requests are extracted and handed to the recovery machinery
+    /// (in-flight sequences lose their KV and replay like preemption
+    /// victims); the replica never executes or admits again.
+    Crash,
+    /// Planned maintenance: stop admitting, finish in-flight work.
+    /// Nothing is lost or re-routed.
+    Drain,
+    /// Transient degradation: passes starting in `[at_secs, until_secs)`
+    /// have every execution lane stretched by `factor` (≥ 1), modelling
+    /// e.g. a memory-bandwidth or thermal throttle. Overlapping windows
+    /// take the worst factor.
+    Slow { until_secs: f64, factor: f64 },
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time the fault takes effect (at the target's next pass
+    /// boundary at or after this).
+    pub at_secs: f64,
+    /// Target replica index.
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// A validated, time-sorted fault schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, cluster behavior f64-identical to
+    /// fault-free serving.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Build a plan from explicit events. Panics on non-finite times,
+    /// slowdown factors < 1, or inverted slow windows — a malformed plan
+    /// is programmer error, not data. Events are stably sorted by
+    /// (time, replica) so application order is deterministic.
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        for ev in &events {
+            assert!(ev.at_secs.is_finite() && ev.at_secs >= 0.0, "fault time must be finite and non-negative");
+            if let FaultKind::Slow { until_secs, factor } = ev.kind {
+                assert!(until_secs.is_finite() && until_secs >= ev.at_secs, "slow window must end at or after it starts");
+                assert!(factor.is_finite() && factor >= 1.0, "slowdown factor must be >= 1 (a speedup is not a fault)");
+            }
+        }
+        events.sort_by(|a, b| {
+            a.at_secs
+                .partial_cmp(&b.at_secs)
+                .expect("finite fault times")
+                .then_with(|| a.replica.cmp(&b.replica))
+        });
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Split into per-replica queues (each time-sorted, inheriting the
+    /// plan's global order). Panics if an event targets a replica index
+    /// outside `0..n`.
+    pub fn split(&self, n: usize) -> Vec<VecDeque<FaultEvent>> {
+        let mut qs: Vec<VecDeque<FaultEvent>> = (0..n).map(|_| VecDeque::new()).collect();
+        for ev in &self.events {
+            assert!(
+                ev.replica < n,
+                "fault event targets replica {} but the cluster has {n} replicas",
+                ev.replica
+            );
+            qs[ev.replica].push_back(*ev);
+        }
+        qs
+    }
+
+    /// Parse a comma-separated CLI spec. Grammar per event:
+    ///
+    /// * `crash@T:rI`    — crash replica I at time T
+    /// * `drain@T:rI`    — drain replica I at time T
+    /// * `slow@T+D*F:rI` — slow replica I by factor F for D seconds from T
+    ///
+    /// e.g. `crash@12.5:r0,slow@5+10*2:r2`. An empty string or `none`
+    /// yields the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultPlan::none());
+        }
+        let mut events = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (head, rep) = part
+                .rsplit_once(":r")
+                .ok_or_else(|| format!("fault '{part}': expected '<kind>@<time>:r<replica>'"))?;
+            let replica: usize = rep
+                .parse()
+                .map_err(|_| format!("fault '{part}': bad replica index '{rep}'"))?;
+            let (kind, time) = head
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{part}': expected '<kind>@<time>'"))?;
+            let num = |s: &str, what: &str| -> Result<f64, String> {
+                let v: f64 = s
+                    .parse()
+                    .map_err(|_| format!("fault '{part}': bad {what} '{s}'"))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("fault '{part}': {what} must be finite and non-negative"));
+                }
+                Ok(v)
+            };
+            let ev = match kind {
+                "crash" => FaultEvent { at_secs: num(time, "time")?, replica, kind: FaultKind::Crash },
+                "drain" => FaultEvent { at_secs: num(time, "time")?, replica, kind: FaultKind::Drain },
+                "slow" => {
+                    let (t, rest) = time.split_once('+').ok_or_else(|| {
+                        format!("fault '{part}': slow wants '<time>+<duration>*<factor>'")
+                    })?;
+                    let (d, f) = rest.split_once('*').ok_or_else(|| {
+                        format!("fault '{part}': slow wants '<time>+<duration>*<factor>'")
+                    })?;
+                    let at = num(t, "time")?;
+                    let dur = num(d, "duration")?;
+                    let factor = num(f, "factor")?;
+                    if factor < 1.0 {
+                        return Err(format!(
+                            "fault '{part}': slowdown factor must be >= 1 (a speedup is not a fault)"
+                        ));
+                    }
+                    FaultEvent {
+                        at_secs: at,
+                        replica,
+                        kind: FaultKind::Slow { until_secs: at + dur, factor },
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "fault '{part}': unknown kind '{other}' (expected crash | drain | slow)"
+                    ))
+                }
+            };
+            events.push(ev);
+        }
+        Ok(FaultPlan::new(events))
+    }
+
+    /// Seeded random plan for randomized-but-reproducible recovery tests:
+    /// one event per replica in `1..replicas` (replica 0 is always left
+    /// untouched so the cluster keeps a guaranteed survivor), each
+    /// landing uniformly in the middle 10–90% of `horizon_secs`.
+    pub fn random(replicas: usize, horizon_secs: f64, seed: u64) -> FaultPlan {
+        assert!(horizon_secs > 0.0 && horizon_secs.is_finite(), "fault horizon must be positive and finite");
+        let mut rng = Rng::new(seed ^ 0xFA17_FA17);
+        let mut events = Vec::new();
+        for replica in 1..replicas {
+            let at_secs = horizon_secs * usize_f64(rng.range(10, 90)) / 100.0;
+            let kind = match rng.below(3) {
+                0 => FaultKind::Crash,
+                1 => FaultKind::Drain,
+                _ => FaultKind::Slow {
+                    until_secs: at_secs + horizon_secs / 4.0,
+                    factor: 1.0 + usize_f64(rng.range(1, 3)) * 0.5,
+                },
+            };
+            events.push(FaultEvent { at_secs, replica, kind });
+        }
+        FaultPlan::new(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_reads_all_three_kinds_and_sorts_by_time() {
+        let plan = FaultPlan::parse("crash@12.5:r0,drain@30:r1,slow@5+10*2:r2").unwrap();
+        let evs = plan.events();
+        assert_eq!(evs.len(), 3);
+        // Sorted by time: slow@5, crash@12.5, drain@30.
+        assert_eq!(evs[0].replica, 2);
+        assert_eq!(
+            evs[0].kind,
+            FaultKind::Slow { until_secs: 15.0, factor: 2.0 }
+        );
+        assert_eq!(evs[1].replica, 0);
+        assert_eq!(evs[1].kind, FaultKind::Crash);
+        assert!((evs[1].at_secs - 12.5).abs() < 1e-12);
+        assert_eq!(evs[2].replica, 1);
+        assert_eq!(evs[2].kind, FaultKind::Drain);
+    }
+
+    #[test]
+    fn parse_accepts_empty_and_none_as_the_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        assert!(FaultPlan::parse("  none  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("reboot@5:r0").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("crash@5").is_err(), "missing replica");
+        assert!(FaultPlan::parse("crash@abc:r0").is_err(), "bad time");
+        assert!(FaultPlan::parse("crash@inf:r0").is_err(), "non-finite time");
+        assert!(FaultPlan::parse("slow@5:r0").is_err(), "slow without window");
+        assert!(FaultPlan::parse("slow@5+10*0.5:r0").is_err(), "speedup factor");
+        assert!(FaultPlan::parse("crash@5:rx").is_err(), "bad replica index");
+    }
+
+    #[test]
+    fn split_routes_events_to_their_replica_in_time_order() {
+        let plan =
+            FaultPlan::parse("drain@30:r1,crash@12.5:r1,slow@5+1*2:r0").unwrap();
+        let qs = plan.split(2);
+        assert_eq!(qs[0].len(), 1);
+        assert_eq!(qs[1].len(), 2);
+        assert!(qs[1][0].at_secs < qs[1][1].at_secs, "per-replica queues stay sorted");
+    }
+
+    #[test]
+    #[should_panic(expected = "targets replica")]
+    fn split_rejects_out_of_range_replicas() {
+        FaultPlan::parse("crash@5:r3").unwrap().split(2);
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic_and_spare_replica_zero() {
+        let a = FaultPlan::random(4, 100.0, 9);
+        let b = FaultPlan::random(4, 100.0, 9);
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::random(4, 100.0, 10));
+        assert_eq!(a.events().len(), 3);
+        for ev in a.events() {
+            assert!(ev.replica >= 1, "replica 0 must survive a random plan");
+            assert!(ev.at_secs >= 10.0 && ev.at_secs <= 90.0);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Per-replica health tracking from pass telemetry.
+//!
+//! The cluster has no out-of-band failure detector: everything it knows
+//! about a replica comes from the fault plan's explicit state flips
+//! (crash/drain) and from the pass durations the replica itself reports.
+//! A dual-rate EWMA over pass duration turns the latter into a
+//! *suspicion* score — "how much slower is this replica running right now
+//! than its own long-run norm" — which the deadline-aware router uses to
+//! discount a degraded replica's capacity before the degradation shows up
+//! in its queue depth.
+
+/// Lifecycle state of a replica as the cluster sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Serving and admitting new requests.
+    Up,
+    /// Finishing in-flight work but admitting nothing new (planned
+    /// maintenance). A draining replica loses no requests: it keeps
+    /// executing passes until its scheduler drains.
+    Draining,
+    /// Dead. Its queued and in-flight requests were extracted at the
+    /// crash boundary and handed to the recovery machinery; it executes
+    /// no further passes and is never routed to again.
+    Crashed,
+}
+
+/// Smoothing factor of the fast (recent-window) pass-duration EWMA.
+pub const FAST_ALPHA: f64 = 0.5;
+/// Smoothing factor of the slow (long-run norm) pass-duration EWMA.
+pub const SLOW_ALPHA: f64 = 0.05;
+
+/// Health view of one replica: lifecycle state plus the dual-rate pass
+/// duration EWMA behind [`suspicion`](Self::suspicion).
+#[derive(Debug, Clone)]
+pub struct ReplicaHealth {
+    pub state: ReplicaState,
+    fast: f64,
+    slow: f64,
+    seen: bool,
+}
+
+impl ReplicaHealth {
+    pub fn new() -> Self {
+        ReplicaHealth { state: ReplicaState::Up, fast: 0.0, slow: 0.0, seen: false }
+    }
+
+    /// Whether the router may send new requests here.
+    pub fn admitting(&self) -> bool {
+        self.state == ReplicaState::Up
+    }
+
+    /// Feed one observed pass duration (virtual seconds) into both EWMAs.
+    /// The first observation seeds both rails so `suspicion` starts at
+    /// exactly 1.0 instead of diverging off a zero denominator.
+    pub fn observe_pass(&mut self, dur: f64) {
+        if !self.seen {
+            self.fast = dur;
+            self.slow = dur;
+            self.seen = true;
+            return;
+        }
+        self.fast += FAST_ALPHA * (dur - self.fast);
+        self.slow += SLOW_ALPHA * (dur - self.slow);
+    }
+
+    /// Recent-vs-norm pass duration ratio, clamped to ≥ 1.0: a healthy
+    /// replica (or one with no passes yet) scores exactly 1.0, and a
+    /// replica whose recent passes run k× its long-run norm scores ~k.
+    /// The clamp means a replica is never rewarded for a *fast* recent
+    /// window — suspicion only ever discounts capacity.
+    pub fn suspicion(&self) -> f64 {
+        if !self.seen || self.slow <= 0.0 {
+            return 1.0;
+        }
+        (self.fast / self.slow).max(1.0)
+    }
+}
+
+impl Default for ReplicaHealth {
+    fn default() -> Self {
+        ReplicaHealth::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_replica_is_up_and_unsuspicious() {
+        let h = ReplicaHealth::new();
+        assert!(h.admitting());
+        assert!((h.suspicion() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn steady_passes_keep_suspicion_at_one() {
+        let mut h = ReplicaHealth::new();
+        for _ in 0..50 {
+            h.observe_pass(2.0);
+        }
+        assert!((h.suspicion() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sudden_slowdown_raises_suspicion_quickly() {
+        let mut h = ReplicaHealth::new();
+        for _ in 0..50 {
+            h.observe_pass(2.0);
+        }
+        // Three slow passes: the fast rail chases 6.0 while the slow rail
+        // barely moves, so the ratio approaches the 3x degradation.
+        for _ in 0..3 {
+            h.observe_pass(6.0);
+        }
+        let s = h.suspicion();
+        assert!(s > 2.0, "suspicion {s} should reflect the 3x slowdown");
+        assert!(s < 3.5, "suspicion {s} cannot exceed the degradation by much");
+    }
+
+    #[test]
+    fn suspicion_never_drops_below_one() {
+        let mut h = ReplicaHealth::new();
+        for _ in 0..50 {
+            h.observe_pass(4.0);
+        }
+        // A recent *fast* window must not produce suspicion < 1 (that
+        // would let the router over-commit a briefly idle replica).
+        for _ in 0..5 {
+            h.observe_pass(1.0);
+        }
+        assert!((h.suspicion() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn draining_and_crashed_stop_admission() {
+        let mut h = ReplicaHealth::new();
+        h.state = ReplicaState::Draining;
+        assert!(!h.admitting());
+        h.state = ReplicaState::Crashed;
+        assert!(!h.admitting());
+    }
+}

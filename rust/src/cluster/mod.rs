@@ -1,0 +1,700 @@
+//! Fault-tolerant multi-replica serving on the virtual clock.
+//!
+//! N identical [`SimMachine`] replicas run on replica-local virtual
+//! clocks under one discrete-event driver. A pluggable [`Router`] seam
+//! assigns each arrival to an admitting replica; a deterministic
+//! [`FaultPlan`] injects crashes, drains, and transient slowdowns at
+//! pass boundaries; and the recovery machinery re-routes a crashed
+//! replica's stranded requests to survivors — queued requests move with
+//! no work lost, in-flight sequences lose their KV and replay like
+//! preemption victims (priced by the §8.2-contended re-prefill cost the
+//! weighted victim policy uses). Per-replica [`RequestTracker`]s roll up
+//! into one cluster-level latency view with rerouted / replayed / failed
+//! counters.
+//!
+//! Two invariants anchor the design, both asserted in every run:
+//!
+//! * **Identity** — a 1-replica cluster with the empty fault plan drives
+//!   the same stepping primitives as [`SimMachine`]'s own serving loop in
+//!   the same order, so its trace is f64-identical to single-machine
+//!   serving.
+//! * **Conservation** — every admitted request resolves exactly once:
+//!   finished, rejected, expired, or failed. Crashes move requests
+//!   around; they never silently lose them.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::kvcache::SeqId;
+use crate::metrics::{LatencyStats, RequestTracker, RunReport, Trace};
+use crate::model::{Request, Sequence};
+use crate::sched::DropReason;
+use crate::simhw::{PassState, SimConfig, SimMachine};
+use crate::util::cast::usize_f64;
+use crate::workload::duplicate_id;
+
+pub mod faults;
+pub mod health;
+pub mod router;
+
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
+pub use health::{ReplicaHealth, ReplicaState};
+pub use router::{ReplicaView, Router, RouterPolicy};
+
+/// Cluster deployment: N identical replicas plus the fault-tolerance
+/// knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Per-replica deployment (replicas are identical machines).
+    pub replica: SimConfig,
+    pub replicas: usize,
+    pub router: RouterPolicy,
+    pub faults: FaultPlan,
+    /// How many times a crash casualty may be re-enqueued before the
+    /// cluster gives up on it (0 = no failover: casualties fail at the
+    /// first crash).
+    pub max_retries: usize,
+    /// Linear re-route backoff: attempt k is re-enqueued k × this many
+    /// virtual seconds after the crash boundary.
+    pub backoff_secs: f64,
+}
+
+impl ClusterConfig {
+    pub fn new(replica: SimConfig, replicas: usize) -> Self {
+        assert!(replicas >= 1, "a cluster needs at least one replica");
+        ClusterConfig {
+            replica,
+            replicas,
+            router: RouterPolicy::RoundRobin,
+            faults: FaultPlan::none(),
+            max_retries: 2,
+            backoff_secs: 0.05,
+        }
+    }
+
+    pub fn with_router(mut self, router: RouterPolicy) -> Self {
+        self.router = router;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+}
+
+/// Everything a cluster run produces.
+pub struct ClusterReport {
+    /// Per-replica execution traces (a crashed replica's trace ends at
+    /// its crash boundary).
+    pub traces: Vec<Trace>,
+    /// Per-replica pass-level reports (request counts are submissions to
+    /// that replica, so a re-routed request counts on its new host).
+    pub reports: Vec<RunReport>,
+    /// Cluster-level per-request latency summary, including the
+    /// rerouted / replayed / failed recovery counters.
+    pub stats: LatencyStats,
+    /// The rolled-up tracker behind `stats`.
+    pub tracker: RequestTracker,
+    /// Final lifecycle state of each replica.
+    pub replica_states: Vec<ReplicaState>,
+    /// Submissions per replica (arrivals + re-routes).
+    pub admitted: Vec<usize>,
+}
+
+/// A crash casualty waiting to be re-routed.
+struct RetryEntry {
+    /// Virtual time the re-route becomes due (crash boundary + backoff).
+    due: f64,
+    /// Replica it was extracted from — its timings (and, if the cluster
+    /// gives up, its terminal drop stamp) live on that tracker.
+    from: usize,
+    seq: Sequence,
+}
+
+/// The multi-replica discrete-event driver.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    machines: Vec<SimMachine>,
+    states: Vec<PassState>,
+    trackers: Vec<RequestTracker>,
+    health: Vec<ReplicaHealth>,
+    /// Active transient-slowdown windows per replica: (from, until,
+    /// factor).
+    slow: Vec<Vec<(f64, f64, f64)>>,
+    fault_q: Vec<VecDeque<FaultEvent>>,
+    router: Box<dyn Router>,
+    pending: VecDeque<(f64, Request)>,
+    /// Time-sorted re-route queue (stable order: due, then id).
+    retry: Vec<RetryEntry>,
+    /// Re-enqueue attempts per casualty id (persists across repeated
+    /// crashes of the same request).
+    retry_count: BTreeMap<SeqId, usize>,
+    admitted: Vec<usize>,
+    /// Arrivals that found no admitting replica at all — tracked here so
+    /// conservation still covers them.
+    unrouted: RequestTracker,
+    rerouted: usize,
+    replayed: usize,
+    failed: usize,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        assert!(cfg.replicas >= 1, "a cluster needs at least one replica");
+        assert!(
+            cfg.backoff_secs.is_finite() && cfg.backoff_secs >= 0.0,
+            "re-route backoff must be finite and non-negative"
+        );
+        let machines: Vec<SimMachine> =
+            (0..cfg.replicas).map(|_| SimMachine::new(cfg.replica.clone())).collect();
+        let states: Vec<PassState> = machines.iter().map(SimMachine::begin_run).collect();
+        let fault_q = cfg.faults.split(cfg.replicas);
+        let router = cfg.router.build();
+        let n = cfg.replicas;
+        Cluster {
+            cfg,
+            machines,
+            states,
+            trackers: (0..n).map(|_| RequestTracker::new()).collect(),
+            health: (0..n).map(|_| ReplicaHealth::new()).collect(),
+            slow: (0..n).map(|_| Vec::new()).collect(),
+            fault_q,
+            router,
+            pending: VecDeque::new(),
+            retry: Vec::new(),
+            retry_count: BTreeMap::new(),
+            admitted: vec![0; n],
+            unrouted: RequestTracker::new(),
+            rerouted: 0,
+            replayed: 0,
+            failed: 0,
+        }
+    }
+
+    /// Serve a timed arrival stream across the cluster. The driver is a
+    /// discrete-event loop: at each step it either injects the next due
+    /// arrival / re-route (when its timestamp is at or before the
+    /// earliest working replica's clock, or when the whole cluster is
+    /// idle), or executes one pass on the replica with the smallest local
+    /// clock. With one replica and no faults this reduces exactly to
+    /// [`SimMachine`]'s serving loop.
+    pub fn run_online(
+        mut self,
+        mut arrivals: Vec<(f64, Request)>,
+        slo_e2e: f64,
+    ) -> ClusterReport {
+        if let Some(dup) = duplicate_id(&arrivals) {
+            panic!(
+                "duplicate request id {dup} in arrival stream — per-request \
+                 latency tracking requires unique ids"
+            );
+        }
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("non-NaN arrival times"));
+        let n_req = arrivals.len();
+        self.pending = arrivals.into();
+
+        loop {
+            let exec = self.pick_executor();
+            let ta = self.pending.front().map(|&(t, _)| t);
+            let td = self.retry.first().map(|e| e.due);
+            // Next injectable item; arrivals win timestamp ties (a
+            // re-route is conceptually a *re*-submission).
+            let inject = match (ta, td) {
+                (Some(a), Some(d)) if d < a => Some((d, true)),
+                (Some(a), _) => Some((a, false)),
+                (None, Some(d)) => Some((d, true)),
+                (None, None) => None,
+            };
+            match (inject, exec) {
+                (Some((t, is_retry)), Some(i)) if t <= self.states[i].now => {
+                    if is_retry {
+                        self.inject_retry();
+                    } else {
+                        self.inject_arrival();
+                    }
+                }
+                (_, Some(i)) => self.execute(i),
+                (Some((_, is_retry)), None) => {
+                    // Whole cluster idle: the injection target's clock
+                    // jumps to the item's timestamp (the single-machine
+                    // idle jump, per replica).
+                    if is_retry {
+                        self.inject_retry();
+                    } else {
+                        self.inject_arrival();
+                    }
+                }
+                (None, None) => break,
+            }
+        }
+
+        // Degraded shutdown: every replica — up, draining, or crashed —
+        // must end with a drained scheduler (crash extraction guarantees
+        // it for the dead; drains run to completion).
+        for (i, m) in self.machines.iter().enumerate() {
+            assert!(m.sched.is_done(), "replica {i} ended with an undrained scheduler");
+        }
+        let tracker =
+            RequestTracker::rollup(self.trackers.iter().chain(std::iter::once(&self.unrouted)));
+        // Conservation: crashes move requests, they never lose them.
+        let lost = tracker.unresolved();
+        assert!(
+            lost.is_empty(),
+            "requests lost by the cluster (neither finished nor dropped): {lost:?}"
+        );
+        let wall = self.states.iter().map(|st| st.trace.wall_secs()).fold(0.0f64, f64::max);
+        let mut stats = tracker.stats(wall, slo_e2e);
+        assert_eq!(stats.requests, n_req, "every request must be tracked exactly once");
+        assert_eq!(
+            stats.completed + stats.rejected + stats.expired,
+            n_req,
+            "request conservation: finished + rejected + expired must cover the stream"
+        );
+        stats.rerouted = self.rerouted;
+        stats.replayed = self.replayed;
+        stats.failed = self.failed;
+        let traces: Vec<Trace> = self.states.into_iter().map(|st| st.trace).collect();
+        let reports: Vec<RunReport> = traces
+            .iter()
+            .zip(&self.admitted)
+            .map(|(t, &n)| RunReport::from_trace(t, n))
+            .collect();
+        ClusterReport {
+            traces,
+            reports,
+            stats,
+            tracker,
+            replica_states: self.health.iter().map(|h| h.state).collect(),
+            admitted: self.admitted,
+        }
+    }
+
+    /// The non-crashed replica with live work and the smallest local
+    /// clock (ties break to the lowest index); `None` when the whole
+    /// cluster is idle.
+    fn pick_executor(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.machines.len() {
+            if self.health[i].state == ReplicaState::Crashed {
+                continue;
+            }
+            if !self.machines[i].has_live_work(&self.states[i]) {
+                continue;
+            }
+            if best.is_none_or(|b| self.states[i].now < self.states[b].now) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Execute one pass on replica `i`, applying its due fault events at
+    /// the pass boundary first.
+    fn execute(&mut self, i: usize) {
+        let boundary = self.states[i].now;
+        self.apply_faults(i, boundary);
+        if self.health[i].state == ReplicaState::Crashed {
+            return;
+        }
+        if !self.machines[i].has_live_work(&self.states[i]) {
+            return;
+        }
+        let factor = self.slow_factor(i, boundary);
+        if let Some(dur) =
+            self.machines[i].step_pass(&mut self.states[i], Some(&mut self.trackers[i]), factor)
+        {
+            self.health[i].observe_pass(dur);
+        }
+    }
+
+    /// Route the next pending arrival to an admitting replica (or fail it
+    /// at the door when none survives).
+    fn inject_arrival(&mut self) {
+        let (t, r) =
+            self.pending.pop_front().expect("inject_arrival requires a pending arrival");
+        self.catch_up_idle_faults(t);
+        let views = self.views();
+        if views.is_empty() {
+            self.unrouted.arrived(r.id, t);
+            self.unrouted.dropped(r.id, t, DropReason::Expired);
+            self.failed += 1;
+            return;
+        }
+        let j = self.router.route(&r, t, &views);
+        let was_idle = !self.machines[j].has_live_work(&self.states[j]);
+        self.trackers[j].arrived(r.id, t);
+        self.admitted[j] += 1;
+        self.machines[j].sched.submit_at(r, t);
+        if was_idle {
+            self.states[j].now = self.states[j].now.max(t);
+        }
+    }
+
+    /// Re-route the next due crash casualty. SLO-style graceful
+    /// degradation: a deadline request is only re-admitted if some
+    /// survivor can plausibly finish it (its backlog plus the casualty's
+    /// remaining work — a full re-prefill for replays — fits the slack);
+    /// otherwise it fails here instead of wasting survivor capacity.
+    fn inject_retry(&mut self) {
+        let e = self.retry.remove(0);
+        self.catch_up_idle_faults(e.due);
+        let views = self.views();
+        if views.is_empty() {
+            self.fail(e.from, e.seq.id(), e.due);
+            return;
+        }
+        if let Some(deadline) = e.seq.req.deadline {
+            let feasible = views.iter().any(|v| {
+                let service = &self.machines[v.index].sched.cfg.service;
+                v.now.max(e.due) + v.backlog_secs + service.predicted_remaining(&e.seq)
+                    <= deadline
+            });
+            if !feasible {
+                self.fail(e.from, e.seq.id(), e.due);
+                return;
+            }
+        }
+        let j = self.router.route(&e.seq.req, e.due, &views);
+        let was_idle = !self.machines[j].has_live_work(&self.states[j]);
+        // The new host's tracker records the *original* arrival so
+        // end-to-end latency keeps charging the disruption.
+        self.trackers[j].arrived(e.seq.id(), e.seq.arrival);
+        self.admitted[j] += 1;
+        self.machines[j].sched.resubmit(e.seq);
+        if was_idle {
+            self.states[j].now = self.states[j].now.max(e.due);
+        }
+    }
+
+    /// Snapshot every admitting replica for a routing decision.
+    fn views(&self) -> Vec<ReplicaView> {
+        (0..self.machines.len())
+            .filter(|&i| self.health[i].admitting())
+            .map(|i| ReplicaView {
+                index: i,
+                now: self.states[i].now,
+                queued: self.machines[i].sched.queued(),
+                active_decode: self.machines[i].sched.active_decode(),
+                backlog_secs: self.machines[i]
+                    .sched
+                    .live_predicted_secs(&self.machines[i].sched.cfg.service),
+                suspicion: self.health[i].suspicion(),
+            })
+            .collect()
+    }
+
+    /// Apply replica `i`'s fault events due at or before `t_ref`.
+    fn apply_faults(&mut self, i: usize, t_ref: f64) {
+        while let Some(ev) = self.fault_q[i].front().copied() {
+            if ev.at_secs > t_ref {
+                break;
+            }
+            self.fault_q[i].pop_front();
+            match ev.kind {
+                FaultKind::Crash => {
+                    self.fault_q[i].clear(); // nothing after death matters
+                    self.crash(i);
+                    return;
+                }
+                FaultKind::Drain => {
+                    if self.health[i].state == ReplicaState::Up {
+                        self.health[i].state = ReplicaState::Draining;
+                    }
+                }
+                FaultKind::Slow { until_secs, factor } => {
+                    self.slow[i].push((ev.at_secs, until_secs, factor));
+                }
+            }
+        }
+    }
+
+    /// Idle replicas' clocks lag the cluster; before a routing decision
+    /// at time `t`, bring their fault state up to date so a replica that
+    /// crashed or drained *before* `t` is not offered as a candidate.
+    /// Working replicas apply their own faults at execution boundaries.
+    fn catch_up_idle_faults(&mut self, t: f64) {
+        for i in 0..self.machines.len() {
+            if self.health[i].state != ReplicaState::Crashed
+                && !self.machines[i].has_live_work(&self.states[i])
+            {
+                let t_ref = self.states[i].now.max(t);
+                self.apply_faults(i, t_ref);
+            }
+        }
+    }
+
+    /// Kill replica `i` at its current pass boundary: extract its queued
+    /// and in-flight sequences and hand them to the retry machinery.
+    fn crash(&mut self, i: usize) {
+        self.health[i].state = ReplicaState::Crashed;
+        let boundary = self.states[i].now;
+        let m = &mut self.machines[i];
+        let live = m.sched.extract_live(&mut m.kv);
+        for seq in live {
+            // `started()` survives the extraction's preempt (it counts
+            // preemptions), so it cleanly separates requests that lose
+            // re-prefill work from queued ones that move for free.
+            if seq.started() {
+                self.replayed += 1;
+            } else {
+                self.rerouted += 1;
+            }
+            let id = seq.id();
+            let tries = self.retry_count.get(&id).copied().unwrap_or(0) + 1;
+            self.retry_count.insert(id, tries);
+            if tries > self.cfg.max_retries {
+                self.fail(i, id, boundary);
+                continue;
+            }
+            self.retry.push(RetryEntry {
+                due: boundary + self.cfg.backoff_secs * usize_f64(tries),
+                from: i,
+                seq,
+            });
+        }
+        self.retry.sort_by(|a, b| {
+            a.due
+                .partial_cmp(&b.due)
+                .expect("finite retry deadlines")
+                .then_with(|| a.seq.id().cmp(&b.seq.id()))
+        });
+    }
+
+    /// Give up on a casualty: terminal Expired drop on the tracker that
+    /// holds its timings, plus the failed counter.
+    fn fail(&mut self, from: usize, id: SeqId, t: f64) {
+        self.trackers[from].dropped(id, t, DropReason::Expired);
+        self.failed += 1;
+    }
+
+    /// The worst active slowdown factor for replica `i` at time `now`
+    /// (1.0 — bit-identity — when no window is active).
+    fn slow_factor(&self, i: usize, now: f64) -> f64 {
+        let mut f = 1.0;
+        for &(from, until, factor) in &self.slow[i] {
+            if from <= now && now < until {
+                f = f.max(factor);
+            }
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::sched::{AdmissionPolicy, VictimPolicy};
+    use crate::util::cast::usize_u64;
+    use crate::util::Rng;
+
+    fn small_cfg(kv_gb: u64) -> SimConfig {
+        SimConfig::moe_lens(ModelSpec::mixtral_8x7b(), kv_gb)
+    }
+
+    fn poisson(rate: f64, k: usize, p: usize, g: usize, seed: u64) -> Vec<(f64, Request)> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        (0..k)
+            .map(|i| {
+                t += rng.exponential(rate);
+                (t, Request::new(usize_u64(i), vec![1; p], g))
+            })
+            .collect()
+    }
+
+    fn assert_traces_f64_identical(a: &Trace, b: &Trace) {
+        assert_eq!(a.passes.len(), b.passes.len(), "pass counts differ");
+        for (x, y) in a.passes.iter().zip(&b.passes) {
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits(), "pass {}", x.pass_id);
+            assert_eq!(x.duration.to_bits(), y.duration.to_bits(), "pass {}", x.pass_id);
+            assert_eq!(x.io_time.to_bits(), y.io_time.to_bits(), "pass {}", x.pass_id);
+            assert_eq!(x.gpu_time.to_bits(), y.gpu_time.to_bits(), "pass {}", x.pass_id);
+            assert_eq!(x.cpu_time.to_bits(), y.cpu_time.to_bits(), "pass {}", x.pass_id);
+            assert_eq!(
+                x.overlap_time.to_bits(),
+                y.overlap_time.to_bits(),
+                "pass {}",
+                x.pass_id
+            );
+            assert_eq!(x.host_time.to_bits(), y.host_time.to_bits(), "pass {}", x.pass_id);
+            assert_eq!(
+                x.host_overlap_time.to_bits(),
+                y.host_overlap_time.to_bits(),
+                "pass {}",
+                x.pass_id
+            );
+            assert_eq!(x.generated, y.generated, "pass {}", x.pass_id);
+            assert_eq!(x.finished, y.finished, "pass {}", x.pass_id);
+            assert_eq!(x.preempted, y.preempted, "pass {}", x.pass_id);
+        }
+    }
+
+    fn assert_lane_partition(trace: &Trace) {
+        for p in &trace.passes {
+            assert!(
+                (p.lanes_total() - p.duration).abs() < 1e-9,
+                "pass {}: lanes {} vs duration {}",
+                p.pass_id,
+                p.lanes_total(),
+                p.duration
+            );
+        }
+    }
+
+    #[test]
+    fn one_replica_no_faults_is_f64_identical_to_the_single_machine() {
+        let arrivals = poisson(2.0, 24, 64, 16, 42);
+        let slo = f64::INFINITY;
+        let (trace, _, stats, _) =
+            SimMachine::new(small_cfg(70)).run_online_tracked(arrivals.clone(), slo);
+        let rep =
+            Cluster::new(ClusterConfig::new(small_cfg(70), 1)).run_online(arrivals, slo);
+        assert_traces_f64_identical(&rep.traces[0], &trace);
+        assert_eq!(rep.stats.completed, stats.completed);
+        assert_eq!(rep.stats.goodput_rps.to_bits(), stats.goodput_rps.to_bits());
+        assert_eq!(rep.replica_states, vec![ReplicaState::Up]);
+    }
+
+    #[test]
+    fn one_replica_identity_holds_under_slo_shedding_and_preemption() {
+        // Tight cache + deadlines: the weighted victim and SLO admission
+        // paths (preemptions, rejects, expiries) must also be identical.
+        let mut cfg = small_cfg(4);
+        cfg.admission = AdmissionPolicy::slo();
+        cfg.victim = VictimPolicy::Weighted;
+        let slo = 120.0;
+        let arrivals: Vec<(f64, Request)> = poisson(3.0, 30, 96, 24, 5)
+            .into_iter()
+            .map(|(t, r)| (t, r.with_deadline(t + slo)))
+            .collect();
+        let (trace, _, stats, _) =
+            SimMachine::new(cfg.clone()).run_online_tracked(arrivals.clone(), slo);
+        let rep = Cluster::new(ClusterConfig::new(cfg, 1)).run_online(arrivals, slo);
+        assert_traces_f64_identical(&rep.traces[0], &trace);
+        assert_eq!(rep.stats.completed, stats.completed);
+        assert_eq!(rep.stats.rejected, stats.rejected);
+        assert_eq!(rep.stats.expired, stats.expired);
+        assert_eq!(rep.stats.goodput_rps.to_bits(), stats.goodput_rps.to_bits());
+    }
+
+    #[test]
+    fn crash_reroutes_stranded_work_and_conserves_every_request() {
+        let cfg = ClusterConfig::new(small_cfg(70), 2)
+            .with_router(RouterPolicy::RoundRobin)
+            .with_faults(FaultPlan::parse("crash@20:r1").unwrap());
+        let n = 40;
+        let rep = Cluster::new(cfg).run_online(poisson(4.0, n, 64, 32, 7), f64::INFINITY);
+        assert_eq!(rep.replica_states, vec![ReplicaState::Up, ReplicaState::Crashed]);
+        assert!(
+            rep.stats.rerouted + rep.stats.replayed > 0,
+            "a mid-run crash must strand work"
+        );
+        assert!(rep.stats.replayed > 0, "in-flight sequences lose KV and replay");
+        assert_eq!(rep.stats.failed, 0);
+        assert_eq!(
+            rep.stats.completed, n,
+            "without deadlines every request must recover and finish"
+        );
+        // Five-lane partition must survive crash/re-route churn on every
+        // replica (the crashed one's truncated trace included).
+        for trace in &rep.traces {
+            assert_lane_partition(trace);
+        }
+    }
+
+    #[test]
+    fn drain_finishes_in_flight_work_without_losing_anything() {
+        let cfg = ClusterConfig::new(small_cfg(70), 2)
+            .with_router(RouterPolicy::Jsq)
+            .with_faults(FaultPlan::parse("drain@10:r0").unwrap());
+        let n = 30;
+        let rep = Cluster::new(cfg).run_online(poisson(1.0, n, 64, 16, 11), f64::INFINITY);
+        assert_eq!(rep.replica_states, vec![ReplicaState::Draining, ReplicaState::Up]);
+        assert_eq!(rep.stats.completed, n, "a drain loses nothing");
+        assert_eq!(rep.stats.rerouted + rep.stats.replayed + rep.stats.failed, 0);
+        assert!(
+            rep.traces[0].wall_secs() > 10.0,
+            "the draining replica keeps executing its in-flight work"
+        );
+        assert!(
+            rep.admitted[1] > rep.admitted[0],
+            "post-drain arrivals must all land on the surviving replica"
+        );
+    }
+
+    #[test]
+    fn recovery_strictly_beats_no_failover_on_completions() {
+        let arrivals = poisson(4.0, 40, 64, 32, 7);
+        let base = ClusterConfig::new(small_cfg(70), 2)
+            .with_router(RouterPolicy::Deadline)
+            .with_faults(FaultPlan::parse("crash@20:r1").unwrap());
+        let mut nofail = base.clone();
+        nofail.max_retries = 0;
+        let with = Cluster::new(base).run_online(arrivals.clone(), f64::INFINITY);
+        let without = Cluster::new(nofail).run_online(arrivals, f64::INFINITY);
+        assert!(without.stats.failed > 0, "no-failover must lose the casualties");
+        assert_eq!(with.stats.completed, 40);
+        assert!(with.stats.completed > without.stats.completed);
+    }
+
+    #[test]
+    fn slow_fault_steers_deadline_routing_toward_the_healthy_replica() {
+        let cfg = ClusterConfig::new(small_cfg(70), 2)
+            .with_router(RouterPolicy::Deadline)
+            .with_faults(FaultPlan::parse("slow@0+1000000*3:r1").unwrap());
+        let n = 40;
+        let rep = Cluster::new(cfg).run_online(poisson(1.0, n, 64, 16, 13), f64::INFINITY);
+        assert_eq!(rep.stats.completed, n);
+        assert_eq!(rep.stats.failed, 0);
+        assert!(!rep.traces[1].passes.is_empty(), "the slowed replica still serves");
+        assert!(
+            rep.admitted[0] > rep.admitted[1],
+            "backlog-aware routing must favor the healthy replica"
+        );
+        // Scaled lanes must still partition the scaled duration exactly.
+        for trace in &rep.traces {
+            assert_lane_partition(trace);
+        }
+    }
+
+    #[test]
+    fn losing_every_replica_fails_requests_instead_of_losing_them() {
+        let cfg = ClusterConfig::new(small_cfg(70), 1)
+            .with_faults(FaultPlan::parse("crash@5:r0").unwrap());
+        let n = 20;
+        let arrivals = poisson(1.0, n, 64, 16, 17);
+        let rep = Cluster::new(cfg.clone()).run_online(arrivals.clone(), f64::INFINITY);
+        assert_eq!(rep.replica_states, vec![ReplicaState::Crashed]);
+        assert!(rep.stats.failed > 0);
+        assert_eq!(
+            rep.stats.completed + rep.stats.expired,
+            n,
+            "every request either finished before the crash or failed"
+        );
+        assert_eq!(
+            rep.stats.failed, rep.stats.expired,
+            "with no deadlines, the only expiries are recovery failures"
+        );
+        // Determinism: an identical run resolves identically.
+        let again = Cluster::new(cfg).run_online(arrivals, f64::INFINITY);
+        assert_eq!(again.stats.completed, rep.stats.completed);
+        assert_eq!(again.stats.failed, rep.stats.failed);
+        assert_eq!(again.stats.goodput_rps.to_bits(), rep.stats.goodput_rps.to_bits());
+    }
+
+    #[test]
+    fn routing_is_reproducible_and_round_robin_splits_exactly() {
+        let arrivals = poisson(2.0, 10, 64, 8, 23);
+        let rr = ClusterConfig::new(small_cfg(70), 2);
+        let rep = Cluster::new(rr).run_online(arrivals.clone(), f64::INFINITY);
+        assert_eq!(rep.admitted, vec![5, 5], "round-robin alternates exactly");
+
+        let p2c = ClusterConfig::new(small_cfg(70), 3)
+            .with_router(RouterPolicy::P2c { seed: 99 });
+        let a = Cluster::new(p2c.clone()).run_online(arrivals.clone(), f64::INFINITY);
+        let b = Cluster::new(p2c).run_online(arrivals, f64::INFINITY);
+        assert_eq!(a.admitted, b.admitted, "p2c is seed-deterministic");
+        assert_eq!(a.stats.goodput_rps.to_bits(), b.stats.goodput_rps.to_bits());
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod analysis;
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod cpuattn;
 pub mod engine;

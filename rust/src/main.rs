@@ -45,6 +45,15 @@ COMMANDS:
              [--pinned-experts N] [--zipf F] [--routing-seed N]   pin the
               N hottest experts per layer in HBM and stream only cold
               activated experts; routing follows a Zipf(F) trace
+             multi-replica cluster simulation (virtual clock; any cluster
+             flag switches serve onto the simulator, where --model takes
+             simulator specs — default mixtral-8x7b):
+             [--replicas N] [--router rr|jsq|p2c|deadline]
+             [--fault-plan SPEC] [--kv-gb N] [--max-retries N]
+             [--backoff-secs F]   SPEC = comma-separated crash@T:rI |
+              drain@T:rI | slow@T+D*F:rI events, e.g.
+              'crash@20:r1,slow@5+10*2:r0'; crashed replicas' queued and
+              in-flight requests re-route to survivors with capped retry
   plan       print Stage-1/Stage-2 performance-model analysis
              --model <name> --gpu <name> --kv-gb N --p N --g N [--batch K]
              [--host-ms X]   also print the pass-pipeline view: decode
@@ -340,7 +349,75 @@ fn cmd_profile(args: &Args) {
     println!("  n_real          : {} tokens", fit.n_real);
 }
 
+/// Multi-replica serving on the virtual clock: N simulated replicas
+/// behind a router seam, with deterministic fault injection and re-route
+/// recovery. The PJRT engine is a single machine, so the cluster runs on
+/// the paper-scale simulator and `--model` takes simulator specs.
+fn cmd_serve_cluster(args: &Args) -> anyhow::Result<()> {
+    use moe_lens::cluster::{Cluster, ClusterConfig, FaultPlan, RouterPolicy};
+
+    let mut sim = SimConfig::moe_lens(model_arg(args), args.u64_or("kv-gb", 70));
+    let admission_name = args.str_or("admission", "fifo");
+    sim.admission = AdmissionPolicy::parse(admission_name).unwrap_or_else(|| {
+        eprintln!("unknown admission policy '{admission_name}' (fifo|slo)");
+        std::process::exit(2);
+    });
+    let victim_name = args.str_or("victim", "newest");
+    sim.victim = VictimPolicy::parse(victim_name).unwrap_or_else(|| {
+        eprintln!("unknown victim policy '{victim_name}' (newest|weighted)");
+        std::process::exit(2);
+    });
+    let replicas = args.usize_or("replicas", 2);
+    if replicas == 0 {
+        eprintln!("--replicas must be >= 1");
+        std::process::exit(2);
+    }
+    let router_name = args.str_or("router", "rr");
+    let router = RouterPolicy::parse(router_name).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let fault_spec = args.str_or("fault-plan", "none");
+    let faults = FaultPlan::parse(fault_spec).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+
+    let n = args.usize_or("requests", 64);
+    let p = args.usize_or("prompt", 512);
+    let g = args.usize_or("gen", 128);
+    let rate = args.f64_or("arrival-rate", 4.0);
+    let slo = args.f64_or("slo-e2e", f64::INFINITY);
+    let mut arng = moe_lens::util::rng::Rng::new(args.u64_or("arrival-seed", 11));
+    let times = ArrivalProcess::Poisson { rate }.times(n, &mut arng);
+    let reqs = (0..n)
+        .map(|i| moe_lens::model::Request::new(moe_lens::util::cast::usize_u64(i), vec![1; p], g));
+    let arrivals =
+        moe_lens::workload::with_deadlines(times.into_iter().zip(reqs).collect(), slo);
+
+    let mut ccfg = ClusterConfig::new(sim, replicas).with_router(router).with_faults(faults);
+    ccfg.max_retries = args.usize_or("max-retries", ccfg.max_retries);
+    ccfg.backoff_secs = args.f64_or("backoff-secs", ccfg.backoff_secs);
+    println!(
+        "serving {n} online requests (poisson, {rate} req/s, p={p}, g={g}) \
+         across {replicas} simulated replicas (router={router_name}, \
+         fault-plan={fault_spec}, admission={admission_name}, \
+         victim={victim_name})..."
+    );
+    let rep = Cluster::new(ccfg).run_online(arrivals, slo);
+    for (i, (r, state)) in rep.reports.iter().zip(&rep.replica_states).enumerate() {
+        r.print(&format!("replica {i} [{state:?}]"));
+    }
+    rep.stats.print();
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    // Any cluster flag routes serve onto the multi-replica simulator —
+    // the real engine below is inherently one machine.
+    if args.has("replicas") || args.has("router") || args.has("fault-plan") {
+        return cmd_serve_cluster(args);
+    }
     let model = args.str_or("model", "small").to_string();
     let mut cfg = EngineConfig::for_model(&model);
     cfg.block_size = args.usize_or("block-size", cfg.block_size);

@@ -379,6 +379,67 @@ impl RequestTracker {
         self.timings.get(&id)
     }
 
+    /// Ids that neither finished nor were dropped — the cluster's request
+    /// conservation check. After a run every admitted request must be
+    /// resolved one way (finished) or the other (rejected / expired /
+    /// failed); a non-empty result means the recovery machinery silently
+    /// lost work.
+    pub fn unresolved(&self) -> Vec<SeqId> {
+        self.timings
+            .iter()
+            .filter(|(_, r)| r.finish.is_none() && r.dropped.is_none())
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Merge per-replica trackers into one cluster-level view. Replica
+    /// trackers each see a request id at most once (the cluster admits an
+    /// id to one replica at a time; a crash re-route lands it on a
+    /// *different* replica's tracker), so the roll-up is a per-id fold:
+    ///
+    /// * `arrival` — the earliest stamp (the original admission; a
+    ///   re-routed request keeps its true queueing delay);
+    /// * `first_token` / `finish` — earliest stamp anywhere (TTFT is the
+    ///   first token the *user* saw, wherever it was produced);
+    /// * `generated` — summed: a crash replay preserves already-produced
+    ///   tokens in the re-enqueued sequence, so each tracker only counts
+    ///   the tokens its replica actually produced and the sum is the
+    ///   request's total;
+    /// * `dropped` — the latest drop, and cleared entirely if the request
+    ///   finished anywhere (a stale drop stamp on a crashed replica must
+    ///   not shadow a successful recovery).
+    pub fn rollup<'a>(trackers: impl IntoIterator<Item = &'a RequestTracker>) -> RequestTracker {
+        let mut merged: BTreeMap<SeqId, RequestTiming> = BTreeMap::new();
+        for tr in trackers {
+            for (&id, r) in &tr.timings {
+                let Some(m) = merged.get_mut(&id) else {
+                    merged.insert(id, *r);
+                    continue;
+                };
+                m.arrival = m.arrival.min(r.arrival);
+                m.first_token = match (m.first_token, r.first_token) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+                m.finish = match (m.finish, r.finish) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+                m.generated += r.generated;
+                m.dropped = match (m.dropped, r.dropped) {
+                    (Some(a), Some(b)) => Some(if b.0 > a.0 { b } else { a }),
+                    (a, b) => a.or(b),
+                };
+            }
+        }
+        for m in merged.values_mut() {
+            if m.finish.is_some() {
+                m.dropped = None;
+            }
+        }
+        RequestTracker { timings: merged }
+    }
+
     pub fn completed(&self) -> usize {
         self.timings.values().filter(|r| r.finish.is_some()).count()
     }
@@ -418,6 +479,9 @@ impl RequestTracker {
             completed: e2e.len(),
             rejected,
             expired,
+            rerouted: 0,
+            replayed: 0,
+            failed: 0,
             ttft_p50: percentile(&ttft, 0.50),
             ttft_p99: percentile(&ttft, 0.99),
             tpot_p50: percentile(&tpot, 0.50),
@@ -442,6 +506,18 @@ pub struct LatencyStats {
     pub rejected: usize,
     /// Requests dropped mid-flight (deadline slack ran out).
     pub expired: usize,
+    /// Cluster serving only (zero for single-machine runs): queued
+    /// requests moved to another replica after a crash or drain, with no
+    /// work lost.
+    pub rerouted: usize,
+    /// Cluster serving only: in-flight crash casualties re-enqueued
+    /// elsewhere as preemption-style replays (KV lost, context
+    /// re-prefilled).
+    pub replayed: usize,
+    /// Cluster serving only: requests the recovery machinery gave up on
+    /// (retry budget exhausted, or no surviving replica could admit
+    /// them). Also stamped expired on the roll-up tracker.
+    pub failed: usize,
     /// Time-to-first-token percentiles (seconds).
     pub ttft_p50: f64,
     pub ttft_p99: f64,
@@ -464,6 +540,12 @@ impl LatencyStats {
             println!(
                 "  shed (SLO)        : {} rejected, {} expired",
                 self.rejected, self.expired
+            );
+        }
+        if self.rerouted + self.replayed + self.failed > 0 {
+            println!(
+                "  fault recovery    : {} rerouted, {} replayed, {} failed",
+                self.rerouted, self.replayed, self.failed
             );
         }
         println!(
@@ -614,6 +696,58 @@ mod tests {
         assert!((s.goodput_rps - 0.1).abs() < 1e-12);
         assert_eq!(t.timing(1).unwrap().dropped, Some((2.0, DropReason::Rejected)));
         s.print();
+    }
+
+    #[test]
+    fn rollup_merges_replica_trackers() {
+        // Replica A: request 0 arrives at 0, produces 3 tokens (first at
+        // 1.0), then the replica crashes — no finish, no drop.
+        let mut a = RequestTracker::new();
+        a.arrived(0, 0.0);
+        a.token(0, 1.0);
+        a.token(0, 2.0);
+        a.token(0, 3.0);
+        // Request 1 lives and dies on A.
+        a.arrived(1, 0.5);
+        a.dropped(1, 4.0, DropReason::Expired);
+        // Replica B: request 0 re-routed (same arrival stamp, replayed),
+        // produces its remaining 2 tokens and finishes.
+        let mut b = RequestTracker::new();
+        b.arrived(0, 0.0);
+        b.token(0, 7.0);
+        b.token(0, 8.0);
+        b.finished(0, 8.0);
+        // Request 2 is B-only.
+        b.arrived(2, 1.0);
+        b.token(2, 2.0);
+        b.finished(2, 2.0);
+
+        let r = RequestTracker::rollup([&a, &b]);
+        let t0 = r.timing(0).unwrap();
+        assert_eq!(t0.arrival, 0.0);
+        assert_eq!(t0.first_token, Some(1.0), "TTFT is the pre-crash first token");
+        assert_eq!(t0.finish, Some(8.0));
+        assert_eq!(t0.generated, 5, "pre- and post-crash tokens sum");
+        assert_eq!(t0.dropped, None);
+        assert_eq!(r.timing(1).unwrap().dropped, Some((4.0, DropReason::Expired)));
+        assert_eq!(r.completed(), 2);
+        let s = r.stats(10.0, f64::INFINITY);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.expired, 1);
+        // TPOT for request 0 spans the crash gap: (8-1)/4.
+        assert!((s.tpot_p99 - 1.75).abs() < 1e-12);
+
+        // A finish anywhere clears a stale drop stamp from another
+        // replica (recovery must not double-count the casualty).
+        let mut c = RequestTracker::new();
+        c.arrived(1, 0.5);
+        c.token(1, 6.0);
+        c.finished(1, 6.0);
+        let r2 = RequestTracker::rollup([&a, &b, &c]);
+        assert_eq!(r2.timing(1).unwrap().dropped, None);
+        assert_eq!(r2.timing(1).unwrap().finish, Some(6.0));
+        assert_eq!(r2.stats(10.0, f64::INFINITY).expired, 0);
     }
 
     #[test]

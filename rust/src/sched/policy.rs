@@ -163,6 +163,34 @@ impl ServiceModel {
     pub fn replay_cost(&self, seq: &Sequence) -> f64 {
         usize_f64(seq.full_prompt_len()) * self.prefill_secs_per_token
     }
+
+    /// Fraction of a decode iteration the replayed prefill would occupy —
+    /// the CPU-side occupancy proxy the §8.2 memory-controller contention
+    /// model stretches IO by. A replay that fits well inside one weight
+    /// sweep barely contends; a replay as long as the sweep itself
+    /// saturates the controller (capped at 1.0, like
+    /// `simhw::LaneCosts::io_contended`).
+    pub fn replay_occupancy(&self, seq: &Sequence) -> f64 {
+        if self.decode_secs_per_iter <= 0.0 {
+            return 0.0;
+        }
+        (usize_f64(seq.full_prompt_len()) * self.prefill_secs_per_token
+            / self.decode_secs_per_iter)
+            .min(1.0)
+    }
+
+    /// [`Self::replay_cost`] stretched by the §8.2 memory-controller IO
+    /// contention the re-prefill itself induces: the replay's weight
+    /// traffic shares the controller with its own attention reads, so its
+    /// effective cost is `replay_cost × (1 + κ·occupancy)` with the same
+    /// `simhw::CONTENTION_KAPPA` the simulator's pass clock uses. This is
+    /// the price the weighted victim policy and crash-replay re-routing
+    /// charge — an uncontended estimate systematically undercharges long
+    /// contexts and picks them as cheap victims when they are not.
+    pub fn replay_cost_contended(&self, seq: &Sequence) -> f64 {
+        self.replay_cost(seq)
+            * (1.0 + crate::simhw::CONTENTION_KAPPA * self.replay_occupancy(seq))
+    }
 }
 
 /// Online EWMA of *observed* engine pass times → a [`ServiceModel`]
@@ -302,6 +330,37 @@ mod tests {
         }
         assert!((m.predicted_remaining(&seq) - (110.0 * 0.005 + 22.0 * 5.0)).abs() < 1e-9);
         assert!((m.replay_cost(&seq) - 210.0 * 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contended_replay_stretches_long_contexts_superlinearly() {
+        // δ = 5 s over 1000 tokens → 5 ms/token prefill, 5 s/iter decode.
+        let m = ServiceModel::from_costs(5.0, 1000);
+        let short = Sequence::new(Request::new(1, vec![1; 100], 8));
+        let long = Sequence::new(Request::new(2, vec![1; 800], 8));
+        // Occupancy: 100 tokens replay in 0.5 s of a 5 s sweep → 0.1;
+        // 800 tokens → 0.8. Neither caps.
+        assert!((m.replay_occupancy(&short) - 0.1).abs() < 1e-12);
+        assert!((m.replay_occupancy(&long) - 0.8).abs() < 1e-12);
+        // Contended = uncontended × (1 + κ·occupancy).
+        let kappa = crate::simhw::CONTENTION_KAPPA;
+        assert!(
+            (m.replay_cost_contended(&short) - 0.5 * (1.0 + kappa * 0.1)).abs() < 1e-12
+        );
+        assert!(
+            (m.replay_cost_contended(&long) - 4.0 * (1.0 + kappa * 0.8)).abs() < 1e-12
+        );
+        // The stretch is superlinear in context length: the long context
+        // pays a strictly larger *ratio* over its uncontended cost.
+        let r_short = m.replay_cost_contended(&short) / m.replay_cost(&short);
+        let r_long = m.replay_cost_contended(&long) / m.replay_cost(&long);
+        assert!(r_long > r_short);
+        // Occupancy saturates at one full sweep.
+        let huge = Sequence::new(Request::new(3, vec![1; 5000], 8));
+        assert_eq!(m.replay_occupancy(&huge), 1.0);
+        // A zero decode model (instant service) never divides by zero.
+        assert_eq!(ServiceModel::instant().replay_occupancy(&huge), 0.0);
+        assert_eq!(ServiceModel::instant().replay_cost_contended(&huge), 0.0);
     }
 
     #[test]

@@ -351,10 +351,15 @@ impl Scheduler {
                     } else {
                         1.0
                     };
+                    // The replay charge is the *contended* re-prefill
+                    // cost (§8.2: the replay's weight traffic shares the
+                    // memory controller with its own attention reads), so
+                    // long contexts pay a superlinear penalty and are
+                    // protected relative to the uncontended estimate.
                     let score = deadline
                         - now
                         - service.predicted_remaining(seq)
-                        - service.replay_cost(seq) * fill;
+                        - service.replay_cost_contended(seq) * fill;
                     let key = (score, seq.arrival, id);
                     if best_id.is_none() || key > best_key {
                         best_key = key;
@@ -598,6 +603,55 @@ impl Scheduler {
         }
         finished.sort_unstable();
         (finished, placeholders)
+    }
+
+    /// Tear down a replica's live working set after a crash or forced
+    /// shutdown: removes every queued and decoding sequence (queue order
+    /// first, then the decode set in id order), releases their KV blocks,
+    /// and resets started ones to a replayable state via
+    /// [`Sequence::preempt`] — their re-prefill elsewhere is priced
+    /// exactly like a preemption-victim replay. Leaves the scheduler
+    /// drained (`is_done()`), so a degraded shutdown does not trip the
+    /// undrained-scheduler guard in the serving loops. Finished sequences
+    /// and drop counters stay behind; the per-policy preemption counter
+    /// is *not* bumped (a crash is not a scheduling decision).
+    pub fn extract_live(&mut self, kv: &mut PagedLayout) -> Vec<Sequence> {
+        let mut out = Vec::with_capacity(self.queue.len() + self.decoding.len());
+        while let Some(mut seq) = self.queue.pop_front() {
+            if kv.contains(seq.id()) {
+                kv.release(seq.id());
+            }
+            if seq.started() {
+                seq.preempt();
+            }
+            out.push(seq);
+        }
+        while let Some((id, mut seq)) = self.decoding.pop_first() {
+            kv.release(id);
+            seq.preempt();
+            out.push(seq);
+        }
+        out
+    }
+
+    /// Re-enqueue a sequence extracted from another scheduler (crash
+    /// re-route). Joins the back of the prefill queue; a preempted
+    /// sequence keeps its replay state, so admission treats it like a
+    /// local preemption victim (it may re-prefill even in preemption
+    /// mode).
+    pub fn resubmit(&mut self, seq: Sequence) {
+        self.queue.push_back(seq);
+    }
+
+    /// Total predicted seconds of work live in this scheduler (queue +
+    /// decode set) under `service` — the backlog estimate deadline-aware
+    /// cluster routing ranks replicas by.
+    pub fn live_predicted_secs(&self, service: &ServiceModel) -> f64 {
+        self.queue
+            .iter()
+            .chain(self.decoding.values())
+            .map(|s| service.predicted_remaining(s))
+            .sum()
     }
 
     /// Replace a placeholder generated token (see
@@ -952,6 +1006,114 @@ mod tests {
             s.complete(&toks, &mut layout);
         }
         panic!("tight cache must trigger preemption");
+    }
+
+    #[test]
+    fn contended_replay_flips_the_victim_at_equal_slack() {
+        // Two decoding sequences engineered so their *uncontended*
+        // weighted-victim scores tie exactly (all quantities dyadic, so
+        // f64 arithmetic is exact): service from_costs(1.0, 16) gives
+        // prefill 0.0625 s/token; at victim time both have generated one
+        // token, so seq 0 (prompt 4, full context 5) carries replay
+        // penalty 5·0.0625 = 0.3125 and seq 1 (prompt 12, full context
+        // 13) carries 13·0.0625 = 0.8125, both at fill 1.0; the deadlines
+        // differ by exactly the penalty gap (0.5), and remaining work is
+        // identical. Under the old uncontended pricing the scores tie and
+        // the tie-break (largest id) evicts seq 1. The §8.2 contention
+        // stretch is superlinear in context length — occupancy 5/16 vs
+        // 13/16 — so the contended penalties (0.33691… vs 0.97754…) break
+        // the tie the *other* way: the long context is protected and
+        // seq 0 is the victim.
+        let service = ServiceModel::from_costs(1.0, 16);
+        let cfg = SchedConfig::new(100, 100)
+            .with_victim(VictimPolicy::Weighted)
+            .with_service(service);
+        let mut s = Scheduler::new(cfg);
+        let mut layout = kv(4, 4); // 16 slots: exactly the two prompts
+        s.submit(Request::new(0, vec![1; 4], 32).with_deadline(100.0));
+        s.submit(Request::new(1, vec![1; 12], 32).with_deadline(100.5));
+        let p = s.plan(&mut layout);
+        assert_eq!(p.prefill_tokens(), 16);
+        s.complete(&[(0, 5), (1, 5)], &mut layout);
+        // Check the tie really is exact under uncontended pricing, and
+        // really is broken under contended pricing.
+        let (s0, s1) = (s.sequence(0).unwrap(), s.sequence(1).unwrap());
+        let unc0 = 100.0 - service.predicted_remaining(s0) - service.replay_cost(s0);
+        let unc1 = 100.5 - service.predicted_remaining(s1) - service.replay_cost(s1);
+        assert_eq!(unc0.to_bits(), unc1.to_bits(), "uncontended scores must tie exactly");
+        assert!(service.replay_cost_contended(s1) - service.replay_cost(s1)
+            > service.replay_cost_contended(s0) - service.replay_cost(s0));
+        // First decode growth needs one new block per sequence with zero
+        // free: preemption fires immediately.
+        let plan = s.plan(&mut layout);
+        assert_eq!(plan.mode, Some(SchedMode::Preemption));
+        assert_eq!(
+            plan.preempted[0], 0,
+            "contended replay pricing must protect the long context"
+        );
+        layout.check_invariants();
+    }
+
+    #[test]
+    fn extract_live_drains_everything_and_releases_blocks() {
+        let mut s = sched(8, 4);
+        let mut layout = kv(4, 100);
+        s.submit(Request::new(0, vec![1; 4], 8)); // will be decoding
+        s.submit(Request::new(1, vec![1; 10], 8)); // partial prefill
+        s.submit(Request::new(2, vec![1; 4], 8)); // untouched in queue
+        let p = s.plan(&mut layout);
+        assert_eq!(p.prefill_tokens(), 8);
+        s.complete(&[(0, 5)], &mut layout);
+        assert_eq!(s.active_decode(), 1);
+        assert!(layout.used_blocks() > 0);
+
+        let live = s.extract_live(&mut layout);
+        // Queue order first (1 partial, 2 untouched), then the decode set.
+        let ids: Vec<SeqId> = live.iter().map(|q| q.id()).collect();
+        assert_eq!(ids, vec![1, 2, 0]);
+        assert!(s.is_done(), "extraction must leave the scheduler drained");
+        assert_eq!(layout.used_blocks(), 0, "extraction must release all blocks");
+        // Started sequences are reset to replayable state; the untouched
+        // one is not marked preempted (it would spuriously jump admission
+        // gates at the destination).
+        let by_id =
+            |id: SeqId| live.iter().find(|q| q.id() == id).unwrap();
+        assert_eq!(by_id(1).prefilled, 0);
+        assert!(by_id(1).preemptions > 0);
+        assert_eq!(by_id(2).preemptions, 0);
+        assert!(by_id(0).preemptions > 0);
+        assert_eq!(by_id(0).generated, vec![5], "generated tokens survive the crash");
+        assert_eq!(by_id(0).pending_prefill(), 5, "replay covers prompt + generated");
+
+        // A resubmitted sequence finishes normally on another scheduler.
+        let mut dst = sched(64, 64);
+        let mut dst_kv = kv(4, 100);
+        for seq in live {
+            dst.resubmit(seq);
+        }
+        run_all(&mut dst, &mut dst_kv, 9);
+        assert_eq!(dst.finished().len(), 3);
+        let f0 = dst.finished().iter().find(|q| q.id() == 0).unwrap();
+        assert_eq!(f0.generated.len(), 8, "replayed sequence completes its budget");
+        assert_eq!(f0.generated[0], 5, "pre-crash tokens are preserved, not regenerated");
+    }
+
+    #[test]
+    fn live_predicted_secs_sums_queue_and_decode_backlog() {
+        let service = ServiceModel::from_costs(1.0, 10); // 0.1/token, 1.0/iter
+        let mut s = sched(4, 4);
+        let mut layout = kv(4, 100);
+        assert_eq!(s.live_predicted_secs(&service), 0.0);
+        s.submit(Request::new(0, vec![1; 4], 2));
+        s.submit(Request::new(1, vec![1; 4], 3));
+        // Queued: (4·0.1 + 2) + (4·0.1 + 3) = 5.8.
+        assert!((s.live_predicted_secs(&service) - 5.8).abs() < 1e-12);
+        let p = s.plan(&mut layout);
+        assert_eq!(p.prefill_tokens(), 4, "budget admits only the head");
+        s.complete(&[(0, 7)], &mut layout);
+        // Seq 0 decoding (1 generated: 0.1 replay-prefill debt + 1 iter),
+        // seq 1 still queued.
+        assert!((s.live_predicted_secs(&service) - (1.1 + 3.4)).abs() < 1e-12);
     }
 
     #[test]

@@ -143,6 +143,24 @@ pub struct LaneCosts {
     pub io_contended: f64,
 }
 
+impl LaneCosts {
+    /// All four lanes stretched by `k` — the transient-slowdown fault the
+    /// cluster's `FaultPlan` injects at pass boundaries. Scaling every
+    /// lane together preserves the five-lane partition (the exclusive
+    /// decomposition is computed from the scaled lanes, so
+    /// `lanes_total == duration` still holds), and `k = 1.0` is
+    /// bit-identical (IEEE multiplication by 1.0 is exact), so the
+    /// no-fault path reproduces existing traces f64-for-f64.
+    pub fn scaled(self, k: f64) -> LaneCosts {
+        LaneCosts {
+            io: self.io * k,
+            gpu: self.gpu * k,
+            cpu: self.cpu * k,
+            io_contended: self.io_contended * k,
+        }
+    }
+}
+
 /// Cost model shared by the MoE-Lens policy and the baselines.
 pub struct CostModel<'a> {
     pub machine: &'a MachineSpec,
@@ -318,9 +336,203 @@ impl SimMachine {
         (trace, report, stats, tracker)
     }
 
+    /// Start a stepping run: fresh trace, zeroed virtual clock, and the
+    /// pipelining mode resolved from the config. [`serve`](Self::serve)
+    /// drives one of these to completion; the cluster driver interleaves
+    /// N of them, each on its own replica-local clock.
+    pub(crate) fn begin_run(&self) -> PassState {
+        // Double-buffered pass pipelining (mirrors the engine): with
+        // depth ≥ 1 the next pass is planned immediately after the
+        // previous one completes — before newly due arrivals are
+        // submitted, exactly like the engine's speculative commit — and
+        // up to one execution window of its host plan/pack/embed cost
+        // hides under the previous pass. Speculation follows the engine's
+        // rules: FIFO admission only, and an EOS finish the budget could
+        // not predict forces a fully exposed replan.
+        let pipelined = self.cfg.pipeline_depth > 0;
+        let speculate =
+            pipelined && matches!(self.sched.cfg.admission, AdmissionPolicy::Fifo);
+        PassState {
+            trace: Trace::new(self.kv.layout().n_blocks),
+            now: 0.0,
+            pass_id: 0,
+            prepared: None,
+            pipelined,
+            speculate,
+        }
+    }
+
+    /// Whether the machine still has work that consumes virtual time: a
+    /// non-drained scheduler, or a speculatively planned pass waiting to
+    /// execute.
+    pub(crate) fn has_live_work(&self, st: &PassState) -> bool {
+        !self.sched.is_done() || st.prepared.is_some()
+    }
+
+    /// Plan and execute one scheduler pass at the state's virtual clock,
+    /// advancing it and appending a [`PassRecord`]. Returns the pass
+    /// duration, or `None` when planning shed everything (no pass, no
+    /// virtual time — the scheduler is then drained and the caller idles
+    /// to the next arrival or exits). `slowdown` stretches every lane by
+    /// that factor — the cluster's transient-fault injection — and 1.0 is
+    /// bit-identical, so single-machine runs reproduce existing traces.
+    pub(crate) fn step_pass(
+        &mut self,
+        st: &mut PassState,
+        mut tracker: Option<&mut RequestTracker>,
+        slowdown: f64,
+    ) -> Option<f64> {
+        let (plan, host_exposed) = match st.prepared.take() {
+            // Speculatively planned: the hidden share of its host cost
+            // was already booked (as host_overlap_time) on the pass it
+            // ran under; only the exposed tail remains.
+            Some((plan, exposed)) => (plan, exposed),
+            None => {
+                let plan = self.sched.plan_at(&mut self.kv, st.now);
+                // Synchronous (or replanned) pass: the whole host cost
+                // is exposed. Depth 0 with the zero default reproduces
+                // the pre-pipeline trace exactly.
+                let h = self.cfg.host_plan.cost(plan.total_tokens());
+                (plan, h)
+            }
+        };
+        if let Some(tr) = tracker.as_deref_mut() {
+            for &(id, reason) in &plan.dropped {
+                tr.dropped(id, st.now, reason);
+            }
+        }
+        if plan.is_empty() {
+            // Everything queued was shed while planning — nothing to
+            // execute; no pass, no virtual time.
+            return None;
+        }
+        // Context tokens scanned by CPU attention: each decode token
+        // attends over its sequence's full cache.
+        let kv_scanned: u64 =
+            plan.decode.iter().map(|&(id, _)| usize_u64(self.kv.len(id))).sum();
+        // Expert-granular residency shrinks the weight sweep: pinned
+        // experts never cross the link and only activated (or +2
+        // predicted) cold experts stream. Disabled (`None`) takes the
+        // full-model sweep — bit-for-bit the pre-refactor cost.
+        let sweep_bytes = match &self.expert {
+            Some(ex) => {
+                ex.pass_bytes(&plan, &self.cfg.model, st.pipelined && st.pass_id > 0)
+            }
+            None => self.cfg.model.model_bytes(),
+        };
+        let costs = CostModel {
+            machine: &self.cfg.machine,
+            model: &self.cfg.model,
+            cpu_attn_eff: self.cfg.cpu_attn_eff,
+        };
+        let lanes = costs
+            .overlapped_iter_bytes(plan.total_tokens(), kv_scanned, sweep_bytes)
+            .scaled(slowdown);
+        let exec = lanes.io_contended.max(lanes.gpu).max(lanes.cpu);
+        let dur = host_exposed + exec;
+        st.now += dur;
+
+        // All decode rows + completing prefill chunks yield one token.
+        // Token *values* are immaterial to the simulator: requests
+        // carry their effective generation length in `max_gen`.
+        let mut toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 1i32)).collect();
+        toks.extend(plan.prefill.iter().filter(|c| c.completes).map(|c| (c.id, 1i32)));
+        let generated = toks.len();
+        if let Some(tr) = tracker.as_deref_mut() {
+            for &(id, _) in &toks {
+                tr.token(id, st.now);
+            }
+        }
+        // Budget-predictable finishes (what the engine's speculative
+        // planner can foresee before the LM head runs); any extra
+        // actual finish is an EOS surprise that invalidates the
+        // speculation.
+        let predicted_finishes = if st.speculate {
+            toks.iter()
+                .filter(|&&(id, _)| {
+                    self.sched.sequence(id).is_some_and(|s| {
+                        s.generated.len() + 1 >= s.req.max_gen
+                    })
+                })
+                .count()
+        } else {
+            0
+        };
+        let finished = self.sched.complete(&toks, &mut self.kv);
+        let eos_surprise = st.speculate && finished.len() != predicted_finishes;
+        if let Some(tr) = tracker.as_deref_mut() {
+            for &id in &finished {
+                tr.finished(id, st.now);
+            }
+        }
+
+        // Lane accounting mirrors the engine's exclusive decomposition:
+        // `overlap` is the window where GPU GEMMs and CPU attention are
+        // both busy; gpu/cpu report the exclusive remainders (total GPU
+        // busy = gpu_time + overlap_time). The IO lane books only the
+        // *exposed* part of the contended sweep — the tail sticking
+        // out past the compute it overlaps — so the four lanes
+        // partition `dur = max(io, gpu, cpu)` exactly. (The seed
+        // booked the full contended sweep, so `lanes_total()`
+        // exceeded `duration` on every overlapped pass and the
+        // stacked Fig.-13 lane plots over-filled the bar.)
+        let both_busy = lanes.gpu.min(lanes.cpu);
+        let compute = lanes.gpu.max(lanes.cpu);
+        st.trace.push(PassRecord {
+            pass_id: st.pass_id,
+            t_end: st.now,
+            duration: dur,
+            prefill_tokens: plan.prefill_tokens(),
+            decode_tokens: plan.decode_tokens(),
+            generated,
+            finished: finished.len(),
+            preempted: plan.preempted.len(),
+            io_time: (lanes.io_contended - compute).max(0.0),
+            gpu_time: lanes.gpu - both_busy,
+            cpu_time: lanes.cpu - both_busy,
+            overlap_time: both_busy,
+            host_time: host_exposed,
+            // Incremented below if the *next* pass's planning hides
+            // under this pass's execution window.
+            host_overlap_time: 0.0,
+            kv_blocks_used: self.kv.used_blocks(),
+            active_decode: self.sched.active_decode(),
+        });
+        st.pass_id += 1;
+        assert!(st.pass_id < 5_000_000, "simulation runaway");
+
+        // Speculate the next pass under the engine's commit rules:
+        // plan it *now* (arrivals landing during this pass join one
+        // pass later, exactly like the engine), unless an EOS
+        // surprise forces the synchronous replan path. Up to one
+        // execution window of the next plan's host cost hides under
+        // this pass — book that share on *this* record's shadow lane
+        // (the pass whose layer loop hid the work, matching the
+        // engine's attribution and the `host_overlap_time` docs).
+        if st.speculate && !eos_surprise && !self.sched.is_done() {
+            let next = self.sched.plan_at(&mut self.kv, st.now);
+            // Always-on: once per pass, and a shed/empty speculative
+            // plan would silently desync the simulator from the engine.
+            assert!(
+                next.dropped.is_empty() && !next.is_empty(),
+                "FIFO plans never shed, and a live scheduler plans work"
+            );
+            let h = self.cfg.host_plan.cost(next.total_tokens());
+            let hidden = h.min(exec);
+            st.trace.passes.last_mut().expect("pass just pushed").host_overlap_time +=
+                hidden;
+            st.prepared = Some((next, h - hidden));
+        }
+        Some(dur)
+    }
+
     /// The arrival-driven serving loop behind [`run`](Self::run) and
     /// [`run_online`](Self::run_online); latency stamping only happens
-    /// when a tracker is supplied.
+    /// when a tracker is supplied. A thin driver over the stepping
+    /// primitives ([`begin_run`](Self::begin_run) /
+    /// [`step_pass`](Self::step_pass)) the cluster simulator also uses —
+    /// byte-for-byte the same pass arithmetic, so a 1-replica cluster is
+    /// f64-identical to this loop.
     fn serve(
         &mut self,
         mut arrivals: Vec<(f64, Request)>,
@@ -340,190 +552,45 @@ impl SimMachine {
         arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("non-NaN arrival times"));
         let n_req = arrivals.len();
         let mut pending: VecDeque<(f64, Request)> = arrivals.into();
-        let mut trace = Trace::new(self.kv.layout().n_blocks);
-        let costs = CostModel {
-            machine: &self.cfg.machine,
-            model: &self.cfg.model,
-            cpu_attn_eff: self.cfg.cpu_attn_eff,
-        };
-
-        // Double-buffered pass pipelining (mirrors the engine): with
-        // depth ≥ 1 the next pass is planned immediately after the
-        // previous one completes — before newly due arrivals are
-        // submitted, exactly like the engine's speculative commit — and
-        // up to one execution window of its host plan/pack/embed cost
-        // hides under the previous pass. Speculation follows the engine's
-        // rules: FIFO admission only, and an EOS finish the budget could
-        // not predict forces a fully exposed replan.
-        let pipelined = self.cfg.pipeline_depth > 0;
-        let speculate =
-            pipelined && matches!(self.sched.cfg.admission, AdmissionPolicy::Fifo);
-        // (plan, exposed host cost remaining after the hidden share was
-        // attributed to the pass that hid it).
-        let mut prepared: Option<(crate::sched::PassPlan, f64)> = None;
-
-        let mut now = 0.0f64;
-        let mut pass_id = 0usize;
+        let mut st = self.begin_run();
         loop {
-            while pending.front().is_some_and(|(t, _)| *t <= now) {
+            while pending.front().is_some_and(|(t, _)| *t <= st.now) {
                 let (t, r) = pending.pop_front().unwrap();
                 if let Some(tr) = tracker.as_deref_mut() {
                     tr.arrived(r.id, t);
                 }
                 self.sched.submit_at(r, t);
             }
-            if self.sched.is_done() && prepared.is_none() {
+            if !self.has_live_work(&st) {
                 match pending.front() {
                     // Idle: advance the virtual clock to the next arrival.
                     Some(&(t, _)) => {
-                        now = now.max(t);
+                        st.now = st.now.max(t);
                         continue;
                     }
                     None => break,
                 }
             }
-
-            let (plan, host_exposed) = match prepared.take() {
-                // Speculatively planned: the hidden share of its host cost
-                // was already booked (as host_overlap_time) on the pass it
-                // ran under; only the exposed tail remains.
-                Some((plan, exposed)) => (plan, exposed),
-                None => {
-                    let plan = self.sched.plan_at(&mut self.kv, now);
-                    // Synchronous (or replanned) pass: the whole host cost
-                    // is exposed. Depth 0 with the zero default reproduces
-                    // the pre-pipeline trace exactly.
-                    let h = self.cfg.host_plan.cost(plan.total_tokens());
-                    (plan, h)
-                }
-            };
-            if let Some(tr) = tracker.as_deref_mut() {
-                for &(id, reason) in &plan.dropped {
-                    tr.dropped(id, now, reason);
-                }
-            }
-            if plan.is_empty() {
-                // Everything queued was shed while planning — nothing to
-                // execute; no pass, no virtual time. The scheduler is now
-                // drained (an empty plan implies an empty queue), so the
-                // next iteration idles to the next arrival or exits.
-                continue;
-            }
-            // Context tokens scanned by CPU attention: each decode token
-            // attends over its sequence's full cache.
-            let kv_scanned: u64 =
-                plan.decode.iter().map(|&(id, _)| usize_u64(self.kv.len(id))).sum();
-            // Expert-granular residency shrinks the weight sweep: pinned
-            // experts never cross the link and only activated (or +2
-            // predicted) cold experts stream. Disabled (`None`) takes the
-            // full-model sweep — bit-for-bit the pre-refactor cost.
-            let sweep_bytes = match &self.expert {
-                Some(ex) => {
-                    ex.pass_bytes(&plan, &self.cfg.model, pipelined && pass_id > 0)
-                }
-                None => self.cfg.model.model_bytes(),
-            };
-            let lanes =
-                costs.overlapped_iter_bytes(plan.total_tokens(), kv_scanned, sweep_bytes);
-            let exec = lanes.io_contended.max(lanes.gpu).max(lanes.cpu);
-            let dur = host_exposed + exec;
-            now += dur;
-
-            // All decode rows + completing prefill chunks yield one token.
-            // Token *values* are immaterial to the simulator: requests
-            // carry their effective generation length in `max_gen`.
-            let mut toks: Vec<_> = plan.decode.iter().map(|&(id, _)| (id, 1i32)).collect();
-            toks.extend(plan.prefill.iter().filter(|c| c.completes).map(|c| (c.id, 1i32)));
-            let generated = toks.len();
-            if let Some(tr) = tracker.as_deref_mut() {
-                for &(id, _) in &toks {
-                    tr.token(id, now);
-                }
-            }
-            // Budget-predictable finishes (what the engine's speculative
-            // planner can foresee before the LM head runs); any extra
-            // actual finish is an EOS surprise that invalidates the
-            // speculation.
-            let predicted_finishes = if speculate {
-                toks.iter()
-                    .filter(|&&(id, _)| {
-                        self.sched.sequence(id).is_some_and(|s| {
-                            s.generated.len() + 1 >= s.req.max_gen
-                        })
-                    })
-                    .count()
-            } else {
-                0
-            };
-            let finished = self.sched.complete(&toks, &mut self.kv);
-            let eos_surprise = speculate && finished.len() != predicted_finishes;
-            if let Some(tr) = tracker.as_deref_mut() {
-                for &id in &finished {
-                    tr.finished(id, now);
-                }
-            }
-
-            // Lane accounting mirrors the engine's exclusive decomposition:
-            // `overlap` is the window where GPU GEMMs and CPU attention are
-            // both busy; gpu/cpu report the exclusive remainders (total GPU
-            // busy = gpu_time + overlap_time). The IO lane books only the
-            // *exposed* part of the contended sweep — the tail sticking
-            // out past the compute it overlaps — so the four lanes
-            // partition `dur = max(io, gpu, cpu)` exactly. (The seed
-            // booked the full contended sweep, so `lanes_total()`
-            // exceeded `duration` on every overlapped pass and the
-            // stacked Fig.-13 lane plots over-filled the bar.)
-            let both_busy = lanes.gpu.min(lanes.cpu);
-            let compute = lanes.gpu.max(lanes.cpu);
-            trace.push(PassRecord {
-                pass_id,
-                t_end: now,
-                duration: dur,
-                prefill_tokens: plan.prefill_tokens(),
-                decode_tokens: plan.decode_tokens(),
-                generated,
-                finished: finished.len(),
-                preempted: plan.preempted.len(),
-                io_time: (lanes.io_contended - compute).max(0.0),
-                gpu_time: lanes.gpu - both_busy,
-                cpu_time: lanes.cpu - both_busy,
-                overlap_time: both_busy,
-                host_time: host_exposed,
-                // Incremented below if the *next* pass's planning hides
-                // under this pass's execution window.
-                host_overlap_time: 0.0,
-                kv_blocks_used: self.kv.used_blocks(),
-                active_decode: self.sched.active_decode(),
-            });
-            pass_id += 1;
-            assert!(pass_id < 5_000_000, "simulation runaway");
-
-            // Speculate the next pass under the engine's commit rules:
-            // plan it *now* (arrivals landing during this pass join one
-            // pass later, exactly like the engine), unless an EOS
-            // surprise forces the synchronous replan path. Up to one
-            // execution window of the next plan's host cost hides under
-            // this pass — book that share on *this* record's shadow lane
-            // (the pass whose layer loop hid the work, matching the
-            // engine's attribution and the `host_overlap_time` docs).
-            if speculate && !eos_surprise && !self.sched.is_done() {
-                let next = self.sched.plan_at(&mut self.kv, now);
-                // Always-on: once per pass, and a shed/empty speculative
-                // plan would silently desync the simulator from the engine.
-                assert!(
-                    next.dropped.is_empty() && !next.is_empty(),
-                    "FIFO plans never shed, and a live scheduler plans work"
-                );
-                let h = self.cfg.host_plan.cost(next.total_tokens());
-                let hidden = h.min(exec);
-                trace.passes.last_mut().expect("pass just pushed").host_overlap_time +=
-                    hidden;
-                prepared = Some((next, h - hidden));
-            }
+            self.step_pass(&mut st, tracker.as_deref_mut(), 1.0);
         }
-        let report = RunReport::from_trace(&trace, n_req);
-        (trace, report)
+        let report = RunReport::from_trace(&st.trace, n_req);
+        (st.trace, report)
     }
+}
+
+/// Between-pass state of the stepping serving loop
+/// ([`SimMachine::step_pass`]): the virtual clock, the pass counter, the
+/// trace under construction, and the speculatively planned next pass when
+/// pipelining is on.
+pub(crate) struct PassState {
+    pub trace: Trace,
+    pub now: f64,
+    pub pass_id: usize,
+    /// (plan, exposed host cost remaining after the hidden share was
+    /// attributed to the pass that hid it).
+    prepared: Option<(crate::sched::PassPlan, f64)>,
+    pipelined: bool,
+    speculate: bool,
 }
 
 /// Convenience: run the MoE-Lens policy for a uniform (p, g) batch.

@@ -178,6 +178,35 @@ impl WorkloadGen {
     }
 }
 
+/// Partition one arrival stream across `n` replica streams,
+/// deterministically in `seed` — the same split is reproducible across
+/// the engine, the cluster simulator, and the benches. Requests are
+/// assigned in global time order by a seeded uniform draw (a stateless
+/// hash-route: no queue feedback, which is exactly what the cluster
+/// `Router` seam is for), so each stream stays time-sorted and the union
+/// of the streams is the input stream. Panics on non-finite timestamps,
+/// like [`sort_and_rebase`].
+pub fn split_arrivals(
+    arrivals: Vec<(f64, Request)>,
+    n: usize,
+    seed: u64,
+) -> Vec<Vec<(f64, Request)>> {
+    assert!(n >= 1, "cannot split across zero replicas");
+    assert!(
+        arrivals.iter().all(|(t, _)| t.is_finite()),
+        "arrival trace contains a non-finite timestamp"
+    );
+    let mut sorted = arrivals;
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("non-NaN arrival times"));
+    let mut rng = Rng::new(seed ^ 0x5711_7A11);
+    let mut streams: Vec<Vec<(f64, Request)>> = (0..n).map(|_| Vec::new()).collect();
+    for (t, r) in sorted {
+        let slot = usize::try_from(rng.below(n as u64)).expect("replica index fits usize");
+        streams[slot].push((t, r));
+    }
+    streams
+}
+
 /// First duplicated request id in an arrival stream, if any. Online
 /// serving requires unique ids: the per-request latency tracker keys on
 /// them, and a duplicate would silently overwrite the first request's
@@ -348,6 +377,50 @@ mod tests {
     fn trace_arrivals_reject_nan() {
         let g = WorkloadGen::new(&MTBENCH, 32, 2048);
         g.trace_arrivals(&[1.0, f64::NAN], 0, 5);
+    }
+
+    #[test]
+    fn split_arrivals_is_deterministic_and_conserves_the_stream() {
+        let g = WorkloadGen::new(&MTBENCH, 32, 2048);
+        let arrivals = g.arrivals(&ArrivalProcess::Poisson { rate: 20.0 }, 200, 0, 7);
+        let a = split_arrivals(arrivals.clone(), 3, 42);
+        let b = split_arrivals(arrivals.clone(), 3, 42);
+        assert_eq!(a.len(), 3);
+        for (sa, sb) in a.iter().zip(&b) {
+            let ia: Vec<SeqId> = sa.iter().map(|(_, r)| r.id).collect();
+            let ib: Vec<SeqId> = sb.iter().map(|(_, r)| r.id).collect();
+            assert_eq!(ia, ib, "same seed must reproduce the same split");
+        }
+        // A different seed routes differently (with 200 requests over 3
+        // streams, an identical split would be a broken RNG).
+        let c = split_arrivals(arrivals.clone(), 3, 43);
+        assert!(
+            a.iter()
+                .zip(&c)
+                .any(|(sa, sc)| sa.iter().map(|(_, r)| r.id).ne(sc.iter().map(|(_, r)| r.id))),
+            "different seeds must produce different splits"
+        );
+        // Conservation: the union of the streams is the input stream, and
+        // every stream is individually time-sorted.
+        let mut union: Vec<SeqId> = a.iter().flatten().map(|(_, r)| r.id).collect();
+        union.sort_unstable();
+        let mut want: Vec<SeqId> = arrivals.iter().map(|(_, r)| r.id).collect();
+        want.sort_unstable();
+        assert_eq!(union, want);
+        for stream in &a {
+            assert!(stream.windows(2).all(|w| w[0].0 <= w[1].0), "streams stay sorted");
+            assert!(!stream.is_empty(), "200 over 3: every replica gets traffic");
+        }
+        // n = 1 is the identity split (time-sorted).
+        let one = split_arrivals(arrivals.clone(), 1, 42);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len(), arrivals.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite timestamp")]
+    fn split_arrivals_rejects_non_finite_times() {
+        split_arrivals(vec![(f64::INFINITY, Request::new(0, vec![1], 1))], 2, 0);
     }
 
     #[test]

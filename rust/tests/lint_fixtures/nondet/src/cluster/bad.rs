@@ -1,0 +1,27 @@
+//! Fixture: iteration-order hazards in the cluster driver fire — retry
+//! and routing order feed the deterministic replay.
+
+pub struct Retry {
+    pub id: u64,
+    pub due: f64,
+    pub live: bool,
+}
+
+pub fn drain(queue: &mut Vec<Retry>, i: usize) -> Retry {
+    queue.swap_remove(i)
+}
+
+pub fn rank(queue: &mut [Retry]) {
+    queue.sort_unstable_by(|a, b| a.due.total_cmp(&b.due));
+}
+
+pub fn sweep(queue: &mut Vec<Retry>) -> usize {
+    let mut failed = 0usize;
+    queue.retain(|r| {
+        if !r.live {
+            failed += 1;
+        }
+        r.live
+    });
+    failed
+}

@@ -1,0 +1,25 @@
+//! Fixture: order-preserving removal, stable time-keyed sorts with an id
+//! tiebreak, and pure retain predicates are the clean cluster idiom.
+
+pub struct Retry {
+    pub id: u64,
+    pub due: f64,
+    pub live: bool,
+}
+
+pub fn drain(queue: &mut Vec<Retry>, i: usize) -> Retry {
+    queue.remove(i)
+}
+
+pub fn rank(queue: &mut [Retry]) {
+    queue.sort_by(|a, b| {
+        a.due
+            .partial_cmp(&b.due)
+            .expect("finite retry deadlines")
+            .then_with(|| a.id.cmp(&b.id))
+    });
+}
+
+pub fn sweep(queue: &mut Vec<Retry>) {
+    queue.retain(|r| r.live && r.id > 0);
+}

@@ -1,0 +1,9 @@
+//! Fixture: wall-clock reads in the cluster driver must fire — replica
+//! clocks are virtual, and real time would break multi-replica replay.
+use std::time::{Instant, SystemTime};
+
+pub fn stamp_routing_decision() -> (Instant, SystemTime) {
+    let a = Instant::now();
+    let b = SystemTime::now();
+    (a, b)
+}

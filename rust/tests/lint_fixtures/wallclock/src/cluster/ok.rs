@@ -1,0 +1,13 @@
+//! Fixture: replica-local virtual clocks are the clean idiom.
+
+pub struct Replica {
+    pub now: f64,
+}
+
+pub fn advance(r: &mut Replica, pass_secs: f64) {
+    r.now += pass_secs;
+}
+
+pub fn in_string_is_fine() -> &'static str {
+    "Instant::now() mentioned in a string does not fire"
+}

@@ -32,16 +32,23 @@ fn scan_group(group: &str) -> Vec<(String, Rule, String)> {
 #[test]
 fn wallclock_fires_in_sim_modules_and_suppresses() {
     let got = scan_group("wallclock");
-    // bad.rs fires twice; allowed.rs (allow directives) and engine/ok.rs
-    // (out of scope) contribute nothing.
-    assert_eq!(got.len(), 2, "violations: {got:?}");
-    for (file, rule, _) in &got {
-        assert_eq!(file, "src/simhw/bad.rs");
+    // simhw/bad.rs and cluster/bad.rs each fire twice; allowed.rs (allow
+    // directives), cluster/ok.rs (virtual clocks), and engine/ok.rs (out
+    // of scope) contribute nothing.
+    assert_eq!(got.len(), 4, "violations: {got:?}");
+    for scoped in ["src/simhw/bad.rs", "src/cluster/bad.rs"] {
+        let details: Vec<&str> = got
+            .iter()
+            .filter(|(f, _, _)| f == scoped)
+            .map(|(_, _, d)| d.as_str())
+            .collect();
+        assert_eq!(details.len(), 2, "violations in {scoped}: {got:?}");
+        assert!(details.contains(&"Instant::now"), "details: {details:?}");
+        assert!(details.contains(&"SystemTime::now"), "details: {details:?}");
+    }
+    for (_, rule, _) in &got {
         assert_eq!(*rule, Rule::WallClockInSim);
     }
-    let details: Vec<&str> = got.iter().map(|(_, _, d)| d.as_str()).collect();
-    assert!(details.contains(&"Instant::now"), "details: {details:?}");
-    assert!(details.contains(&"SystemTime::now"), "details: {details:?}");
 }
 
 #[test]
@@ -147,22 +154,32 @@ fn atomic_ordering_requires_justification_comment() {
 #[test]
 fn nondet_order_flags_hazards_not_pure_uses() {
     let got = scan_group("nondet");
-    // bad.rs: swap_remove, a float-keyed unstable sort, and a retain
-    // closure with a side effect. ok.rs (order-preserving remove,
-    // int-keyed sorts, pure retain), allowed.rs, testonly.rs, and
-    // model/ contribute nothing.
-    assert_eq!(got.len(), 3, "violations: {got:?}");
-    for (file, rule, _) in &got {
-        assert_eq!(file, "src/sched/bad.rs");
+    // sched/bad.rs and cluster/bad.rs each carry the same three hazards:
+    // swap_remove, a float-keyed unstable sort, and a retain closure
+    // with a side effect. The ok.rs files (order-preserving remove,
+    // int-keyed or stable sorts, pure retain), allowed.rs, testonly.rs,
+    // and model/ contribute nothing.
+    assert_eq!(got.len(), 6, "violations: {got:?}");
+    for scoped in ["src/sched/bad.rs", "src/cluster/bad.rs"] {
+        let details: Vec<&str> = got
+            .iter()
+            .filter(|(f, _, _)| f == scoped)
+            .map(|(_, _, d)| d.as_str())
+            .collect();
+        assert_eq!(details.len(), 3, "violations in {scoped}: {got:?}");
+        assert!(details.contains(&"swap_remove reorders the tail"), "details: {details:?}");
+        assert!(
+            details.contains(&"float-keyed sort_unstable_by is unstable among ties"),
+            "details: {details:?}"
+        );
+        assert!(
+            details.contains(&"retain closure with side effects"),
+            "details: {details:?}"
+        );
+    }
+    for (_, rule, _) in &got {
         assert_eq!(*rule, Rule::NondeterministicOrder);
     }
-    let details: Vec<&str> = got.iter().map(|(_, _, d)| d.as_str()).collect();
-    assert!(details.contains(&"swap_remove reorders the tail"), "details: {details:?}");
-    assert!(
-        details.contains(&"float-keyed sort_unstable_by is unstable among ties"),
-        "details: {details:?}"
-    );
-    assert!(details.contains(&"retain closure with side effects"), "details: {details:?}");
 }
 
 #[test]
